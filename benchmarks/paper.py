@@ -1,0 +1,429 @@
+"""One benchmark per paper table/figure (§5). Each function returns Rows.
+
+Scaled to this CPU container (see common.py docstring); the paper's claims
+are reproduced as RATIOS and scaling SHAPES, with absolute numbers for
+this platform recorded alongside.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.baselines import ContiguousIVF, FlatIndex, HNSWLite, LSHIndex
+from benchmarks.common import (Row, build_sivf, dataset, exact_topk,
+                               recall_at_k, timeit)
+
+D, NL, N = 64, 32, 20_000
+BATCH = 1_000
+
+
+def _sivf_loaded(dim=D, n=N, n_lists=NL, **kw):
+    cfg, state, cents = build_sivf(dim, n_lists, n, **kw)
+    vecs = dataset(dim, n)
+    ids = np.arange(n, dtype=np.int32)
+    for lo in range(0, n, 4096):
+        state = core.insert(cfg, state, jnp.asarray(vecs[lo:lo + 4096]),
+                            jnp.asarray(ids[lo:lo + 4096]))
+    assert int(state.error) == 0
+    return cfg, state, cents, vecs, ids
+
+
+def fig1a_physical_deletion_overhead():
+    """Fig 1(a): insert vs delete latency asymmetry across index types."""
+    rows = []
+    vecs = dataset(D, N)
+    ids = np.arange(N, dtype=np.int32)
+    newv = dataset(D, BATCH, seed=9)
+    new_ids = np.arange(N, N + BATCH).astype(np.int32)
+
+    cfg, state, cents, _, _ = _sivf_loaded()
+    # warm the jitted mutation kernels outside the timed region
+    wid = np.arange(N + BATCH, N + 2 * BATCH).astype(np.int32)
+    state = core.insert(cfg, state, jnp.asarray(dataset(D, BATCH, seed=8)),
+                        jnp.asarray(wid))
+    state = core.delete(cfg, state, jnp.asarray(wid))
+    t_ins, state = timeit(core.insert, cfg, state, jnp.asarray(newv),
+                          jnp.asarray(new_ids), warmup=0, iters=1)
+    t_del, state = timeit(core.delete, cfg, state,
+                          jnp.asarray(ids[:BATCH]), warmup=0, iters=1)
+    rows.append(Row("fig1a.sivf.insert_1k", t_ins,
+                    f"{BATCH / t_ins:.0f} vec/s"))
+    rows.append(Row("fig1a.sivf.delete_1k", t_del,
+                    f"{BATCH / t_del:.0f} vec/s"))
+
+    civf = ContiguousIVF(cents, list_cap=2 * N // NL)
+    civf.insert(vecs, ids)
+    t_ins, _ = timeit(lambda: civf.insert(newv, new_ids), warmup=0, iters=1)
+    t_del, _ = timeit(lambda: civf.delete(ids[:BATCH]), warmup=0, iters=1)
+    rows.append(Row("fig1a.contiguous_ivf.insert_1k", t_ins,
+                    f"{BATCH / t_ins:.0f} vec/s"))
+    rows.append(Row("fig1a.contiguous_ivf.delete_1k", t_del,
+                    f"{BATCH / t_del:.0f} vec/s"))
+
+    flat = FlatIndex(D, 2 * N)
+    flat.insert(vecs, ids)
+    flat.delete(ids[2 * BATCH:3 * BATCH])          # warm
+    t_del, _ = timeit(lambda: flat.delete(ids[BATCH:2 * BATCH]),
+                      warmup=0, iters=1)
+    rows.append(Row("fig1a.flat.delete_1k", t_del,
+                    f"{BATCH / t_del:.0f} vec/s"))
+    return rows
+
+
+def fig1b_tombstone_compaction_trap():
+    """Fig 1(b): compaction pause scales O(N); SIVF eviction is O(1)."""
+    rows = []
+    for n in (5_000, 10_000, 20_000, 40_000):
+        vecs = dataset(D, n)
+        ids = np.arange(n, dtype=np.int32)
+        cfg, state, cents = build_sivf(D, NL, n)
+        for lo in range(0, n, 4096):
+            state = core.insert(cfg, state, jnp.asarray(vecs[lo:lo + 4096]),
+                                jnp.asarray(ids[lo:lo + 4096]))
+        state = core.delete(cfg, state,
+                            jnp.asarray(ids[BATCH:2 * BATCH]))    # warm
+        t_del, _ = timeit(core.delete, cfg, state,
+                          jnp.asarray(ids[:BATCH]), warmup=0, iters=1)
+        # compaction analogue: contiguous re-layout of the whole index
+        civf = ContiguousIVF(cents, list_cap=2 * n // NL)
+        civf.insert(vecs, ids)
+        t_cmp, _ = timeit(lambda: civf.delete(ids[:BATCH]), warmup=0,
+                          iters=1)
+        rows.append(Row(f"fig1b.sivf.delete@N={n}", t_del, "O(1) expected"))
+        rows.append(Row(f"fig1b.compaction@N={n}", t_cmp, "O(N) expected"))
+    return rows
+
+
+def fig2_ingestion_micro():
+    """Fig 2: ingestion throughput vs database size and n_list."""
+    rows = []
+    for n in (10_000, 20_000, 40_000):                    # fig 2a
+        cfg, state, cents = build_sivf(D, NL, n + BATCH)
+        vecs = dataset(D, n)
+        for lo in range(0, n, 4096):
+            chunk = vecs[lo:lo + 4096]
+            state = core.insert(cfg, state, jnp.asarray(chunk),
+                                jnp.asarray(np.arange(lo, lo + len(chunk)),
+                                            jnp.int32))
+        # warm the BATCH-shaped insert before timing
+        state = core.insert(cfg, state, jnp.asarray(dataset(D, BATCH,
+                                                            seed=2)),
+                            jnp.asarray(np.arange(BATCH), jnp.int32))
+        newv = jnp.asarray(dataset(D, BATCH, seed=3))
+        nid = jnp.asarray(np.arange(n, n + BATCH), jnp.int32)
+        t, state = timeit(core.insert, cfg, state, newv, nid, warmup=0,
+                          iters=1)
+        rows.append(Row(f"fig2a.sivf.ingest@N={n}", t,
+                        f"{BATCH / t:.0f} vec/s"))
+    for nl in (8, 32, 128):                               # fig 2b
+        cfg, state, cents = build_sivf(D, nl, N)
+        state = core.insert(cfg, state, jnp.asarray(dataset(D, BATCH,
+                                                            seed=44)),
+                            jnp.asarray(np.arange(BATCH, 2 * BATCH),
+                                        jnp.int32))                 # warm
+        newv = jnp.asarray(dataset(D, BATCH, seed=4))
+        nid = jnp.asarray(np.arange(BATCH), jnp.int32)
+        t, state = timeit(core.insert, cfg, state, newv, nid,
+                          warmup=0, iters=1)
+        rows.append(Row(f"fig2b.sivf.ingest@nlist={nl}", t,
+                        f"{BATCH / t:.0f} vec/s"))
+        # paper scenario: the contiguous baseline must GROW (2x re-layout)
+        cents2 = np.asarray(core.train_kmeans(
+            jax.random.key(0), jnp.asarray(dataset(D, 2048)), nl))
+        civf = ContiguousIVF(cents2, list_cap=max(BATCH // (2 * nl), 4))
+        civf.insert(np.asarray(newv), np.asarray(nid))        # warm jits
+        civf2 = ContiguousIVF(cents2, list_cap=max(BATCH // (2 * nl), 4))
+        t2, _ = timeit(lambda: civf2.insert(np.asarray(newv),
+                                            np.asarray(nid)),
+                       warmup=0, iters=1)
+        rows.append(Row(f"fig2c.contiguous.ingest@nlist={nl}", t2,
+                        f"sivf_speedup={t2 / t:.2f}x "
+                        f"(relayouts={civf2.n_relayouts})"))
+    return rows
+
+
+def fig3_deletion_micro():
+    """Fig 3: delete a batch from a populated index, vs baseline."""
+    cfg, state, cents, vecs, ids = _sivf_loaded()
+    state = core.delete(cfg, state, jnp.asarray(
+        np.arange(N - BATCH, N).astype(np.int32)))   # warm
+    t, state2 = timeit(core.delete, cfg, state, jnp.asarray(ids[:BATCH]),
+                       warmup=0, iters=1)
+    civf = ContiguousIVF(cents, list_cap=2 * N // NL)
+    civf.insert(vecs, ids)
+    t2, _ = timeit(lambda: civf.delete(ids[:BATCH]), warmup=0, iters=1)
+    return [
+        Row("fig3.sivf.delete_batch", t, f"{BATCH / t:.0f} vec/s"),
+        Row("fig3.contiguous.delete_batch", t2,
+            f"speedup={t2 / t:.1f}x (paper: 298x at 1M scale)"),
+    ]
+
+
+def fig4_5_parameter_sensitivity():
+    """Figs 4-5: sweep pool headroom (slab_factor ~ mv/sl) and batch."""
+    rows = []
+    for sl in (1.1, 1.5, 2.0):
+        cfg, state, cents = build_sivf(D, NL, N, slab_factor=sl)
+        state = core.insert(cfg, state, jnp.asarray(dataset(D, BATCH,
+                                                            seed=55)),
+                            jnp.asarray(np.arange(BATCH, 2 * BATCH),
+                                        jnp.int32))                 # warm
+        newv = jnp.asarray(dataset(D, BATCH, seed=5))
+        nid = jnp.asarray(np.arange(BATCH), jnp.int32)
+        t, state = timeit(core.insert, cfg, state, newv, nid, warmup=0,
+                          iters=1)
+        rows.append(Row(f"fig4.insert@slab_factor={sl}", t,
+                        f"{BATCH / t:.0f} vec/s"))
+    for b in (250, 1000, 4000):
+        cfg, state, cents, _, ids = _sivf_loaded()
+        state = core.delete(cfg, state, jnp.asarray(ids[N - b:]))   # warm
+        t, _ = timeit(core.delete, cfg, state, jnp.asarray(ids[:b]),
+                      warmup=0, iters=1)
+        rows.append(Row(f"fig5.delete@batch={b}", t, f"{b / t:.0f} vec/s"))
+    return rows
+
+
+def fig6_7_8_real_datasets():
+    """Figs 6-8: per-dataset ingest/delete/search (deep/sift/t2i/gist-like
+    dims)."""
+    rows = []
+    for name, dim, metric in [("deep", 96, "l2"), ("sift", 128, "l2"),
+                              ("t2i", 200, "ip"), ("gist", 960, "l2")]:
+        n = 8_000
+        cfg, state, cents = build_sivf(dim, NL, n, metric=metric)
+        vecs = dataset(dim, n, seed=11)
+        ids = np.arange(n, dtype=np.int32)
+        t_ing = 0.0
+        for lo in range(0, n, 2000):
+            t, state = timeit(core.insert, cfg, state,
+                              jnp.asarray(vecs[lo:lo + 2000]),
+                              jnp.asarray(ids[lo:lo + 2000]),
+                              warmup=0, iters=1)
+            t_ing += t
+        rows.append(Row(f"fig6.{name}.ingest", t_ing,
+                        f"{n / t_ing:.0f} vec/s"))
+        t_del, state = timeit(core.delete, cfg, state,
+                              jnp.asarray(ids[:BATCH]), warmup=0, iters=1)
+        rows.append(Row(f"fig7.{name}.delete_1k", t_del,
+                        f"{BATCH / t_del:.0f} vec/s"))
+        qs = dataset(dim, 64, seed=12)
+        t_q, _ = timeit(core.search, cfg, state, jnp.asarray(qs), 10, 8,
+                        warmup=1, iters=3)
+        rows.append(Row(f"fig8.{name}.search_qps", t_q,
+                        f"{64 / t_q:.0f} qps"))
+    return rows
+
+
+def fig9_recall_pareto():
+    """Fig 9: QPS vs Recall@10 sweeping nprobe; recall parity at full
+    probe."""
+    rows = []
+    cfg, state, cents, vecs, ids = _sivf_loaded(n=10_000)
+    live = np.ones(10_000, bool)
+    qs = dataset(D, 64, seed=13)
+    true = exact_topk(vecs, qs, 10)
+    for nprobe in (1, 4, 8, 16, NL):
+        t, (d, l) = timeit(core.search, cfg, state, jnp.asarray(qs), 10,
+                           nprobe, warmup=1, iters=3)
+        rec = recall_at_k(np.asarray(l), true)
+        rows.append(Row(f"fig9.sivf@nprobe={nprobe}", t,
+                        f"recall@10={rec:.3f} qps={64 / t:.0f}"))
+    assert "recall@10=1.000" in rows[-1].derived, "full-probe parity"
+    return rows
+
+
+def fig10_zipfian_skew():
+    """Fig 10: ingestion under Zipf-skewed cluster popularity."""
+    rows = []
+    for name, zipf in [("uniform", 0.0), ("zipf1.2", 1.2)]:
+        cfg, state, cents = build_sivf(D, NL, N, slab_factor=2.0)
+        vecs = dataset(D, N, seed=17, zipf=zipf)
+        ids = np.arange(N, dtype=np.int32)
+        t_tot, n_timed = 0.0, 0
+        for lo in range(0, N, 4096):
+            t, state = timeit(core.insert, cfg, state,
+                              jnp.asarray(vecs[lo:lo + 4096]),
+                              jnp.asarray(ids[lo:lo + 4096]), warmup=0,
+                              iters=1)
+            if lo > 0:                      # first chunk pays jit compile
+                t_tot += t
+                n_timed += min(4096, N - lo)
+        assert int(state.error) == 0
+        rows.append(Row(f"fig10.sivf.ingest.{name}", t_tot,
+                        f"{n_timed / t_tot:.0f} vec/s"))
+    return rows
+
+
+def fig11_sliding_window():
+    """Fig 11: end-to-end sliding window — per-step latency, SIVF in-place
+    vs contiguous rebuild."""
+    w, b = 8_000, 1_000
+    cfg, state, cents = build_sivf(D, NL, w + 2 * b)
+    vecs = dataset(D, w)
+    state = core.insert(cfg, state, jnp.asarray(vecs[:4096]),
+                        jnp.asarray(np.arange(4096), jnp.int32))
+    state = core.insert(cfg, state, jnp.asarray(vecs[4096:]),
+                        jnp.asarray(np.arange(4096, w), jnp.int32))
+    next_id = w
+    ts = []
+    for step in range(6):
+        newv = jnp.asarray(dataset(D, b, seed=100 + step))
+        nid = jnp.asarray(np.arange(next_id, next_id + b), jnp.int32)
+        evict = jnp.asarray(np.arange(next_id - w, next_id - w + b),
+                            jnp.int32)
+        t0 = time.perf_counter()
+        state = core.insert(cfg, state, newv, nid)
+        state = core.delete(cfg, state, evict)
+        jax.block_until_ready(state.n_live)
+        ts.append(time.perf_counter() - t0)
+        next_id += b
+    sivf_step = float(np.median(ts[2:]))   # exclude compile steps
+
+    civf = ContiguousIVF(cents, list_cap=2 * w // NL)
+    civf.insert(vecs, np.arange(w, dtype=np.int32))
+    t0 = time.perf_counter()
+    civf.insert(np.asarray(dataset(D, b, seed=200)),
+                np.arange(next_id, next_id + b).astype(np.int32))
+    civf.delete(np.arange(b, dtype=np.int32))
+    jax.block_until_ready(civf.counts)
+    base_step = time.perf_counter() - t0
+    return [
+        Row("fig11.sivf.window_step", sivf_step,
+            f"{(w := base_step / sivf_step):.1f}x faster than rebuild"),
+        Row("fig11.contiguous.window_step", base_step, ""),
+    ]
+
+
+def tab1_tail_latency():
+    """Table 1: deletion latency avg/p99/max over many streaming steps."""
+    rows = []
+    for name, dim in [("sift", 128), ("gist", 960)]:
+        n = 6_000
+        cfg, state, cents = build_sivf(dim, NL, 2 * n, slab_factor=2.0)
+        vecs = dataset(dim, n, seed=21)
+        state = core.insert(cfg, state, jnp.asarray(vecs),
+                            jnp.asarray(np.arange(n), jnp.int32))
+        b = 100
+        next_id = n
+        lats = []
+        for step in range(40):
+            newv = jnp.asarray(dataset(dim, b, seed=300 + step))
+            state = core.insert(cfg, state, newv, jnp.asarray(
+                np.arange(next_id, next_id + b) % cfg.n_max, jnp.int32))
+            evict = jnp.asarray(np.arange(next_id - n, next_id - n + b)
+                                % cfg.n_max, jnp.int32)
+            t0 = time.perf_counter()
+            state = core.delete(cfg, state, evict)
+            jax.block_until_ready(state.n_live)
+            lats.append(time.perf_counter() - t0)
+            next_id += b
+        lats = np.array(lats[5:])
+        rows.append(Row(f"tab1.{name}.delete_avg", float(lats.mean()),
+                        f"p99={np.percentile(lats, 99) * 1e3:.2f}ms "
+                        f"max={lats.max() * 1e3:.2f}ms"))
+    return rows
+
+
+def tab2_mixed_workload():
+    """Table 2: search latency stability under insert->search->delete."""
+    rows = []
+    cfg, state, cents, vecs, ids = _sivf_loaded(n=10_000)
+    qs = jnp.asarray(dataset(D, 16, seed=23))
+    next_id = 10_000
+    lats = []
+    for step in range(25):
+        newv = jnp.asarray(dataset(D, 200, seed=400 + step))
+        state = core.insert(cfg, state, newv, jnp.asarray(
+            np.arange(next_id, next_id + 200) % cfg.n_max, jnp.int32))
+        t0 = time.perf_counter()
+        d, l = core.search(cfg, state, qs, 10, 8)
+        jax.block_until_ready(d)
+        lats.append(time.perf_counter() - t0)
+        state = core.delete(cfg, state, jnp.asarray(
+            np.arange(next_id - 10_000, next_id - 9_800) % cfg.n_max,
+            jnp.int32))
+        next_id += 200
+    lats = np.array(lats[3:])
+    rows.append(Row("tab2.search_avg_under_churn", float(lats.mean()),
+                    f"p99={np.percentile(lats, 99) * 1e3:.2f}ms"))
+    return rows
+
+
+def tab3_time_breakdown():
+    """Table 3 analogue: where update time goes (this platform has no
+    PCIe roundtrip by construction — the paper's 53% transfer + 39% malloc
+    categories are architecturally eliminated; we attribute the remaining
+    in-place update time)."""
+    cfg, state, cents, vecs, ids = _sivf_loaded()
+    newv = jnp.asarray(dataset(D, BATCH, seed=31))
+    nid = jnp.asarray(np.arange(N, N + BATCH), jnp.int32)
+    wid = np.arange(N + BATCH, N + 2 * BATCH).astype(np.int32)  # warm
+    state = core.insert(cfg, state,
+                        jnp.asarray(dataset(D, BATCH, seed=32)),
+                        jnp.asarray(wid))
+    state = core.delete(cfg, state, jnp.asarray(wid))
+    t_assign, lists = timeit(
+        lambda: core.assign(state.centroids, newv), warmup=1, iters=3)
+    t_insert, state = timeit(core.insert, cfg, state, newv, nid,
+                             warmup=0, iters=1)
+    t_delete, state = timeit(core.delete, cfg, state,
+                             jnp.asarray(ids[:BATCH]), warmup=0, iters=1)
+    tot = t_insert + t_delete
+    return [
+        Row("tab3.quantize_frac", t_assign,
+            f"{100 * t_assign / tot:.1f}% of update cycle"),
+        Row("tab3.insert_kernel", t_insert,
+            f"{100 * t_insert / tot:.1f}%"),
+        Row("tab3.delete_kernel", t_delete,
+            f"{100 * t_delete / tot:.1f}%"),
+        Row("tab3.host_transfer", 0.0,
+            "0% (GPU/TPU-resident by construction; paper baseline: 53.2%)"),
+    ]
+
+
+def tab4_non_ivf_indexes():
+    """Table 4: add throughput + delete latency across index families."""
+    rows = []
+    n, b = 5_000, 500
+    vecs = dataset(D, n, seed=41)
+    ids = np.arange(n, dtype=np.int32)
+    newv = dataset(D, b, seed=42)
+    nid = np.arange(n, n + b).astype(np.int32)
+
+    cfg, state, cents = build_sivf(D, NL, n + b)
+    state = core.insert(cfg, state, jnp.asarray(vecs),
+                        jnp.asarray(ids))                 # warm compile
+    state = core.delete(cfg, state, jnp.asarray(ids))     # drain (+warm)
+    t_add, state = timeit(core.insert, cfg, state, jnp.asarray(vecs),
+                          jnp.asarray(ids), warmup=0, iters=1)
+    state = core.delete(cfg, state, jnp.asarray(ids[n - b:]))  # warm shape b
+    t_del, _ = timeit(core.delete, cfg, state, jnp.asarray(ids[:b]),
+                      warmup=0, iters=1)
+    rows.append(Row("tab4.sivf.add", t_add, f"{n / t_add:.0f} vec/s"))
+    rows.append(Row("tab4.sivf.delete", t_del, f"{t_del * 1e3:.2f} ms"))
+
+    flat = FlatIndex(D, 2 * n)
+    t_add, _ = timeit(lambda: flat.insert(vecs, ids), warmup=0, iters=1)
+    t_del, _ = timeit(lambda: flat.delete(ids[:b]), warmup=0, iters=1)
+    rows.append(Row("tab4.flat.add", t_add, f"{n / t_add:.0f} vec/s"))
+    rows.append(Row("tab4.flat.delete", t_del, f"{t_del * 1e3:.2f} ms"))
+
+    lsh = LSHIndex(jax.random.key(2), D, bucket_cap=n)
+    t_add, _ = timeit(lambda: lsh.insert(vecs, ids), warmup=0, iters=1)
+    t_del, _ = timeit(lambda: lsh.delete(ids[:b]), warmup=0, iters=1)
+    rows.append(Row("tab4.lsh.add", t_add, f"{n / t_add:.0f} vec/s"))
+    rows.append(Row("tab4.lsh.delete", t_del, f"{t_del * 1e3:.2f} ms"))
+
+    hn = HNSWLite(D, m=8, ef=24)
+    sub = 800                                     # graph insert is O(N log N) python
+    t_add, _ = timeit(lambda: hn.insert(vecs[:sub], ids[:sub]), warmup=0,
+                      iters=1)
+    t_del, _ = timeit(lambda: hn.delete(ids[:100]), warmup=0, iters=1)
+    rows.append(Row("tab4.hnsw.add", t_add, f"{sub / t_add:.0f} vec/s"))
+    rows.append(Row("tab4.hnsw.delete", t_del,
+                    f"{t_del * 1e3:.2f} ms (full rebuild)"))
+    return rows

@@ -1,0 +1,91 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV and writes
+experiments/bench_results.json. Run: PYTHONPATH=src python -m benchmarks.run
+[--only fig1a,...] [--skip-dist]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+from benchmarks import paper
+from benchmarks.common import Row
+
+ARTIFACTS = [
+    ("fig1a", paper.fig1a_physical_deletion_overhead),
+    ("fig1b", paper.fig1b_tombstone_compaction_trap),
+    ("fig2", paper.fig2_ingestion_micro),
+    ("fig3", paper.fig3_deletion_micro),
+    ("fig4_5", paper.fig4_5_parameter_sensitivity),
+    ("fig6_7_8", paper.fig6_7_8_real_datasets),
+    ("fig9", paper.fig9_recall_pareto),
+    ("fig10", paper.fig10_zipfian_skew),
+    ("fig11", paper.fig11_sliding_window),
+    ("tab1", paper.tab1_tail_latency),
+    ("tab2", paper.tab2_mixed_workload),
+    ("tab3", paper.tab3_time_breakdown),
+    ("tab4", paper.tab4_non_ivf_indexes),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip-dist", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    results = {}
+    for name, fn in ARTIFACTS:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+            for r in rows:
+                print(r.csv(), flush=True)
+            results[name] = [
+                {"name": r.name, "us": r.us, "derived": r.derived}
+                for r in rows]
+        except Exception as e:  # keep the harness going
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
+            results[name] = {"error": traceback.format_exc()[-1500:]}
+        results.setdefault("_timing", {})[name] = round(time.time() - t0, 1)
+
+    if not args.skip_dist and (only is None or "fig13" in only):
+        try:
+            from benchmarks import distributed_bench
+            scale = distributed_bench.run(dim=64)
+            base = scale[0]
+            for row in scale:
+                s = row["shards"]
+                print(f"fig13.scaling@shards={s},0,"
+                      f"ingest={row['ingest_vps']:.0f}vps "
+                      f"search={row['search_qps']:.0f}qps "
+                      f"delete={row['delete_vps']:.0f}vps "
+                      f"ingest_speedup={row['ingest_vps'] / base['ingest_vps']:.2f}x",
+                      flush=True)
+            results["fig13"] = scale
+            # fig14: higher-dim (DINO-like) distributed comparison
+            scale14 = distributed_bench.run(dim=256)
+            for row in scale14:
+                print(f"fig14.dino_like@shards={row['shards']},0,"
+                      f"ingest={row['ingest_vps']:.0f}vps "
+                      f"delete={row['delete_vps']:.0f}vps", flush=True)
+            results["fig14"] = scale14
+        except Exception as e:
+            print(f"fig13.ERROR,0,{type(e).__name__}: {e}", flush=True)
+
+    out = Path("experiments/bench_results.json")
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(results, indent=1))
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end serving driver: batched decode over the slab-paged KV cache
+with sliding-window eviction — the paper's streaming scenario (§5.5)
+applied at the serving layer (DESIGN.md §3).
+
+Run: PYTHONPATH=src python examples/sliding_window_serve.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.sharding.axes import strip
+from repro.sharding.rules import unpadded_plan
+
+cfg = ARCHS["llama3-8b"].reduced()
+plan = unpadded_plan(cfg)
+params = strip(M.init_params(cfg, plan, jax.random.key(0), max_seq=256))
+rng = np.random.default_rng(0)
+
+engine = ServeEngine(cfg, plan, params, page_size=16, n_pages=64,
+                     max_seqs=4, max_pages_per_seq=16)
+
+# admit a batch of requests (prefill writes pages; O(pages) allocation)
+prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+           for n in (24, 40, 12, 32)]
+for i, p in enumerate(prompts):
+    assert engine.admit(i, p), "page pool exhausted"
+print("admitted 4 requests;",
+      f"free pages: {int(engine.pages.free_top)}/64")
+
+# decode in lockstep; slide windows so the cache stays bounded
+t0 = time.perf_counter()
+n_steps = 60
+for step in range(n_steps):
+    toks = engine.step()
+    if step % 20 == 19:
+        for i in range(4):
+            engine.slide(i, keep_last=32)     # O(1) page reclamation
+        print(f"step {step + 1}: window slid; free pages "
+              f"{int(engine.pages.free_top)}/64; last tokens {toks}")
+dt = time.perf_counter() - t0
+print(f"{4 * n_steps} tokens in {dt:.1f}s "
+      f"({4 * n_steps / dt:.1f} tok/s on 1 CPU core)")
+
+# eviction returns every page in O(1) — no compaction, ever
+for i in range(4):
+    engine.evict(i)
+assert int(engine.pages.free_top) == 64
+print("all sequences evicted; pool fully recycled")

@@ -1,0 +1,85 @@
+"""Streaming RAG — the paper's motivating application (§1), end to end.
+
+A document stream is embedded (mean-pooled LM hidden states), ingested
+into SIVF under a sliding window, and queries retrieve fresh context that
+conditions generation through the slab-paged serving engine. Expired
+documents are evicted in O(1) — no index rebuilds, ever.
+
+Run: PYTHONPATH=src python examples/streaming_rag.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.configs import ARCHS
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.sharding.axes import strip
+from repro.sharding.rules import unpadded_plan
+
+rng = np.random.default_rng(0)
+cfg = ARCHS["llama3-8b"].reduced()
+plan = unpadded_plan(cfg)
+params = strip(M.init_params(cfg, plan, jax.random.key(0), max_seq=256))
+D = cfg.d_model
+
+
+def embed_doc(tokens: np.ndarray) -> np.ndarray:
+    """Mean-pooled final hidden state as the document embedding."""
+    batch = {"tokens": jnp.asarray(tokens[None], jnp.int32)}
+    logits, _, _ = M.forward(params, cfg, plan, batch)
+    # cheap proxy embedding: mean logits projected back is overkill; use
+    # the embedding table lookup mean (consistent for queries and docs)
+    emb = params["embed"]["table"][tokens]
+    return np.asarray(jnp.mean(emb, axis=0), np.float32)
+
+
+# -- 1. vector index over the document stream -------------------------------
+N_LISTS = 8
+train = rng.normal(size=(512, D)).astype(np.float32) * 0.02
+cents = core.train_kmeans(jax.random.key(1), jnp.asarray(train), N_LISTS)
+icfg = core.SIVFConfig(dim=D, n_lists=N_LISTS, n_slabs=64, capacity=32,
+                       n_max=4096, max_chain=32)
+index = core.init_state(icfg, cents)
+
+docs: dict[int, np.ndarray] = {}
+WINDOW = 24
+doc_id = 0
+print("streaming documents through the sliding window ...")
+for step in range(6):
+    batch_vecs, batch_ids = [], []
+    for _ in range(8):
+        toks = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+        docs[doc_id] = toks
+        batch_vecs.append(embed_doc(toks))
+        batch_ids.append(doc_id)
+        doc_id += 1
+    index = core.insert(icfg, index, jnp.asarray(np.stack(batch_vecs)),
+                        jnp.asarray(batch_ids, jnp.int32))
+    expired = [i for i in list(docs) if i < doc_id - WINDOW]
+    if expired:
+        index = core.delete(icfg, index, jnp.asarray(expired, jnp.int32))
+        for i in expired:
+            docs.pop(i)
+    print(f"  step {step}: live docs = {int(index.n_live)} "
+          f"(window {WINDOW}), O(1) evictions = {len(expired)}")
+
+# -- 2. retrieve-and-generate -------------------------------------------------
+query_toks = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+q_emb = embed_doc(query_toks)[None]
+_, labels = core.search(icfg, index, jnp.asarray(q_emb), 2, N_LISTS)
+hits = [int(x) for x in np.asarray(labels)[0] if int(x) >= 0]
+print("retrieved docs:", hits)
+assert all(h in docs for h in hits), "retrieval returned an evicted doc!"
+
+prompt = np.concatenate([docs[h] for h in hits] + [query_toks])
+engine = ServeEngine(cfg, plan, params, page_size=16, n_pages=32,
+                     max_seqs=1)
+assert engine.admit(0, prompt)
+out = [int(engine.last_tokens[0, 0])]
+for _ in range(12):
+    engine.step()
+    out.append(int(engine.last_tokens[0, 0]))
+print("generated continuation token ids:", out)
+print("ok: retrieval-augmented generation over a streaming index")

@@ -1,0 +1,35 @@
+"""End-to-end training driver wrapping repro.launch.train.
+
+Defaults fit this single-core CPU container (a ~1M-param llama3-family
+model, 120 steps with checkpointing). The same driver trains the ~100M+
+configuration on real hardware — pass --preset 100m (documented target:
+a few hundred steps on one accelerator host).
+
+Run: PYTHONPATH=src python examples/train_lm.py [--preset 100m]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+PRESETS = {
+    # CPU-container smoke: reduced llama3 family
+    "tiny": ["--arch", "llama3-8b", "--reduced", "--steps", "120",
+             "--batch", "8", "--seq", "64", "--lr", "1e-3",
+             "--ckpt-every", "50"],
+    # ~100M-param target for a single accelerator host (not reduced;
+    # budgeted for a few hundred steps per the assignment)
+    "100m": ["--arch", "llama3-8b", "--steps", "300",
+             "--batch", "8", "--seq", "512", "--lr", "3e-4",
+             "--ckpt-every", "100"],
+}
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args, extra = ap.parse_known_args()
+    argv = PRESETS[args.preset] + ["--ckpt-dir", args.ckpt_dir] + extra
+    result = train_main(argv)
+    if result["last_loss"] >= result["first_loss"]:
+        print("WARNING: loss did not decrease", file=sys.stderr)

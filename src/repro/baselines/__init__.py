@@ -1,0 +1,15 @@
+"""Comparison baselines from the paper's evaluation (§5).
+
+  * ``FlatIndex``       — GPU Flat analogue: brute force, O(N) compaction
+                          on delete (paper Table 4).
+  * ``ContiguousIVF``   — the primary baseline (Faiss GPU IVFFlat
+                          analogue): contiguous per-list buffers with 2x
+                          growth and full re-layout on overflow/delete.
+  * ``LSHIndex``        — hash-bucket baseline (paper Table 4).
+  * ``HNSWLite``        — small graph baseline; deletion requires rebuild,
+                          reproducing the paper's graph-index pathology.
+"""
+from repro.baselines.flat import FlatIndex  # noqa: F401
+from repro.baselines.contiguous_ivf import ContiguousIVF  # noqa: F401
+from repro.baselines.lsh import LSHIndex  # noqa: F401
+from repro.baselines.hnsw_lite import HNSWLite  # noqa: F401

@@ -1,0 +1,129 @@
+"""Contiguous-layout IVF — the paper's primary baseline (Faiss GPU IVFFlat).
+
+Inverted lists are stored in per-list contiguous buffers [n_lists, cap, D].
+This reproduces the two pathologies the paper measures:
+
+  * **Insert** — when any list outgrows its capacity the whole structure is
+    re-laid-out with 2x capacity growth ("dynamic arrays reserve up to 2x
+    capacity to amortize resizing", paper §3.5.3) — the analogue of the
+    cudaMalloc/copy churn in Table 3.
+  * **Delete** — contiguous layouts require O(N) data shifting (paper
+    Fig. 1a): every probed list is compacted with a stable partition, i.e.
+    the memmove the Faiss CPU fallback performs after the PCIe roundtrip.
+
+Search scans probed lists from the padded dense layout (fully coalesced —
+this is why static GPU IVF is fast until you mutate it).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer
+from repro.utils import l2_sq
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _scatter_insert(buf, ids, counts, vecs, new_ids, lists):
+    """Append within per-list capacity; returns overflow flag."""
+    cap = buf.shape[1]
+    order = jnp.argsort(lists, stable=True)
+    sl = lists[order]
+    sv = vecs[order]
+    sid = new_ids[order]
+    start = jnp.searchsorted(sl, sl, side="left")
+    rank = jnp.arange(sl.shape[0]) - start
+    pos = counts[sl] + rank
+    ok = (sid >= 0) & (pos < cap)
+    overflow = jnp.any((sid >= 0) & (pos >= cap))
+    li = jnp.where(ok, sl, buf.shape[0])
+    buf = buf.at[li, pos].set(sv, mode="drop")
+    ids = ids.at[li, pos].set(sid, mode="drop")
+    add = jnp.bincount(jnp.where(ok, sl, buf.shape[0]),
+                       length=buf.shape[0] + 1)[:-1]
+    return buf, ids, counts + add.astype(counts.dtype), overflow
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _compact_lists(buf, ids, counts, del_ids):
+    """O(N) per-list stable compaction (the memmove)."""
+    nl, cap, _ = buf.shape
+    slot = jnp.arange(cap)[None, :]
+    live = (slot < counts[:, None]) & ~jnp.isin(ids, del_ids)
+    dst = jnp.cumsum(live, axis=1) - 1
+    tgt = jnp.where(live, dst, cap)
+    li = jnp.broadcast_to(jnp.arange(nl)[:, None], (nl, cap))
+    buf = jnp.zeros_like(buf).at[li, tgt].set(buf, mode="drop")
+    ids = jnp.full_like(ids, -1).at[li, tgt].set(ids, mode="drop")
+    return buf, ids, jnp.sum(live, axis=1).astype(counts.dtype)
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe", "metric"))
+def _search(centroids, buf, ids, counts, qs, k, nprobe, metric):
+    probes = quantizer.probe(centroids, qs, nprobe, metric)   # [Q, P]
+    x = buf[probes]                                           # [Q, P, cap, D]
+    xi = ids[probes]
+    cnt = counts[probes]
+    if metric == "ip":
+        d = -jnp.einsum("qd,qpcd->qpc", qs, x)
+    else:
+        qq = jnp.sum(qs * qs, -1)[:, None, None]
+        xx = jnp.sum(x * x, -1)
+        d = qq - 2.0 * jnp.einsum("qd,qpcd->qpc", qs, x) + xx
+    slot = jnp.arange(buf.shape[1])[None, None, :]
+    okm = (slot < cnt[..., None]) & (xi >= 0)
+    d = jnp.where(okm, d, jnp.inf)
+    qn = qs.shape[0]
+    d = d.reshape(qn, -1)
+    xi = xi.reshape(qn, -1)
+    nd, idx = jax.lax.top_k(-d, k)
+    return -nd, jnp.take_along_axis(xi, idx, axis=1)
+
+
+class ContiguousIVF:
+    def __init__(self, centroids, list_cap: int = 64, metric: str = "l2"):
+        self.centroids = jnp.asarray(centroids, jnp.float32)
+        self.metric = metric
+        nl, d = self.centroids.shape
+        self.buf = jnp.zeros((nl, list_cap, d), jnp.float32)
+        self.ids = jnp.full((nl, list_cap), -1, jnp.int32)
+        self.counts = jnp.zeros((nl,), jnp.int32)
+        self.n_relayouts = 0
+
+    def _grow(self):
+        """2x capacity re-layout: allocate + full copy (the paper's resizing
+        overhead; counted so benchmarks can report it)."""
+        nl, cap, d = self.buf.shape
+        buf = jnp.zeros((nl, cap * 2, d), jnp.float32).at[:, :cap].set(self.buf)
+        ids = jnp.full((nl, cap * 2), -1, jnp.int32).at[:, :cap].set(self.ids)
+        self.buf, self.ids = buf, ids
+        self.n_relayouts += 1
+
+    def insert(self, vecs, ids):
+        vecs = jnp.asarray(vecs, jnp.float32)
+        ids = jnp.asarray(ids, jnp.int32)
+        lists = quantizer.assign(self.centroids, vecs, self.metric)
+        while True:
+            buf, idb, counts, overflow = _scatter_insert(
+                self.buf, self.ids, self.counts, vecs, ids, lists)
+            if not bool(overflow):
+                self.buf, self.ids, self.counts = buf, idb, counts
+                return
+            # overflow: keep old state (donated buffers were replaced), grow
+            self.buf, self.ids, self.counts = buf, idb, counts
+            self.delete(ids)            # undo partial insert
+            self._grow()
+
+    def delete(self, ids):
+        self.buf, self.ids, self.counts = _compact_lists(
+            self.buf, self.ids, self.counts, jnp.asarray(ids, jnp.int32))
+
+    def search(self, qs, k, nprobe):
+        return _search(self.centroids, self.buf, self.ids, self.counts,
+                       jnp.asarray(qs, jnp.float32), k, nprobe, self.metric)
+
+    @property
+    def n_live(self) -> int:
+        return int(jnp.sum(self.counts))

@@ -1,0 +1,77 @@
+"""Flat (brute-force) baseline — the paper's "GPU Flat".
+
+Storage is one contiguous [cap, D] buffer. Insert appends at a cursor;
+delete performs the O(N) physical compaction that contiguous layouts force
+(paper Fig. 1a / Table 4): every live row is gathered into a fresh dense
+prefix. Search is an exact matmul + top-k.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import l2_sq
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _append(buf, ids, cursor, vecs, new_ids):
+    b = vecs.shape[0]
+    pos = cursor + jnp.arange(b)
+    ok = pos < buf.shape[0]
+    tgt = jnp.where(ok, pos, buf.shape[0])
+    buf = buf.at[tgt].set(vecs, mode="drop")
+    ids = ids.at[tgt].set(new_ids, mode="drop")
+    return buf, ids, cursor + jnp.sum(ok)
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _compact(buf, ids, cursor, del_ids):
+    """O(N) compaction: drop deleted rows, shift live rows down."""
+    n = buf.shape[0]
+    dead = jnp.isin(ids, del_ids) & (jnp.arange(n) < cursor)
+    alive = (~dead) & (jnp.arange(n) < cursor)
+    # stable partition: order of live rows preserved (memmove semantics)
+    dst = jnp.cumsum(alive) - 1
+    tgt = jnp.where(alive, dst, n)
+    buf = jnp.zeros_like(buf).at[tgt].set(buf, mode="drop")
+    ids = jnp.full_like(ids, -1).at[tgt].set(ids, mode="drop")
+    return buf, ids, jnp.sum(alive)
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def _search(buf, ids, cursor, qs, k, metric):
+    if metric == "ip":
+        d = -(qs @ buf.T)
+    else:
+        d = l2_sq(qs, buf)
+    live = (jnp.arange(buf.shape[0]) < cursor) & (ids >= 0)
+    d = jnp.where(live[None, :], d, jnp.inf)
+    nd, idx = jax.lax.top_k(-d, k)
+    return -nd, ids[idx]
+
+
+class FlatIndex:
+    def __init__(self, dim: int, capacity: int, metric: str = "l2"):
+        self.metric = metric
+        self.buf = jnp.zeros((capacity, dim), jnp.float32)
+        self.ids = jnp.full((capacity,), -1, jnp.int32)
+        self.cursor = jnp.array(0, jnp.int32)
+
+    def insert(self, vecs, ids):
+        self.buf, self.ids, self.cursor = _append(
+            self.buf, self.ids, self.cursor, jnp.asarray(vecs, jnp.float32),
+            jnp.asarray(ids, jnp.int32))
+
+    def delete(self, ids):
+        self.buf, self.ids, self.cursor = _compact(
+            self.buf, self.ids, self.cursor, jnp.asarray(ids, jnp.int32))
+
+    def search(self, qs, k):
+        return _search(self.buf, self.ids, self.cursor,
+                       jnp.asarray(qs, jnp.float32), k, self.metric)
+
+    @property
+    def n_live(self) -> int:
+        return int(self.cursor)

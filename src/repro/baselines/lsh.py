@@ -1,0 +1,100 @@
+"""LSH baseline (paper Table 4): sign-random-projection hash tables.
+
+L tables x 2^bits buckets with fixed bucket capacity; insert appends to the
+matching bucket in every table; delete tombstones by id (the legacy-LSH
+behaviour the paper contrasts with: cheap deletes, weak recall).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import l2_sq
+
+
+def _codes(planes, vecs):
+    """planes [L, bits, D]; vecs [B, D] -> bucket ids [B, L]."""
+    s = jnp.einsum("lbd,nd->nlb", planes, vecs) > 0
+    w = (2 ** jnp.arange(planes.shape[1])).astype(jnp.int32)
+    return jnp.sum(s.astype(jnp.int32) * w[None, None, :], axis=-1)
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _insert(bucket_vecs, bucket_ids, cursors, planes, vecs, ids):
+    l, nb, cap, d = bucket_vecs.shape
+    codes = _codes(planes, vecs)                            # [B, L]
+    for li in range(l):                                     # L is small
+        c = codes[:, li]
+        order = jnp.argsort(c, stable=True)
+        cs = c[order]
+        start = jnp.searchsorted(cs, cs, side="left")
+        rank = jnp.arange(cs.shape[0]) - start
+        pos = cursors[li, cs] + rank
+        ok = (ids[order] >= 0) & (pos < cap)
+        tgt = jnp.where(ok, cs, nb)
+        bucket_vecs = bucket_vecs.at[li, tgt, pos].set(vecs[order], mode="drop")
+        bucket_ids = bucket_ids.at[li, tgt, pos].set(ids[order], mode="drop")
+        add = jnp.bincount(jnp.where(ok, cs, nb), length=nb + 1)[:-1]
+        cursors = cursors.at[li].add(add.astype(cursors.dtype))
+    return bucket_vecs, bucket_ids, cursors
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _tombstone(bucket_ids, del_ids):
+    dead = jnp.isin(bucket_ids, del_ids)
+    return jnp.where(dead, -1, bucket_ids)
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def _search(bucket_vecs, bucket_ids, planes, qs, k, metric):
+    l, nb, cap, d = bucket_vecs.shape
+    codes = _codes(planes, qs)                              # [Q, L]
+    xs = bucket_vecs[jnp.arange(l)[None, :], codes]         # [Q, L, cap, D]
+    xi = bucket_ids[jnp.arange(l)[None, :], codes]          # [Q, L, cap]
+    if metric == "ip":
+        dist = -jnp.einsum("qd,qlcd->qlc", qs, xs)
+    else:
+        qq = jnp.sum(qs * qs, -1)[:, None, None]
+        dist = qq - 2 * jnp.einsum("qd,qlcd->qlc", qs, xs) \
+            + jnp.sum(xs * xs, -1)
+    dist = jnp.where(xi >= 0, dist, jnp.inf)
+    qn = qs.shape[0]
+    dist = dist.reshape(qn, -1)
+    xi = xi.reshape(qn, -1)
+    # dedupe across tables: keep first occurrence of each id by masking
+    # later duplicates (sort-by-id trick)
+    order = jnp.argsort(xi, axis=1, stable=True)
+    xis = jnp.take_along_axis(xi, order, 1)
+    ds = jnp.take_along_axis(dist, order, 1)
+    dup = jnp.concatenate(
+        [jnp.zeros((qn, 1), bool), xis[:, 1:] == xis[:, :-1]], axis=1)
+    ds = jnp.where(dup, jnp.inf, ds)
+    nd, idx = jax.lax.top_k(-ds, k)
+    return -nd, jnp.take_along_axis(xis, idx, axis=1)
+
+
+class LSHIndex:
+    def __init__(self, key, dim: int, n_tables: int = 4, bits: int = 8,
+                 bucket_cap: int = 64, metric: str = "l2"):
+        self.metric = metric
+        self.planes = jax.random.normal(key, (n_tables, bits, dim))
+        nb = 2 ** bits
+        self.bucket_vecs = jnp.zeros((n_tables, nb, bucket_cap, dim),
+                                     jnp.float32)
+        self.bucket_ids = jnp.full((n_tables, nb, bucket_cap), -1, jnp.int32)
+        self.cursors = jnp.zeros((n_tables, nb), jnp.int32)
+
+    def insert(self, vecs, ids):
+        self.bucket_vecs, self.bucket_ids, self.cursors = _insert(
+            self.bucket_vecs, self.bucket_ids, self.cursors, self.planes,
+            jnp.asarray(vecs, jnp.float32), jnp.asarray(ids, jnp.int32))
+
+    def delete(self, ids):
+        self.bucket_ids = _tombstone(self.bucket_ids,
+                                     jnp.asarray(ids, jnp.int32))
+
+    def search(self, qs, k):
+        return _search(self.bucket_vecs, self.bucket_ids, self.planes,
+                       jnp.asarray(qs, jnp.float32), k, self.metric)

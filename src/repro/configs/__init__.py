@@ -1,0 +1,61 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    minicpm3_4b, qwen3_14b, phi3_medium_14b, llama3_8b, llava_next_34b,
+    moonshot_v1_16b_a3b, granite_moe_3b_a800m, rwkv6_3b, jamba_v0_1_52b,
+    whisper_base,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        minicpm3_4b.CONFIG,
+        qwen3_14b.CONFIG,
+        phi3_medium_14b.CONFIG,
+        llama3_8b.CONFIG,
+        llava_next_34b.CONFIG,
+        moonshot_v1_16b_a3b.CONFIG,
+        granite_moe_3b_a800m.CONFIG,
+        rwkv6_3b.CONFIG,
+        jamba_v0_1_52b.CONFIG,
+        whisper_base.CONFIG,
+    ]
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """Assigned input shapes (same four for every LM arch)."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def cell_runnable(arch: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch x shape) dry-run cell runnable? (else documented skip).
+
+    ``long_500k`` requires sub-quadratic attention: run for SSM/hybrid,
+    skip for pure full-attention archs (DESIGN.md §5).
+    """
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, "long_500k skipped: pure full-attention arch " \
+                      "(O(S^2) attention; see DESIGN.md §5)"
+    return True, ""

@@ -1,0 +1,22 @@
+"""RWKV6-3B (Finch) — attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892; hf] 32L d_model=2560 d_ff=8960 vocab=65536,
+head_size 64 (40 wkv heads). O(1)-state decode => long_500k runs.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    attention="none",
+    block="rwkv",
+    rwkv_head_size=64,
+    norm="layernorm",
+    subquadratic=True,
+)

@@ -1,0 +1,27 @@
+"""Whisper-base — audio encoder-decoder backbone (conv frontend STUB).
+
+[arXiv:2212.04356; unverified] 6L(enc)+6L(dec) d_model=512 8H d_ff=2048
+vocab=51865. input_specs() provides precomputed frame embeddings (the
+conv1d frontend is a stub per the assignment). Decode shapes exercise the
+decoder's self+cross KV caches; positional tables are sized to the
+assigned shapes (documented stretch beyond the real 448-token decoder).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,            # decoder layers
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    head_dim=64,
+    enc_dec=True,
+    n_enc_layers=6,
+    enc_seq=1500,
+    frontend="audio_stub",
+    mlp_act="gelu",
+    norm="layernorm",
+)

@@ -1,0 +1,21 @@
+"""SIVF core: the paper's contribution as a composable JAX module."""
+from repro.core.state import (  # noqa: F401
+    ERR_CHAIN_OVERFLOW,
+    ERR_ID_RANGE,
+    ERR_POOL_EXHAUSTED,
+    SIVFConfig,
+    SlabPoolState,
+    init_state,
+    memory_report,
+)
+from repro.core.index import (  # noqa: F401
+    delete,
+    gather_tables,
+    insert,
+    scan_slabs_topk,
+    search,
+    stats,
+    walk_chains,
+)
+from repro.core.quantizer import assign, probe, train_kmeans  # noqa: F401
+from repro.core.reference import ReferenceIndex  # noqa: F401

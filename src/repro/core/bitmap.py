@@ -1,0 +1,61 @@
+"""Packed validity bitmaps (paper §3.1).
+
+Each slab carries a C-bit validity bitmap stored as ``C // 32`` uint32
+words. The bitmap is the *single source of truth* for logical membership
+(Theorems 3.1-3.3): a slot (slab, o) holds a live vector iff bit ``o`` is
+set. The paper uses C = 32 (one warp); on TPU we default to C = 128 (one
+lane row), i.e. four words per slab.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def n_words(capacity: int) -> int:
+    if capacity % WORD_BITS != 0:
+        raise ValueError(f"slab capacity {capacity} must be a multiple of {WORD_BITS}")
+    return capacity // WORD_BITS
+
+
+def slot_word_bit(slot: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decompose slot index -> (word index, bit mask)."""
+    word = slot // WORD_BITS
+    bit = jnp.left_shift(jnp.uint32(1), (slot % WORD_BITS).astype(jnp.uint32))
+    return word, bit
+
+
+def get_bits(bitmap: jax.Array, slab: jax.Array, slot: jax.Array) -> jax.Array:
+    """Read validity bits for coordinates. bitmap [n_slabs, W]; returns bool."""
+    word, bit = slot_word_bit(slot)
+    w = bitmap[slab, word]
+    return (w & bit) != 0
+
+
+def unpack(bitmap_row: jax.Array, capacity: int) -> jax.Array:
+    """Unpack one slab's words -> [capacity] bool mask (slot-ordered)."""
+    w = n_words(capacity)
+    words = bitmap_row.reshape(w, 1)                                  # [W,1]
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :]          # [1,32]
+    bits = (jnp.right_shift(words, shifts) & jnp.uint32(1)) != 0      # [W,32]
+    return bits.reshape(capacity)
+
+
+def unpack_batch(bitmap_rows: jax.Array, capacity: int) -> jax.Array:
+    """Unpack [..., W] words -> [..., capacity] bool mask."""
+    w = n_words(capacity)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (jnp.right_shift(bitmap_rows[..., None], shifts) & jnp.uint32(1)) != 0
+    return bits.reshape(*bitmap_rows.shape[:-1], w * WORD_BITS)
+
+
+def popcount_rows(bitmap: jax.Array) -> jax.Array:
+    """Per-slab population count. bitmap [n_slabs, W] -> [n_slabs] int32."""
+    x = bitmap
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return jnp.sum(x.astype(jnp.int32), axis=-1)

@@ -1,0 +1,418 @@
+"""SIVF index operations: batched insert / delete / search (paper §3).
+
+CUDA -> TPU adaptation (DESIGN.md §2): the paper's per-thread lock-free
+protocols (Algorithms 1, 2, 4) become *bulk-synchronous batched plans*:
+
+  insert  — sort-by-list + segmented prefix sums produce a conflict-free
+            (slab, slot) coordinate for every element of the batch, then
+            scatters apply payloads, bitmap bits, ATT entries and chain
+            links in one shot. O(B log B) per batch of B, independent of
+            index size N (the paper's O(1)-per-element claim).
+  delete  — ATT lookup + vectorized bitmap clear (the paper's atomicAnd
+            linearization point becomes the functional state swap), then a
+            bounded sequential pass reclaims slabs that dropped to zero
+            occupancy (unlink + push to free stack; Alg. 4 lines 15-19).
+  search  — coarse probe + slab-chain traversal + validity-masked distance
+            scan + top-k (Alg. 3). Two data paths: the paper-faithful
+            pointer walk over ``nxt``, and the beyond-paper dense
+            list->slab table gather.
+
+All ops are jit-compiled with state donation: the returned state reuses the
+input buffers (XLA in-place), mirroring "in-place mutation in VRAM".
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import quantizer
+from repro.core.state import (
+    ERR_CHAIN_OVERFLOW,
+    ERR_ID_RANGE,
+    ERR_POOL_EXHAUSTED,
+    SIVFConfig,
+    SlabPoolState,
+)
+from repro.utils import ceil_div, exclusive_cumsum
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Insert (paper Alg. 1 Insert / Alg. 2)
+# ---------------------------------------------------------------------------
+
+def _dedupe_keep_last(ext_ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Within-batch duplicate ids: keep only the last occurrence.
+
+    Implements the paper's delete-then-insert overwrite semantics at batch
+    granularity (the batch is one linearization epoch; last write wins).
+    """
+    b = ext_ids.shape[0]
+    key = jnp.where(valid, ext_ids, _I32_MAX)
+    order = jnp.argsort(key, stable=True)        # same ids: ascending position
+    ks = key[order]
+    keep_sorted = jnp.concatenate(
+        [ks[:-1] != ks[1:], jnp.array([True])])   # last of each run
+    keep = jnp.zeros((b,), bool).at[order].set(keep_sorted)
+    return valid & keep
+
+
+def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
+                 ext_ids: jax.Array, lists: jax.Array) -> SlabPoolState:
+    b = vecs.shape[0]
+    c = cfg.capacity
+    ns, nl, nm = cfg.n_slabs, cfg.n_lists, cfg.n_max
+
+    # -- sanitize ids ------------------------------------------------------
+    in_range = (ext_ids >= 0) & (ext_ids < nm)
+    err_range = jnp.any((~in_range) & (ext_ids != -1))
+    valid0 = in_range
+    valid0 = _dedupe_keep_last(ext_ids, valid0)
+
+    # -- delete-then-insert for already-present ids (paper §3 Data Model) --
+    eid0 = jnp.where(valid0, ext_ids, 0)
+    present = valid0 & (state.att_slab[eid0] >= 0)
+    state = _delete_impl(cfg, state, jnp.where(present, ext_ids, -1))
+
+    # -- sort batch by target list; rank within list -----------------------
+    lists_key = jnp.where(valid0, lists.astype(jnp.int32), nl)
+    order = jnp.argsort(lists_key, stable=True)
+    sl = lists_key[order]                                     # [B] sorted
+    sv = vecs[order]
+    sids = ext_ids[order]
+    svalid = sl < nl
+    first_ix = jnp.searchsorted(sl, sl, side="left")
+    rank = (jnp.arange(b) - first_ix).astype(jnp.int32)
+    counts = jnp.bincount(lists_key, length=nl + 1)[:nl].astype(jnp.int32)
+
+    # -- per-list capacity plan (segmented prefix sums) --------------------
+    heads = state.heads
+    cur_l = jnp.where(heads >= 0, state.cursor[jnp.clip(heads, 0)], c)
+    space_l = (c - cur_l).astype(jnp.int32)                   # head free slots
+    overflow_l = jnp.maximum(counts - space_l, 0)
+    n_new_l = ceil_div(overflow_l, c).astype(jnp.int32)       # new slabs/list
+    offs_l = exclusive_cumsum(n_new_l).astype(jnp.int32)
+    total_new = jnp.sum(n_new_l)
+
+    pool_ok = total_new <= state.free_top                     # fail-fast (§3.2)
+    chain_ok = jnp.all(state.table_len + n_new_l <= cfg.max_chain)
+    ok = pool_ok & chain_ok
+
+    # -- per-item coordinates ----------------------------------------------
+    sl_c = jnp.clip(sl, 0, nl - 1)
+    h_item = jnp.where(svalid, heads[sl_c], -1)
+    space_item = space_l[sl_c]
+    in_head = svalid & (rank < space_item) & (h_item >= 0)
+    over = rank - space_item
+    new_ord = jnp.where(svalid & ~in_head, over // c, 0)
+    new_slot = jnp.where(svalid & ~in_head, over % c, 0)
+    alloc_idx = offs_l[sl_c] + new_ord                        # global new-slab ordinal
+    stack_pos = state.free_top - 1 - alloc_idx
+    new_slab_for_item = state.free_stack[jnp.clip(stack_pos, 0, ns - 1)]
+    item_slab = jnp.where(in_head, h_item, new_slab_for_item)
+    item_slot = jnp.where(in_head, c - space_item + rank, new_slot)
+
+    # -- per-new-slab metadata (g = global allocation ordinal) -------------
+    g = jnp.arange(b, dtype=jnp.int32)
+    gmask = g < total_new
+    slab_of_g = state.free_stack[jnp.clip(state.free_top - 1 - g, 0, ns - 1)]
+    slab_prev_g = state.free_stack[jnp.clip(state.free_top - g, 0, ns - 1)]
+    slab_next_g = state.free_stack[jnp.clip(state.free_top - 2 - g, 0, ns - 1)]
+    # ordinal/list of each new slab, scattered from the slot-0 item
+    first_of_slab = svalid & (~in_head) & (new_slot == 0)
+    g_tgt = jnp.where(first_of_slab, alloc_idx, b)
+    list_of_g = jnp.full((b,), 0, jnp.int32).at[g_tgt].set(sl, mode="drop")
+    ord_of_g = jnp.zeros((b,), jnp.int32).at[g_tgt].set(new_ord, mode="drop")
+    # chain links: new slab j links next -> (j==0 ? old head : slab j-1);
+    # the *last* new slab of each list becomes the new head (Alg. 2).
+    nxt_of_g = jnp.where(ord_of_g == 0, heads[jnp.clip(list_of_g, 0, nl - 1)],
+                         slab_prev_g)
+    is_last_of_list = ord_of_g == (n_new_l[jnp.clip(list_of_g, 0, nl - 1)] - 1)
+    prv_of_g = jnp.where(is_last_of_list, -1, slab_next_g)
+
+    def apply(state: SlabPoolState) -> SlabPoolState:
+        drop_g = jnp.where(gmask, slab_of_g, ns)
+        nxt = state.nxt.at[drop_g].set(nxt_of_g, mode="drop")
+        prv = state.prv.at[drop_g].set(prv_of_g, mode="drop")
+        owner = state.owner.at[drop_g].set(list_of_g, mode="drop")
+        cursor = state.cursor.at[drop_g].set(0, mode="drop")
+        live = state.live.at[drop_g].set(0, mode="drop")
+        bitmap = state.bitmap.at[drop_g].set(jnp.uint32(0), mode="drop")
+        # per-list head relink
+        has_new = n_new_l > 0
+        first_new_l = slab_of_g[jnp.clip(offs_l, 0, b - 1)]
+        last_new_l = slab_of_g[jnp.clip(offs_l + n_new_l - 1, 0, b - 1)]
+        old_head_tgt = jnp.where(has_new & (heads >= 0), heads, ns)
+        prv = prv.at[old_head_tgt].set(first_new_l, mode="drop")
+        new_heads = jnp.where(has_new, last_new_l, heads)
+        # dense chain tables (beyond-paper; maintained incrementally)
+        tl_g = state.table_len[jnp.clip(list_of_g, 0, nl - 1)]
+        tab_l = jnp.where(gmask, list_of_g, nl)
+        tables = state.tables.at[tab_l, jnp.clip(tl_g + ord_of_g, 0,
+                                                 cfg.max_chain - 1)
+                                 ].set(slab_of_g, mode="drop")
+        table_pos = state.table_pos.at[drop_g].set(tl_g + ord_of_g, mode="drop")
+        table_len = state.table_len + n_new_l
+        # payload writes + publication (bitmap bits are distinct per word, so
+        # a scatter-add is an OR; see DESIGN.md §2 on the fence analogue)
+        drop_i = jnp.where(svalid, item_slab, ns)
+        data = state.data.at[drop_i, item_slot].set(
+            sv.astype(cfg.dtype), mode="drop")
+        ids = state.ids.at[drop_i, item_slot].set(sids, mode="drop")
+        norms = state.norms.at[drop_i, item_slot].set(
+            jnp.sum(sv.astype(jnp.float32) ** 2, axis=-1), mode="drop")
+        word, bit = bm.slot_word_bit(item_slot)
+        bitmap = bitmap.at[drop_i, word].add(bit, mode="drop")
+        cursor = cursor.at[drop_i].add(1, mode="drop")
+        live = live.at[drop_i].add(1, mode="drop")
+        att_tgt = jnp.where(svalid, sids, nm)
+        att_slab = state.att_slab.at[att_tgt].set(item_slab, mode="drop")
+        att_slot = state.att_slot.at[att_tgt].set(item_slot, mode="drop")
+        return SlabPoolState(
+            data=data, ids=ids, norms=norms, bitmap=bitmap, nxt=nxt, prv=prv,
+            owner=owner, cursor=cursor, live=live, heads=new_heads,
+            free_stack=state.free_stack, free_top=state.free_top - total_new,
+            att_slab=att_slab, att_slot=att_slot,
+            n_live=state.n_live + jnp.sum(svalid),
+            error=state.error | jnp.where(err_range, ERR_ID_RANGE, 0),
+            centroids=state.centroids, tables=tables, table_len=table_len,
+            table_pos=table_pos)
+
+    def fail(state: SlabPoolState) -> SlabPoolState:
+        err = jnp.where(~pool_ok, ERR_POOL_EXHAUSTED, 0) \
+            | jnp.where(~chain_ok, ERR_CHAIN_OVERFLOW, 0) \
+            | jnp.where(err_range, ERR_ID_RANGE, 0)
+        return SlabPoolState(
+            **{f.name: getattr(state, f.name)
+               for f in state.__dataclass_fields__.values()
+               if f.name != "error"},
+            error=state.error | err)
+
+    return jax.lax.cond(ok, apply, fail, state)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def insert(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
+           ext_ids: jax.Array, lists: jax.Array | None = None
+           ) -> SlabPoolState:
+    """Batched ingest. ``vecs`` [B, D], ``ext_ids`` [B] (-1 rows = padding).
+
+    ``lists`` may pre-route vectors (distributed ingestion reuses the
+    router's assignment); otherwise the coarse quantizer assigns.
+    """
+    if lists is None:
+        lists = quantizer.assign(state.centroids, vecs.astype(cfg.dtype),
+                                 cfg.metric)
+    return _insert_impl(cfg, state, vecs, ext_ids, lists)
+
+
+# ---------------------------------------------------------------------------
+# Delete (paper Alg. 1 Delete / Alg. 4)
+# ---------------------------------------------------------------------------
+
+def _delete_impl(cfg: SIVFConfig, state: SlabPoolState, ext_ids: jax.Array
+                 ) -> SlabPoolState:
+    b = ext_ids.shape[0]
+    ns, nl, nm = cfg.n_slabs, cfg.n_lists, cfg.n_max
+
+    valid = (ext_ids >= 0) & (ext_ids < nm)
+    # dedupe (paper: repeated deletes are idempotent, Thm 3.3)
+    key = jnp.where(valid, ext_ids, _I32_MAX)
+    order = jnp.argsort(key, stable=True)
+    ke = key[order]
+    first = jnp.concatenate([jnp.array([True]), ke[1:] != ke[:-1]])
+    act0 = first & (ke != _I32_MAX)
+    ke_c = jnp.where(act0, ke, 0)
+    s = state.att_slab[ke_c]                                  # [B]
+    o = state.att_slot[ke_c]
+    act = act0 & (s >= 0)                                     # live entries only
+
+    # -- logical deletion: clear validity bits (linearization point) -------
+    word, bit = bm.slot_word_bit(o)
+    drop_s = jnp.where(act, s, ns)
+    clear = jnp.zeros_like(state.bitmap).at[drop_s, word].add(bit, mode="drop")
+    bitmap = state.bitmap & ~clear
+    live = state.live.at[drop_s].add(-1, mode="drop")
+    att_slab = state.att_slab.at[jnp.where(act, ke_c, nm)].set(-1, mode="drop")
+    n_live = state.n_live - jnp.sum(act)
+
+    # -- slab-wise reclamation (Alg. 4 lines 15-19) -------------------------
+    # Bounded sequential pass: only slabs that dropped to zero occupancy are
+    # unlinked (doubly-linked chains; DESIGN.md §2) and pushed to the stack.
+    def body(i, carry):
+        (nxt, prv, owner, heads, free_stack, free_top, cursor, live2,
+         tables, table_len, table_pos) = carry
+        si = jnp.clip(s[i], 0)
+        do = act[i] & (live2[si] == 0) & (owner[si] >= 0)
+        li = jnp.clip(owner[si], 0)
+        p, n = prv[si], nxt[si]
+        # unlink
+        heads = heads.at[jnp.where(do & (p < 0), li, nl)].set(n, mode="drop")
+        nxt = nxt.at[jnp.where(do & (p >= 0), jnp.clip(p, 0), ns)].set(
+            n, mode="drop")
+        prv = prv.at[jnp.where(do & (n >= 0), jnp.clip(n, 0), ns)].set(
+            p, mode="drop")
+        # dense-table removal: swap-with-last
+        pos = jnp.clip(table_pos[si], 0)
+        last = jnp.clip(table_len[li] - 1, 0)
+        moved = tables[li, last]
+        li_d = jnp.where(do, li, nl)
+        tables = tables.at[li_d, pos].set(moved, mode="drop")
+        tables = tables.at[li_d, last].set(-1, mode="drop")
+        table_pos = table_pos.at[
+            jnp.where(do & (moved >= 0), jnp.clip(moved, 0), ns)].set(
+            pos, mode="drop")
+        table_pos = table_pos.at[jnp.where(do, si, ns)].set(-1, mode="drop")
+        table_len = table_len.at[li_d].add(-1, mode="drop")
+        # recycle (instant reuse; paper §3.1 "immediate reclamation")
+        free_stack = free_stack.at[jnp.where(do, free_top, ns)].set(
+            si, mode="drop")
+        free_top = free_top + do.astype(jnp.int32)
+        owner = owner.at[jnp.where(do, si, ns)].set(-1, mode="drop")
+        cursor = cursor.at[jnp.where(do, si, ns)].set(0, mode="drop")
+        nxt = nxt.at[jnp.where(do, si, ns)].set(-1, mode="drop")
+        prv = prv.at[jnp.where(do, si, ns)].set(-1, mode="drop")
+        return (nxt, prv, owner, heads, free_stack, free_top, cursor, live2,
+                tables, table_len, table_pos)
+
+    carry = (state.nxt, state.prv, state.owner, state.heads,
+             state.free_stack, state.free_top, state.cursor, live,
+             state.tables, state.table_len, state.table_pos)
+    (nxt, prv, owner, heads, free_stack, free_top, cursor, live, tables,
+     table_len, table_pos) = jax.lax.fori_loop(0, b, body, carry)
+
+    return SlabPoolState(
+        data=state.data, ids=state.ids, norms=state.norms, bitmap=bitmap,
+        nxt=nxt, prv=prv, owner=owner, cursor=cursor, live=live, heads=heads,
+        free_stack=free_stack, free_top=free_top, att_slab=att_slab,
+        att_slot=state.att_slot, n_live=n_live, error=state.error,
+        centroids=state.centroids, tables=tables, table_len=table_len,
+        table_pos=table_pos)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def delete(cfg: SIVFConfig, state: SlabPoolState, ext_ids: jax.Array
+           ) -> SlabPoolState:
+    """Batched lazy eviction. ``ext_ids`` [B]; -1 entries are no-ops."""
+    return _delete_impl(cfg, state, ext_ids)
+
+
+# ---------------------------------------------------------------------------
+# Search (paper Alg. 3)
+# ---------------------------------------------------------------------------
+
+def walk_chains(cfg: SIVFConfig, state: SlabPoolState, lists: jax.Array
+                ) -> jax.Array:
+    """Paper-faithful pointer walk: lists [Q, P] -> slab table [Q, P*T].
+
+    Sequential gathers over ``nxt`` with the Alg. 3 traversal bound and
+    self-loop guard. -1 pads exhausted chains.
+    """
+    s = jnp.where(lists >= 0, state.heads[jnp.clip(lists, 0)], -1)
+
+    def step(s, _):
+        n = jnp.where(s >= 0, state.nxt[jnp.clip(s, 0)], -1)
+        n = jnp.where(n == s, -1, n)        # self-loop guard
+        return n, s
+
+    _, seq = jax.lax.scan(step, s, None, length=cfg.max_chain)  # [T, Q, P]
+    q = lists.shape[0]
+    return jnp.moveaxis(seq, 0, -1).reshape(q, -1)
+
+
+def gather_tables(cfg: SIVFConfig, state: SlabPoolState, lists: jax.Array
+                  ) -> jax.Array:
+    """Beyond-paper dense-table path: one gather, no pointer chasing."""
+    q = lists.shape[0]
+    t = jnp.where(lists[..., None] >= 0,
+                  state.tables[jnp.clip(lists, 0)], -1)       # [Q, P, T]
+    return t.reshape(q, -1)
+
+
+def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
+                    table: jax.Array, k: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Validity-masked distance scan + streaming top-k (XLA path).
+
+    Memory-bounded: scans the slab table column-by-column keeping a running
+    [Q, k] result, the jnp analogue of Alg. 3's per-lane register top-k.
+    The Pallas path (kernels/sivf_scan + kernels/topk) is the TPU analogue.
+    """
+    qn = queries.shape[0]
+    qf = queries.astype(jnp.float32)
+    qq = jnp.sum(qf * qf, axis=-1)                            # [Q]
+
+    def step(carry, slab_col):                                # slab_col [Q]
+        bd, bl = carry
+        sc = jnp.clip(slab_col, 0)
+        x = state.data[sc].astype(jnp.float32)                # [Q, C, D]
+        vb = bm.unpack_batch(state.bitmap[sc], cfg.capacity)  # [Q, C]
+        ok = vb & (slab_col >= 0)[:, None]
+        dot = jnp.einsum("qd,qcd->qc", qf, x)
+        if cfg.metric == "l2":
+            d = qq[:, None] - 2.0 * dot + state.norms[sc]
+        else:
+            d = -dot
+        d = jnp.where(ok, d, jnp.inf)
+        lab = jnp.where(ok, state.ids[sc], -1)
+        alld = jnp.concatenate([bd, d], axis=1)               # [Q, k+C]
+        alll = jnp.concatenate([bl, lab], axis=1)
+        nd, idx = jax.lax.top_k(-alld, k)
+        nl = jnp.take_along_axis(alll, idx, axis=1)
+        return (-nd, nl), None
+
+    init = (jnp.full((qn, k), jnp.inf, jnp.float32),
+            jnp.full((qn, k), -1, jnp.int32))
+    (d, l), _ = jax.lax.scan(step, init, table.T)
+    return d, l
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "nprobe", "use_tables", "impl"))
+def search(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
+           k: int, nprobe: int, use_tables: bool | None = None,
+           impl: str = "xla") -> tuple[jax.Array, jax.Array]:
+    """Top-k search. queries [Q, D] -> (distances [Q, k], labels [Q, k]).
+
+    ``use_tables`` selects the beyond-paper dense-table slab lookup (default
+    from config). ``impl``: "xla" (jnp math, used for CPU + dry-run) or
+    "pallas_interpret" (runs the Pallas kernels in interpret mode).
+    """
+    ut = cfg.track_tables if use_tables is None else use_tables
+    lists = quantizer.probe(state.centroids, queries.astype(cfg.dtype),
+                            nprobe, cfg.metric)
+    table = (gather_tables if ut else walk_chains)(cfg, state, lists)
+    if impl == "xla":
+        return scan_slabs_topk(cfg, state, queries, table, k)
+    elif impl == "pallas_interpret":
+        from repro.kernels.sivf_scan import ops as scan_ops
+        from repro.kernels.topk import ops as topk_ops
+        dists, labels = scan_ops.sivf_scan(
+            queries.astype(jnp.float32), table, state.data, state.ids,
+            state.norms, state.bitmap, metric=cfg.metric, interpret=True)
+        return topk_ops.topk(dists, labels, k, interpret=True)
+    raise ValueError(f"unknown impl {impl}")
+
+
+# ---------------------------------------------------------------------------
+# Introspection
+# ---------------------------------------------------------------------------
+
+def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
+    """Occupancy / fragmentation report (paper §5.6.2)."""
+    used = int(cfg.n_slabs - state.free_top)
+    live = int(state.n_live)
+    alloc_slots = used * cfg.capacity
+    return {
+        "n_live": live,
+        "slabs_used": used,
+        "free_slabs": int(state.free_top),
+        "alloc_slots": alloc_slots,
+        "fill_frac": live / max(alloc_slots, 1),
+        "error": int(state.error),
+        "max_chain_len": int(jnp.max(state.table_len)),
+        "mean_chain_len": float(jnp.mean(state.table_len)),
+    }

@@ -1,0 +1,151 @@
+"""SIVF slab-pool state (paper §3.1, SDMA).
+
+The CUDA design keeps all of this in VRAM behind a ``SlabManager``; the JAX
+port keeps it as one pytree of preallocated dense arrays. Mutation kernels
+(`index.py`) are jitted with buffer donation so updates are in-place at the
+XLA level, and the *state swap* is the linearization point (DESIGN.md §2).
+
+Divergences from the paper (deliberate, documented in DESIGN.md §2):
+  * doubly-linked chains (``nxt`` + ``prv``) so batched reclamation unlinks
+    slabs exactly instead of leaving freed slabs spliced into old chains;
+  * separate ``cursor`` (allocation watermark) and ``live`` (occupancy)
+    counters, fixing the reuse-overwrites-live-slot hazard of using
+    ``valid_count`` for both;
+  * the 64-bit packed ATT entry ``(slab << 32) | slot`` is stored as two
+    int32 planes (same 8 B/entry the paper reports in §3.5.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+
+@dataclasses.dataclass(frozen=True)
+class SIVFConfig:
+    """Static configuration (hashable; safe to close over in jit)."""
+
+    dim: int                       # vector dimensionality D
+    n_lists: int                   # number of IVF lists (coarse centroids)
+    n_slabs: int                   # slab pool size (pre-allocated)
+    capacity: int = 128            # C: slots per slab (TPU lane width; paper uses 32)
+    n_max: int = 1 << 20           # dense external-id space [0, n_max)
+    metric: str = "l2"             # "l2" or "ip"
+    max_chain: int = 64            # bound on slabs walked per list (Alg. 3 traversal bound)
+    track_tables: bool = True      # beyond-paper: dense list->slab tables (DESIGN.md §2)
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        bm.n_words(self.capacity)  # validates capacity
+        if self.metric not in ("l2", "ip"):
+            raise ValueError(f"unknown metric {self.metric}")
+
+    @property
+    def words(self) -> int:
+        return bm.n_words(self.capacity)
+
+    @property
+    def pool_vectors(self) -> int:
+        return self.n_slabs * self.capacity
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "data", "ids", "norms", "bitmap", "nxt", "prv", "owner", "cursor",
+        "live", "heads", "free_stack", "free_top", "att_slab", "att_slot",
+        "n_live", "error", "centroids", "tables", "table_len", "table_pos",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class SlabPoolState:
+    """Device-resident SIVF index state. All shapes static."""
+
+    # slab payloads + per-slot metadata
+    data: jax.Array        # [n_slabs, C, D] vector payloads
+    ids: jax.Array         # [n_slabs, C] int32 external ids
+    norms: jax.Array       # [n_slabs, C] f32 cached ||x||^2 (beyond-paper)
+    # slab headers M = <next, b_valid, cnt> (paper §3.1) + divergence fields
+    bitmap: jax.Array      # [n_slabs, W] uint32 validity bitmaps
+    nxt: jax.Array         # [n_slabs] int32 next-slab pointer (-1 = end)
+    prv: jax.Array         # [n_slabs] int32 prev-slab pointer (-1 = head)
+    owner: jax.Array       # [n_slabs] int32 owning list id (-1 = free)
+    cursor: jax.Array      # [n_slabs] int32 allocation watermark in [0, C]
+    live: jax.Array        # [n_slabs] int32 live-slot count
+    # per-list heads H[l] (paper §3.1)
+    heads: jax.Array       # [n_lists] int32 head slab id (-1 = empty list)
+    # global free stack P_top (paper Alg. 1)
+    free_stack: jax.Array  # [n_slabs] int32
+    free_top: jax.Array    # [] int32: number of free slabs
+    # address translation table T (paper §3.4), two int32 planes
+    att_slab: jax.Array    # [n_max] int32 (-1 = INVALID)
+    att_slot: jax.Array    # [n_max] int32
+    # counters / error flags
+    n_live: jax.Array      # [] int32 total live vectors
+    error: jax.Array       # [] int32 sticky error bits (1 = pool exhausted)
+    # coarse quantizer centroids
+    centroids: jax.Array   # [n_lists, D]
+    # beyond-paper dense chain tables (track_tables):
+    tables: jax.Array      # [n_lists, max_chain] int32 slab ids (-1 pad)
+    table_len: jax.Array   # [n_lists] int32 chain length
+    table_pos: jax.Array   # [n_slabs] int32 position of slab in its table
+
+
+ERR_POOL_EXHAUSTED = 1
+ERR_ID_RANGE = 2
+ERR_CHAIN_OVERFLOW = 4
+
+
+def init_state(cfg: SIVFConfig, centroids: jax.Array) -> SlabPoolState:
+    """Fresh empty pool. ``centroids`` [n_lists, D] from the coarse quantizer."""
+    if centroids.shape != (cfg.n_lists, cfg.dim):
+        raise ValueError(
+            f"centroids shape {centroids.shape} != {(cfg.n_lists, cfg.dim)}")
+    ns, c, d, w = cfg.n_slabs, cfg.capacity, cfg.dim, cfg.words
+    return SlabPoolState(
+        data=jnp.zeros((ns, c, d), cfg.dtype),
+        ids=jnp.full((ns, c), -1, jnp.int32),
+        norms=jnp.zeros((ns, c), jnp.float32),
+        bitmap=jnp.zeros((ns, w), jnp.uint32),
+        nxt=jnp.full((ns,), -1, jnp.int32),
+        prv=jnp.full((ns,), -1, jnp.int32),
+        owner=jnp.full((ns,), -1, jnp.int32),
+        cursor=jnp.zeros((ns,), jnp.int32),
+        live=jnp.zeros((ns,), jnp.int32),
+        heads=jnp.full((cfg.n_lists,), -1, jnp.int32),
+        free_stack=jnp.arange(ns, dtype=jnp.int32),
+        free_top=jnp.array(ns, jnp.int32),
+        att_slab=jnp.full((cfg.n_max,), -1, jnp.int32),
+        att_slot=jnp.zeros((cfg.n_max,), jnp.int32),
+        n_live=jnp.array(0, jnp.int32),
+        error=jnp.array(0, jnp.int32),
+        centroids=centroids.astype(cfg.dtype),
+        tables=jnp.full((cfg.n_lists, cfg.max_chain), -1, jnp.int32),
+        table_len=jnp.zeros((cfg.n_lists,), jnp.int32),
+        table_pos=jnp.full((ns,), -1, jnp.int32),
+    )
+
+
+def memory_report(cfg: SIVFConfig) -> dict:
+    """Structural-overhead accounting mirroring paper §5.6.2 / Fig. 12."""
+    payload = cfg.n_slabs * cfg.capacity * cfg.dim * jnp.dtype(cfg.dtype).itemsize
+    ids = cfg.n_slabs * cfg.capacity * 4
+    norms = cfg.n_slabs * cfg.capacity * 4
+    headers = cfg.n_slabs * (cfg.words * 4 + 4 * 6)  # bitmap + 6 int32 fields
+    att = cfg.n_max * 8
+    heads = cfg.n_lists * 4
+    stack = cfg.n_slabs * 4
+    tables = (cfg.n_lists * cfg.max_chain + cfg.n_lists + cfg.n_slabs) * 4 \
+        if cfg.track_tables else 0
+    total = payload + ids + norms + headers + att + heads + stack + tables
+    return {
+        "payload_bytes": int(payload),
+        "metadata_bytes": int(total - payload),
+        "total_bytes": int(total),
+        "overhead_frac_vs_payload": float((total - payload) / payload),
+    }

@@ -1,0 +1,111 @@
+"""Flash attention — Pallas TPU kernel (online-softmax tiling, GQA).
+
+Grid (B*Hq, Sq/bq, Sk/bk); the kv dimension is innermost so the VMEM
+scratch (acc, m, l) carries the online softmax across kv tiles, and the
+output tile is written once on the final kv step. BlockSpecs keep one
+(q-tile, kv-tile) working set in VMEM; MXU dims are the (bq, dh) x (dh, bk)
+score matmul and the (bq, bk) x (bk, dh) value matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, causal: bool, bq: int, bk: int,
+            sq: int, sk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: skip kv tiles strictly above the diagonal band
+    qpos_hi = qi * bq + bq - 1 + (sk - sq)
+    run = (not causal) or (ki * bk <= qpos_hi)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                     # [bq, dh]
+        k = k_ref[0].astype(jnp.float32)                     # [bk, dh]
+        v = v_ref[0].astype(jnp.float32)                     # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+                + qi * bq + (sk - sq)
+            kpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + ki * bk
+            s = jnp.where(qpos >= kpos, s, _NEG_INF)
+        m_prev = m_ref[...]                                  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                               # [bq, bk]
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        l = l_ref[...]
+        o_ref[0] = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30),
+                             0.0).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q [B,Hq,Sq,dh]; k,v [B,Hkv,Sk,dh] -> [B,Hq,Sq,dh]."""
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+
+    grid = (b * hq, sq // bq, sk // bk)
+
+    def q_ix(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_ix(bh, qi, ki):
+        return ((bh // hq) * hkv + (bh % hq) // g, ki, 0)
+
+    qr = q.reshape(b * hq, sq, dh)
+    kr = k.reshape(b * hkv, sk, dh)
+    vr = v.reshape(b * hkv, sk, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          sq=sq, sk=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_ix),
+            pl.BlockSpec((1, bk, dh), kv_ix),
+            pl.BlockSpec((1, bk, dh), kv_ix),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_ix),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, dh)

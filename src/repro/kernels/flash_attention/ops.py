@@ -1,0 +1,21 @@
+"""Jitted public wrapper for flash attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "scale", "interpret", "impl",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                    interpret: bool = False, impl: str = "pallas",
+                    block_q: int = 128, block_k: int = 128):
+    if impl == "ref":
+        return mha_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

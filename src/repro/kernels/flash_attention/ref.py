@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q [B,Hq,Sq,dh]; k,v [B,Hkv,Sk,dh] -> [B,Hq,Sq,dh].
+
+    GQA: q head h attends to kv head h // (Hq // Hkv). Causal masking uses
+    the ends-aligned convention (q position i maps to absolute position
+    i + Sk - Sq), which covers both prefill (Sq == Sk) and chunked decode.
+    """
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vq.astype(jnp.float32)).astype(q.dtype)

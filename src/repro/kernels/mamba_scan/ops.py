@@ -1,0 +1,18 @@
+"""Jitted public wrapper for the Mamba selective scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@partial(jax.jit, static_argnames=("interpret", "impl", "block_d"))
+def mamba_scan(u, delta, a, b, c, d, interpret: bool = False,
+               impl: str = "pallas", block_d: int = 128):
+    if impl == "ref":
+        return mamba_scan_ref(u, delta, a, b, c, d)
+    return mamba_scan_pallas(u, delta, a, b, c, d, block_d=block_d,
+                             interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Mamba (S6) selective state-space scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(u, delta, a, b, c, d):
+    """Selective scan (Mamba, arXiv:2312.00752 Alg. 2).
+
+    u, delta [B, T, di]; a [di, n]; b, c [B, T, n]; d [di].
+      h_t = exp(delta_t * a) ⊙ h_{t-1} + (delta_t * u_t) b_t^T
+      y_t = h_t c_t + d ⊙ u_t
+    Returns y [B, T, di] (f32).
+    """
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    da = jnp.exp(jnp.einsum("btd,dn->btdn", df, a.astype(jnp.float32)))
+    dbu = jnp.einsum("btd,btn->btdn", df * uf, b.astype(jnp.float32))
+
+    def step(h, x):
+        da_t, dbu_t, c_t = x
+        h = da_t * h + dbu_t                      # [di, n]
+        y = h @ c_t                               # [di]
+        return h, y
+
+    def seq(da_s, dbu_s, c_s):
+        h0 = jnp.zeros(da_s.shape[1:], jnp.float32)
+        _, y = jax.lax.scan(step, h0, (da_s, dbu_s, c_s.astype(jnp.float32)))
+        return y
+
+    y = jax.vmap(seq)(da, dbu, c)
+    return y + d.astype(jnp.float32)[None, None, :] * uf

@@ -1,0 +1,21 @@
+"""Jitted public wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret", "impl"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    starts=None, scale: float | None = None,
+                    interpret: bool = False, impl: str = "pallas"):
+    if impl == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   lengths, starts=starts, scale=scale)
+    return paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                  starts=starts, scale=scale,
+                                  interpret=interpret)

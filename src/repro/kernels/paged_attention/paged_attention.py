@@ -1,0 +1,108 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+This is the serving-side counterpart of the paper's "coalesced search on
+non-contiguous memory" (§3.3): KV pages are SIVF slabs, the per-sequence
+block table is the address-translation table, and the kernel streams pages
+through VMEM with a scalar-prefetched index map — identical machinery to
+kernels/sivf_scan, applied to attention instead of distance scan.
+
+Grid (B, Hq, max_pages), online softmax accumulated in VMEM scratch across
+the page dimension (innermost), output written on the last page step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(tables_ref, lengths_ref, starts_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, page: int, maxp: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    page_id = tables_ref[b * maxp + pi]
+    length = lengths_ref[b]
+    start = starts_ref[b]
+    run = (page_id >= 0) & (pi * page < length) & ((pi + 1) * page > start)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                     # [1, dh]
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [page, dh]
+        v = v_ref[0, :, 0].astype(jnp.float32)               # [page, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        slot = jax.lax.broadcasted_iota(jnp.int32, (1, page), 1) + pi * page
+        s = jnp.where((slot < length) & (slot >= start), s, _NEG_INF)
+        m_prev = m_ref[...]                                  # [1, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                               # [1, page]
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == maxp - 1)
+    def _write():
+        l = l_ref[...]
+        o_ref[0] = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30),
+                            0.0).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
+                           starts=None, scale: float | None = None,
+                           interpret: bool = False):
+    """q [B,Hq,dk]; k/v pages [P,page,Hkv,dk|dv] -> [B,Hq,dv]."""
+    b, hq, dk = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    g = hq // hkv
+    maxp = block_tables.shape[1]
+    scale = dk ** -0.5 if scale is None else scale
+
+    if starts is None:
+        import jax.numpy as _jnp
+        starts = _jnp.zeros_like(lengths)
+    grid = (b, hq, maxp)
+
+    def q_ix(bi, hi, pi, tab, lens, sts):
+        return (bi, hi, 0)
+
+    def kv_ix(bi, hi, pi, tab, lens, sts):
+        return (jnp.maximum(tab[bi * maxp + pi], 0), 0, hi // g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, dk), q_ix),
+            pl.BlockSpec((1, page, 1, dk), kv_ix),
+            pl.BlockSpec((1, page, 1, dv), kv_ix),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), q_ix),
+        scratch_shapes=[
+            pltpu.VMEM((1, dv), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, page=page, maxp=maxp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, dv), q.dtype),
+        interpret=interpret,
+    )(block_tables.reshape(-1), lengths, starts, q, k_pages, v_pages)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for paged decode attention over SIVF-style slab pages."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                        starts=None, scale: float | None = None):
+    """Decode attention over a non-contiguous paged KV cache.
+
+    q [B, Hq, dh] (one new token per sequence);
+    k_pages / v_pages [n_pages, page, Hkv, dh] — the slab pool;
+    block_tables [B, max_pages] int32 page ids (-1 pad) — the per-sequence
+    ATT (paper §3.4); lengths [B] — live tokens per sequence.
+    Returns [B, Hq, dh].
+    """
+    b, hq, dk = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    g = hq // hkv
+    scale = dk ** -0.5 if scale is None else scale
+    maxp = block_tables.shape[1]
+
+    tab = jnp.clip(block_tables, 0)
+    k = k_pages[tab].reshape(b, maxp * page, hkv, dk)        # [B, S, Hkv, dk]
+    v = v_pages[tab].reshape(b, maxp * page, hkv, dv)
+    pos = jnp.arange(maxp * page)[None, :]
+    ok = (pos < lengths[:, None]) & jnp.repeat(
+        block_tables >= 0, page, axis=1)
+    if starts is not None:      # sliding-window lower bound (cache coords)
+        ok = ok & (pos >= starts[:, None])
+    kq = jnp.repeat(k, g, axis=2)                            # [B, S, Hq, dh]
+    vq = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    s = jnp.where(ok[:, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)   # fully-masked rows -> output 0
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhs,bshd->bhd", p,
+                      vq.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Jitted public wrapper for the SIVF slab-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sivf_scan.ref import sivf_scan_ref
+from repro.kernels.sivf_scan.sivf_scan import sivf_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("metric", "interpret", "impl"))
+def sivf_scan(queries, table, data, ids, norms, bitmap, metric: str = "l2",
+              interpret: bool = False, impl: str = "pallas"):
+    """Validity-masked slab distance scan.
+
+    impl="pallas": the TPU kernel (interpret=True to emulate on CPU);
+    impl="ref": the pure-jnp oracle (memory-heavy; test sizes only).
+    """
+    if impl == "ref":
+        return sivf_scan_ref(queries, table, data, ids, norms, bitmap, metric)
+    return sivf_scan_pallas(queries, table, data, ids, norms, bitmap,
+                            metric=metric, interpret=interpret)

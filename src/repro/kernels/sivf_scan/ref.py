@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SIVF slab-scan kernel (paper Alg. 3 inner loop)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+
+
+def sivf_scan_ref(queries, table, data, ids, norms, bitmap, metric="l2"):
+    """Validity-masked distances over gathered slabs.
+
+    queries [Q, D] f32; table [Q, T] int32 slab ids (-1 pad);
+    data [n_slabs, C, D]; ids [n_slabs, C] i32; norms [n_slabs, C] f32;
+    bitmap [n_slabs, W] u32.
+    Returns (dists [Q, T*C] f32 — +inf for dead/pad slots, labels [Q, T*C]).
+    """
+    qn, t = table.shape
+    c = data.shape[1]
+    sc = jnp.clip(table, 0)                                   # [Q, T]
+    x = data[sc].astype(jnp.float32)                          # [Q, T, C, D]
+    vb = bm.unpack_batch(bitmap[sc], c)                       # [Q, T, C]
+    ok = vb & (table >= 0)[..., None]
+    qf = queries.astype(jnp.float32)
+    dot = jnp.einsum("qd,qtcd->qtc", qf, x)
+    if metric == "l2":
+        qq = jnp.sum(qf * qf, axis=-1)[:, None, None]
+        d = qq - 2.0 * dot + norms[sc]
+    else:
+        d = -dot
+    d = jnp.where(ok, d, jnp.inf)
+    lab = jnp.where(ok, ids[sc], -1)
+    return d.reshape(qn, t * c), lab.reshape(qn, t * c)

@@ -1,0 +1,105 @@
+"""Lane-cooperative slab scan — Pallas TPU kernel (paper Alg. 3, adapted).
+
+The paper assigns one *warp* per query and matches slab capacity C to the
+warp width (32) so lane j evaluates slot j. The TPU analogue (DESIGN.md §2):
+slab capacity C = 128 matches the lane width; each grid step evaluates one
+(query, slab) pair as a `[1, D] x [D, C]` MXU matmul, with the validity
+bitmap unpacked in-register to mask dead slots to +inf.
+
+Slab indirection ("coalesced search on non-contiguous memory", §3.3) is
+expressed with a scalar-prefetched block table: the slab-id table is
+prefetched to SMEM and drives the BlockSpec index_map, so each slab tile is
+DMA'd into VMEM exactly like a contiguous operand — the TPU equivalent of
+the paper's coalesced slab loads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD_BITS = 32
+
+
+def _kernel(table_ref, q_ref, data_ref, ids_ref, norms_ref, bitmap_ref,
+            dist_ref, lab_ref, *, capacity: int, metric: str):
+    qi = pl.program_id(0)
+    ti = pl.program_id(1)
+    t = pl.num_programs(1)
+    slab = table_ref[qi * t + ti]                       # scalar, may be -1
+
+    q = q_ref[...]                                      # [1, D]
+    x = data_ref[0]                                     # [C, D]
+    dot = jax.lax.dot_general(
+        q.astype(jnp.float32), x.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [1, C]
+    if metric == "l2":
+        qq = jnp.sum(q.astype(jnp.float32) ** 2)
+        d = qq - 2.0 * dot + norms_ref[...]             # [1, C]
+    else:
+        d = -dot
+
+    # unpack validity bitmap: [1, W] u32 -> [1, C] bool
+    w = capacity // WORD_BITS
+    words = bitmap_ref[...]                             # [1, W]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
+    word_ix = slot // WORD_BITS
+    bit_ix = (slot % WORD_BITS).astype(jnp.uint32)
+    # gather word per slot via broadcast-compare (W is tiny)
+    wsel = jnp.zeros((1, capacity), jnp.uint32)
+    for wi in range(w):
+        wsel = jnp.where(word_ix == wi, words[0, wi], wsel)
+    bits = (jnp.right_shift(wsel, bit_ix) & jnp.uint32(1)) != 0
+    valid = bits & (slab >= 0)
+
+    dist_ref[...] = jnp.where(valid, d, jnp.inf)
+    lab_ref[...] = jnp.where(valid, ids_ref[...], -1)
+
+
+def sivf_scan_pallas(queries: jax.Array, table: jax.Array, data: jax.Array,
+                     ids: jax.Array, norms: jax.Array, bitmap: jax.Array,
+                     metric: str = "l2", interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+    """queries [Q,D], table [Q,T] -> (dists [Q,T*C], labels [Q,T*C])."""
+    qn, d_dim = queries.shape
+    t = table.shape[1]
+    n_slabs, c, _ = data.shape
+    w = bitmap.shape[1]
+
+    grid = (qn, t)
+
+    def slab_ix(qi, ti, tab):
+        return (jnp.maximum(tab[qi * t + ti], 0), 0, 0)
+
+    def slab_ix2(qi, ti, tab):
+        return (jnp.maximum(tab[qi * t + ti], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d_dim), lambda qi, ti, tab: (qi, 0)),      # q
+            pl.BlockSpec((1, c, d_dim), slab_ix),                        # data
+            pl.BlockSpec((1, c), slab_ix2),                              # ids
+            pl.BlockSpec((1, c), slab_ix2),                              # norms
+            pl.BlockSpec((1, w), slab_ix2),                              # bitmap
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c), lambda qi, ti, tab: (qi, ti)),
+            pl.BlockSpec((1, c), lambda qi, ti, tab: (qi, ti)),
+        ],
+    )
+    kernel = functools.partial(_kernel, capacity=c, metric=metric)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, t * c), jnp.float32),
+            jax.ShapeDtypeStruct((qn, t * c), jnp.int32),
+        ],
+        interpret=interpret,
+    )(table.reshape(-1), queries, data, ids, norms, bitmap)

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the top-k kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.topk.ref import topk_ref
+from repro.kernels.topk.topk import topk_pallas
+
+
+@partial(jax.jit, static_argnames=("k", "interpret", "impl", "block_q"))
+def topk(dists, labels, k: int, interpret: bool = False,
+         impl: str = "pallas", block_q: int = 8):
+    if impl == "ref":
+        return topk_ref(dists, labels, k)
+    return topk_pallas(dists, labels, k, block_q=block_q, interpret=interpret)

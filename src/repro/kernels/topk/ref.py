@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the top-k selection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(dists: jax.Array, labels: jax.Array, k: int
+             ) -> tuple[jax.Array, jax.Array]:
+    """Smallest-k by distance. dists/labels [Q, L] -> [Q, k] each."""
+    nd, idx = jax.lax.top_k(-dists, k)
+    return -nd, jnp.take_along_axis(labels, idx, axis=1)

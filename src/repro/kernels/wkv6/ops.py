@@ -1,0 +1,16 @@
+"""Jitted public wrapper for the RWKV6 WKV kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.kernels.wkv6.wkv6 import wkv6_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret", "impl"))
+def wkv6(r, k, v, w, u, interpret: bool = False, impl: str = "pallas"):
+    if impl == "ref":
+        return wkv6_ref(r, k, v, w, u)
+    return wkv6_pallas(r, k, v, w, u, interpret=interpret)

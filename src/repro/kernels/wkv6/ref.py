@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """RWKV6 data-dependent-decay recurrence (arXiv:2404.05892 eq. WKV).
+
+    r, k, w [B, T, H, dk]; v [B, T, H, dv]; u [H, dk] bonus.
+      y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns y [B, T, H, dv] (f32).
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+
+    def head(r_h, k_h, v_h, w_h, u_h):      # [T, dk] ... u_h [dk]
+        def step(s, x):
+            r_t, k_t, v_t, w_t = x
+            kv = k_t[:, None] * v_t[None, :]               # [dk, dv]
+            y = (s + u_h[:, None] * kv).T @ r_t            # [dv]
+            s = w_t[:, None] * s + kv
+            return s, y
+
+        s0 = jnp.zeros((dk, dv), jnp.float32)
+        _, y = jax.lax.scan(step, s0, (r_h, k_h, v_h, w_h))
+        return y                                            # [T, dv]
+
+    f = jax.vmap(jax.vmap(head, in_axes=(1, 1, 1, 1, 0), out_axes=1),
+                 in_axes=(0, 0, 0, 0, None), out_axes=0)
+    return f(r.astype(jnp.float32), k.astype(jnp.float32),
+             v.astype(jnp.float32), w.astype(jnp.float32),
+             u.astype(jnp.float32))

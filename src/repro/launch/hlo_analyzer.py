@@ -1,0 +1,343 @@
+"""Static analyzer for post-SPMD HLO text: trip-count-aware FLOP, memory
+and collective accounting.
+
+Why: ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless
+of trip count, so scan-over-layers models under-report FLOPs by the layer
+count (verified experimentally; see EXPERIMENTS.md §Roofline methodology).
+This analyzer parses the HLO module, builds the computation call graph
+(whiles, fusions, calls, conditionals), extracts each while's trip count
+from its condition's ROOT compare constant (the standard lax.scan
+lowering), and accumulates costs weighted by execution multiplicity:
+
+  * flops            — dot/convolution ops: 2 x |output| x |contraction|
+  * memory bytes     — operand + result bytes of top-level ops in
+                       non-fusion computations (fusion bodies stay in
+                       registers/VMEM; the fusion op itself is counted at
+                       its call site)
+  * collective bytes — per kind, operand bytes x multiplicity
+
+All sizes are per-partition (post-SPMD shapes), i.e. per-device costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+                     r"([\w\-]+)\(")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"(?:%?([\w.\-]+)|\{([^}]*)\})")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes_of(text: str) -> int:
+    """Total bytes of all array shapes mentioned in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_bytes(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_text: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_fusion_body: bool
+    ops: list
+    shapes: dict            # value name -> result text (shape)
+    calls: list             # (callee, kind) kind in {while_body, call, ...}
+    while_ops: list         # (body, cond)
+    root_line: str = ""
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        # tuple types embed /*index=N*/ comments whose '=' breaks parsing
+        if "/*" in s:
+            s = re.sub(r"/\*.*?\*/", "", s)
+        # computation header: `%name (p: f32[..]) -> f32[..] {` or `ENTRY ..`
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*)\s*{",
+                     s)
+        if m and not s.startswith("%") or (m and "=" not in s.split("(")[0]):
+            if m:
+                name = m.group(2)
+                cur = Computation(
+                    name=name,
+                    is_fusion_body="fused" in name,
+                    ops=[], shapes={}, calls=[], while_ops=[])
+                comps[name] = cur
+                if m.group(1):
+                    entry_name = name
+                # parameters: record shapes
+                for pm in re.finditer(r"%?([\w.\-]+):\s*([^,)]+)",
+                                      m.group(3)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        dm = _DEF_RE.match(s)
+        if not dm:
+            continue
+        name, result_text, kind = dm.groups()
+        cur.shapes[name] = result_text
+        op = Op(name=name, kind=kind, result_text=result_text, line=s)
+        cur.ops.append(op)
+        if s.startswith("ROOT"):
+            cur.root_line = s
+        if kind == "while":
+            body = cond = None
+            for cm in _CALL_ATTR_RE.finditer(s):
+                pass
+            bm = re.search(r"body=%?([\w.\-]+)", s)
+            cm2 = re.search(r"condition=%?([\w.\-]+)", s)
+            if bm and cm2:
+                cur.while_ops.append((bm.group(1), cm2.group(1), op))
+        else:
+            for cm in _CALL_ATTR_RE.finditer(s):
+                single, many = cm.groups()
+                if single:
+                    cur.calls.append((single, kind))
+                elif many:
+                    for nm in _OPERAND_RE.findall(many):
+                        cur.calls.append((nm, kind))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Trip count from the condition's ROOT compare against a constant
+    (standard lax.scan/fori lowering); 1 if unrecognized."""
+    cond = comps.get(cond_name)
+    if cond is None or not cond.root_line:
+        return 1
+    if "compare" not in cond.root_line:
+        return 1
+    consts = {}
+    for op in cond.ops:
+        mm = re.search(r"constant\((-?\d+)\)", op.line)
+        if mm:
+            consts[op.name] = int(mm.group(1))
+    operands = _OPERAND_RE.findall(
+        cond.root_line.split("compare(", 1)[-1].split(")")[0])
+    direction = re.search(r"direction=(\w+)", cond.root_line)
+    for o in operands:
+        if o in consts:
+            n = consts[o]
+            if direction and direction.group(1) in ("LT", "GT"):
+                return max(n, 1)
+            return max(n, 1)
+    return 1
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    out_dims = _shape_dims(op.result_text)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # contraction size from lhs shape + lhs_contracting_dims
+    lhs_m = re.search(r"\(([^)]*)\)", op.line[op.line.index(op.kind):])
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    # lhs shape: first operand — inline shape or symbol lookup
+    call_args = op.line.split(op.kind + "(", 1)[1]
+    first_arg = call_args.split(",")[0]
+    dims = _shape_dims(first_arg)
+    if not dims:
+        nm = _OPERAND_RE.search(first_arg)
+        if nm and nm.group(1) in shapes:
+            dims = _shape_dims(shapes[nm.group(1)])
+    csize = 1
+    if cdims and dims:
+        for ci in cdims.group(1).split(","):
+            if ci != "" and int(ci) < len(dims):
+                csize *= dims[int(ci)]
+    return 2.0 * out_n * csize
+
+
+def _op_memory_bytes(op: Op, shapes: dict) -> int:
+    """result bytes + operand bytes (inline shapes or symbol lookup)."""
+    total = _shape_bytes_of(op.result_text)
+    call_args = op.line.split(op.kind + "(", 1)
+    if len(call_args) < 2:
+        return total
+    # cut at closing paren of the call
+    args, depth, i = call_args[1], 1, 0
+    while i < len(args) and depth:
+        if args[i] == "(":
+            depth += 1
+        elif args[i] == ")":
+            depth -= 1
+        i += 1
+    args = args[: i - 1]
+    inline = _shape_bytes_of(args)
+    if inline:
+        total += inline
+    else:
+        for nm in _OPERAND_RE.findall(args):
+            if nm in shapes:
+                total += _shape_bytes_of(shapes[nm])
+    return total
+
+
+_SKIP_MEM = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "while", "conditional", "call"}
+
+
+_PURE_CONVERT = {"parameter", "convert", "bitcast", "constant"}
+
+
+def _fusion_aware_bytes(op: Op, comp: Computation, comps: dict
+                        ) -> tuple[int, str]:
+    """(bytes, category) for one op.
+
+    * in-place dynamic-update-slice fusions are charged 2x the updated
+      slice, not the whole aliased buffer (XLA aliases input/output);
+    * pure dtype-convert fusions are categorized "convert": the CPU
+      backend materializes f32 copies of bf16 dot operands, which the TPU
+      MXU consumes natively — the roofline memory term reports both raw
+      and TPU-adjusted numbers (EXPERIMENTS.md methodology).
+    """
+    if op.kind == "fusion":
+        cm = re.search(r"calls=%?([\w.\-]+)", op.line)
+        callee = comps.get(cm.group(1)) if cm else None
+        if callee is not None:
+            kinds = {o.kind for o in callee.ops}
+            if kinds <= _PURE_CONVERT and "convert" in kinds:
+                return _op_memory_bytes(op, comp.shapes), "convert"
+            dus = [o for o in callee.ops
+                   if o.kind == "dynamic-update-slice"]
+            if dus:
+                args = dus[-1].line.split("dynamic-update-slice(", 1)[1]
+                names = _OPERAND_RE.findall(args.split(")")[0])
+                if len(names) >= 2 and names[1] in callee.shapes:
+                    upd = _shape_bytes_of(callee.shapes[names[1]])
+                    return 2 * upd, "mem"
+    return _op_memory_bytes(op, comp.shapes), "mem"
+
+
+def analyze(text: str) -> dict:
+    """Full-module analysis. Returns per-device totals."""
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "memory_bytes": 0.0,
+                "collectives": {}, "note": "no entry computation"}
+
+    flops = 0.0
+    mem = 0.0
+    convert_mem = 0.0
+    coll = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    visited_mult: dict[str, float] = defaultdict(float)
+
+    def visit(comp: Computation, mult: float, depth: int = 0):
+        nonlocal flops, mem, convert_mem
+        if depth > 64 or mult <= 0:
+            return
+        visited_mult[comp.name] += mult
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += mult * _dot_flops(op, comp.shapes)
+            if op.kind.rstrip("-startdone") in _COLLECTIVES or \
+                    any(op.kind == c or op.kind == c + "-start"
+                        for c in _COLLECTIVES):
+                base = op.kind.replace("-start", "").replace("-done", "")
+                if base in _COLLECTIVES and not op.kind.endswith("-done"):
+                    b = _op_memory_bytes(op, comp.shapes) \
+                        - _shape_bytes_of(op.result_text)
+                    if b <= 0:
+                        b = _shape_bytes_of(op.result_text)
+                    coll[base]["count"] += mult
+                    coll[base]["bytes"] += mult * b
+            if not comp.is_fusion_body and op.kind not in _SKIP_MEM:
+                by, cat = _fusion_aware_bytes(op, comp, comps)
+                if cat == "convert":
+                    convert_mem += mult * by
+                else:
+                    mem += mult * by
+        for body, cond, _op in comp.while_ops:
+            trips = _trip_count(comps, cond)
+            if body in comps:
+                visit(comps[body], mult * trips, depth + 1)
+            if cond in comps:
+                visit(comps[cond], mult * trips, depth + 1)
+        for callee, kind in comp.calls:
+            if callee in comps:
+                visit(comps[callee], mult, depth + 1)
+
+    visit(entry, 1.0)
+
+    # ring-traffic wire bytes
+    traffic = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+    wire = sum(traffic[k] * v["bytes"] for k, v in coll.items())
+    return {
+        "flops": flops,
+        # TPU-adjusted (pure dtype-convert fusions excluded); raw includes
+        # the CPU backend's f32 dot-operand materialization
+        "memory_bytes": mem,
+        "memory_bytes_raw": mem + convert_mem,
+        "convert_bytes": convert_mem,
+        "collectives": {k: {"count": v["count"], "bytes": v["bytes"]}
+                        for k, v in coll.items()},
+        "collective_wire_bytes": wire,
+        "n_computations": len(comps) - 1,
+    }

@@ -1,0 +1,124 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md
+§Roofline):
+
+  compute    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective = collective_bytes / (chips x 50e9 B/s per ICI link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting each by its ring-traffic factor
+(all-reduce 2x, others ~1x of operand bytes on the wire per device).
+"""
+from __future__ import annotations
+
+import re
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ring-traffic factor: bytes on the wire per device / operand bytes
+_TRAFFIC = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from post-SPMD HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s*\S+\s+(" + "|".join(_COLLECTIVES)
+                      + r")(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        # operands: everything inside the call parens
+        call = line[m.end():]
+        depth, i = 1, 0
+        while i < len(call) and depth:
+            if call[i] == "(":
+                depth += 1
+            elif call[i] == ")":
+                depth -= 1
+            i += 1
+        operands = call[: i - 1]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(operands)
+    total = sum(v["bytes"] for v in out.values())
+    wire = sum(_TRAFFIC[k] * v["bytes"] for k, v in out.items())
+    out["total_bytes"] = total
+    out["wire_bytes"] = int(wire)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_wire_bytes: float, chips: int) -> dict:
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = bytes_accessed / (chips * HBM_BW)
+    collective = collective_wire_bytes / (chips * ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dom
+    terms["roofline_bound_s"] = bound
+    # fraction of the bound the compute term fills = achievable MFU ceiling
+    terms["compute_fraction_of_bound"] = compute / bound if bound else 0.0
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS from the *unpadded* spec.
+
+    train: 6*N*D (fwd+bwd); prefill: 2*N*D; decode: 2*N*B per step
+    (MoE archs use active params). Attention O(S^2) term added for
+    full-attention archs where it is material.
+    """
+    n_active = cfg.param_count_active()
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * n_active * b * s
+    elif shape.kind == "prefill":
+        base = 2.0 * n_active * b * s
+    else:
+        base = 2.0 * n_active * b          # one token per sequence
+    # attention score/value FLOPs (causal ~ S^2/2), per attn layer
+    attn_layers = sum(cfg.is_attn_layer(i) for i in range(cfg.n_layers))
+    dh = cfg.qk_head_dim
+    if shape.kind in ("train", "prefill"):
+        mult = 3 if shape.kind == "train" else 1  # bwd ~ 2x fwd
+        base += mult * attn_layers * b * 2.0 * cfg.n_heads * dh * s * s
+    else:
+        base += attn_layers * b * 4.0 * cfg.n_heads * dh * s
+    return base

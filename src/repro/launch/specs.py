@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Same pattern as shannon/kernels: weak-type-correct, shardable stand-ins;
+no device allocation. ``input_specs`` covers model inputs (tokens, labels,
+modality-stub embeddings); cache specs cover decode-mode state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeConfig
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.sharding.axes import spec_for, strip
+from repro.sharding.rules import ShardPlan
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model-input ShapeDtypeStructs for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+    else:
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32)
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        batch["prefix_embeds"] = _sds(
+            (b, cfg.n_prefix_embeds, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.enc_dec and shape.kind != "decode":
+        batch["enc_frames"] = _sds(
+            (b, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, plan: ShardPlan,
+                    mesh) -> dict:
+    rules = plan.rules_dict
+    bspec = P(rules["batch"], None) if rules else P()
+    out = {"tokens": NamedSharding(mesh, bspec)}
+    if shape.kind == "train":
+        out["labels"] = NamedSharding(mesh, bspec)
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        out["prefix_embeds"] = NamedSharding(
+            mesh, P(rules["batch"], None, None) if rules else P())
+    if cfg.enc_dec and shape.kind != "decode":
+        out["enc_frames"] = NamedSharding(
+            mesh, P(rules["batch"], None, None) if rules else P())
+    return out
+
+
+def abstract_params(cfg: ModelConfig, plan: ShardPlan, max_seq: int):
+    """Annotated abstract param tree (ShapeDtypeStruct leaves)."""
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, plan, k, max_seq=max_seq),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_decode_cache(cfg: ModelConfig, plan: ShardPlan, batch: int,
+                          max_seq: int):
+    return jax.eval_shape(
+        lambda: M.init_decode_cache(cfg, plan, batch, max_seq,
+                                    jnp.dtype(cfg.dtype)))
+
+
+def cache_shardings(cfg: ModelConfig, plan: ShardPlan, cache_abs, mesh):
+    """Spec tree for the decode cache, mirroring init_decode_cache's
+    per-position structure. Attention KV: (None, batch, kv_seq, heads, None)
+    — exactly one of kv_seq / heads maps to the model axis (rules.py);
+    recurrent states shard batch + their channel dim."""
+    rules = plan.rules_dict or {}
+
+    def ns(*ax):
+        return NamedSharding(mesh, spec_for(ax, rules))
+
+    out = []
+    for pos in range(cfg.layer_period):
+        entry = cache_abs[pos]
+        if cfg.attention == "mla" and cfg.is_attn_layer(pos):
+            # absorbed latent cache [n_per, B, S, lat/rope]; latent dim
+            # shards over the model axis (DUS-friendly, scores psum)
+            lat = ns(None, "batch", None, "mlp")
+            out.append(tuple(lat for _ in entry))
+        elif cfg.is_attn_layer(pos) or cfg.enc_dec:
+            kv = ns(None, "batch", "kv_seq", "kv_heads", "kv_dh")
+            out.append(tuple(kv for _ in entry))     # self (+ cross) K,V
+        elif cfg.block == "rwkv":
+            out.append((
+                ns(None, "batch", None, None),               # x_prev (tm)
+                ns(None, "batch", "heads", None, None),      # wkv state
+                ns(None, "batch", None, None),               # x_prev (cm)
+            ))
+        elif cfg.block == "hybrid":
+            out.append((
+                ns(None, "batch", None, "mlp"),              # conv state
+                ns(None, "batch", "mlp", None),              # ssm state
+            ))
+        else:
+            out.append((ns(None, None),))
+    return out
+
+
+def param_shardings(params_annot, mesh, rules):
+    from repro.sharding.axes import Annot
+
+    def one(a: Annot):
+        return NamedSharding(mesh, spec_for(a.ax, rules))
+
+    return jax.tree.map(one, params_annot,
+                        is_leaf=lambda x: isinstance(x, Annot))

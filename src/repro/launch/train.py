@@ -1,0 +1,156 @@
+"""Training launcher: end-to-end driver with fault tolerance.
+
+Features (design scales to 1000+ nodes; CPU runs use reduced configs):
+  * elastic restart — restores the latest checkpoint onto whatever mesh the
+    current invocation has (checkpoints are topology-independent);
+  * preemption safety — SIGTERM/SIGINT trigger a final checkpoint before
+    exit;
+  * deterministic data skip-ahead — the pipeline is counter-based, so a
+    restarted job consumes exactly the batches it would have;
+  * straggler telemetry — per-step wall time is tracked; steps slower than
+    ``straggler_factor`` x the trailing median are logged (at scale this
+    feeds the re-mesh decision);
+  * multi-host — ``--multihost`` calls jax.distributed.initialize() (no-op
+    on a single host).
+
+Example (CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import statistics
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models import model as M
+from repro.sharding.axes import strip, use_rules
+from repro.sharding.rules import make_plan, unpadded_plan
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--multihost", action="store_true")
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--stop-after", type=int, default=0,
+                    help="stop (checkpoint+exit) after N steps — simulated preemption")
+    args = ap.parse_args(argv)
+
+    if args.multihost:
+        jax.distributed.initialize()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    plan = unpadded_plan(cfg)   # CPU path; the dry-run covers the big mesh
+
+    key = jax.random.key(args.seed)
+    params = strip(M.init_params(cfg, plan, key, max_seq=args.seq))
+    state = init_train_state(params)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps),
+        microbatches=args.microbatches)
+    step_fn = jax.jit(make_train_step(cfg, plan, tcfg), donate_argnums=(0,))
+
+    data = TokenStream(DataConfig(
+        seed=args.seed, vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, n_hosts=jax.process_count(),
+        host_id=jax.process_index()))
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    if mgr is not None:
+        latest = mgr.latest_step()
+        if latest is not None:
+            state = mgr.restore(latest, state)
+            start_step = latest
+            print(f"[elastic-restart] resumed from step {latest}")
+
+    stop = {"flag": False}
+
+    def handler(signum, frame):
+        print(f"[preempt] signal {signum}: checkpoint + exit")
+        stop["flag"] = True
+
+    old = [signal.signal(s, handler) for s in (signal.SIGTERM, signal.SIGINT)]
+
+    losses, times = [], []
+    step = start_step
+    try:
+        for step in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, data.batch(step))
+            if cfg.frontend == "vision_stub":
+                batch["prefix_embeds"] = jnp.zeros(
+                    (args.batch, cfg.n_prefix_embeds, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+                batch["labels"] = batch["labels"].at[
+                    :, :cfg.n_prefix_embeds].set(-1)
+            if cfg.enc_dec:
+                batch["enc_frames"] = jnp.zeros(
+                    (args.batch, cfg.enc_seq, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            losses.append(loss)
+            times.append(dt)
+            if len(times) > 8:
+                med = statistics.median(times[-32:])
+                if dt > args.straggler_factor * med:
+                    print(f"[straggler] step {step}: {dt:.2f}s "
+                          f"(median {med:.2f}s)")
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dt:.2f}s", flush=True)
+            if mgr is not None and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, state, blocking=False)
+            if args.stop_after and step - start_step + 1 >= args.stop_after:
+                print(f"[preempt-sim] stopping after {args.stop_after} steps")
+                break
+            if stop["flag"]:
+                break
+    finally:
+        for s, h in zip((signal.SIGTERM, signal.SIGINT), old):
+            signal.signal(s, h)
+    if mgr is not None:
+        mgr.save(step + 1, state, blocking=True)
+    result = {"first_loss": losses[0] if losses else None,
+              "last_loss": losses[-1] if losses else None,
+              "steps_run": len(losses), "final_step": step + 1}
+    print(f"done: loss {result['first_loss']:.4f} -> "
+          f"{result['last_loss']:.4f} over {result['steps_run']} steps")
+    return result
+
+
+if __name__ == "__main__":
+    main()

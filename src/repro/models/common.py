@@ -1,0 +1,104 @@
+"""Shared model building blocks: norms, linears, RoPE, embeddings.
+
+Parameters are plain nested dicts of ``axes.Annot`` (array + logical axes);
+``axes.strip`` yields the runtime pytree and ``axes.specs_tree`` the
+PartitionSpecs for pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import Annot, annot, constrain
+
+
+def dense_init(key, d_in: int, d_out: int, ax_in: str, ax_out: str,
+               scale: float | None = None) -> Annot:
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return annot(w, ax_in, ax_out)
+
+
+def dense(params: jax.Array, x: jax.Array, dtype=None) -> jax.Array:
+    dtype = x.dtype if dtype is None else dtype
+    return jnp.einsum("...i,io->...o", x, params.astype(dtype))
+
+
+def norm_init(key, d: int, kind: str, ax: str = "embed") -> dict:
+    del key
+    p = {"scale": annot(jnp.ones((d,), jnp.float32), ax)}
+    if kind == "layernorm":
+        p["bias"] = annot(jnp.zeros((d,), jnp.float32), ax)
+    return p
+
+
+def apply_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in params:                       # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) \
+            + params["bias"].astype(jnp.float32)
+    else:                                      # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_1d(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    """Per-head qk-norm (qwen3): normalizes the trailing head_dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# -- RoPE --------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, dh] (dh even); positions [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                          # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal positional table [seq, d]."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, d, 2, jnp.float32) / d * jnp.log(10000.0))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- embeddings --------------------------------------------------------------
+
+def embed_init(key, vocab_padded: int, d: int) -> dict:
+    tbl = jax.random.normal(key, (vocab_padded, d), jnp.float32) * 0.02
+    return {"table": annot(tbl, "vocab", "embed")}
+
+
+def embed_lookup(params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    x = params["table"].astype(dtype)[tokens]
+    return constrain(x, "batch", "seq", None)
+
+
+def lm_head(params: dict, x: jax.Array, vocab_size: int) -> jax.Array:
+    """Project to logits; padded vocab rows masked to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+    logits = constrain(logits, "batch", "seq", "vocab")
+    vp = params["table"].shape[0]
+    if vp != vocab_size:
+        pad_mask = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits.astype(jnp.float32)
+                           ).astype(logits.dtype)
+    return logits

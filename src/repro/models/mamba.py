@@ -1,0 +1,136 @@
+"""Mamba (S6) block for the Jamba hybrid architecture.
+
+XLA path: scan-of-checkpointed-scans over time — stores only chunk-boundary
+[B, d_inner, n] states for the backward pass (the JAX analogue of the CUDA
+kernel's recompute-in-backward; DESIGN.md §2). Pallas fast path:
+kernels/mamba_scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense, dense_init
+from repro.sharding.axes import annot, constrain
+from repro.sharding.rules import ShardPlan
+
+
+def init_mamba(key, cfg: ModelConfig, plan: ShardPlan) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    dr = cfg.dt_rank
+    kc = cfg.mamba_d_conv
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, "embed", "mlp"),
+        "conv_w": annot(
+            jax.random.normal(ks[1], (kc, di), jnp.float32) * (1 / kc) ** 0.5,
+            None, "mlp"),
+        "conv_b": annot(jnp.zeros((di,), jnp.float32), "mlp"),
+        "w_x": dense_init(ks[2], di, dr + 2 * n, "mlp", None),
+        "w_dt": dense_init(ks[3], dr, di, None, "mlp"),
+        "dt_bias": annot(
+            jnp.log(jnp.exp(jax.random.uniform(
+                ks[4], (di,), jnp.float32, 1e-3, 1e-1)) - 1.0), "mlp"),
+        "a_log": annot(jnp.log(a), "mlp", None),
+        "d": annot(jnp.ones((di,), jnp.float32), "mlp"),
+        "w_out": dense_init(ks[5], di, d, "mlp", "embed"),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d. x [B,S,di]; w [K,di]; returns (y, new_state
+    [B,K-1,di])."""
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)             # [B,S+K-1,di]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return y + b[None, None, :], xp[:, -(k - 1):]
+
+
+def _ssm_sequential(u, delta, a, b, c, d, h0, chunk: int):
+    """Selective scan, memory-bounded. u,delta [B,T,di]; b,c [B,T,n];
+    h0 [B,di,n]. Returns (y [B,T,di], h_final)."""
+    bsz, t, di = u.shape
+
+    def inner(h, xs):
+        u_t, dt_t, b_t, c_t = xs                              # [B,di],[B,n]
+        da = jnp.exp(dt_t[..., None] * a[None])               # [B,di,n]
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    n_chunks = max(t // chunk, 1)
+    chunk = t // n_chunks
+
+    @jax.checkpoint
+    def chunk_fn(h, xs):
+        uc, dtc, bc, cc = xs                                  # [B,c,...]
+        h, y = jax.lax.scan(inner, h, (uc.transpose(1, 0, 2),
+                                       dtc.transpose(1, 0, 2),
+                                       bc.transpose(1, 0, 2),
+                                       cc.transpose(1, 0, 2)))
+        return h, y.transpose(1, 0, 2)
+
+    def rs(x):
+        return x.reshape(bsz, n_chunks, chunk, x.shape[-1]).transpose(
+            1, 0, 2, 3)
+
+    h, ys = jax.lax.scan(chunk_fn, h0, (rs(u), rs(delta), rs(b), rs(c)))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, t, di)
+    return y + d[None, None, :] * u, h
+
+
+def mamba_block(p, cfg: ModelConfig, plan: ShardPlan, x, state,
+                impl: str = "xla", chunk: int = 64):
+    """x [B,S,d]; state = (conv_state [B,K-1,di], h [B,di,n]).
+    Returns (out [B,S,d], new_state)."""
+    b, s, _ = x.shape
+    di = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    dr = cfg.dt_rank
+    conv_state, h0 = state
+
+    xz = dense(p["w_in"], x)                                  # [B,S,2di]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", "seq", "mlp")
+    xc, conv_state = _causal_conv(xin, p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+
+    xdbc = dense(p["w_x"], xc)                                # [B,S,dr+2n]
+    dt_r, b_in, c_in = jnp.split(xdbc, [dr, dr + n], axis=-1)
+    delta = jax.nn.softplus(
+        dense(p["w_dt"], dt_r).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"])                                  # [di,n] (<0)
+
+    if impl.startswith("pallas"):
+        from repro.kernels.mamba_scan.ops import mamba_scan
+        y = mamba_scan(xc, delta, a, b_in.astype(jnp.float32),
+                       c_in.astype(jnp.float32), p["d"],
+                       interpret=(impl == "pallas_interpret"),
+                       block_d=min(128, di))
+        h_new = h0  # kernel path starts from zero state (prefill)
+    else:
+        y, h_new = _ssm_sequential(
+            xc.astype(jnp.float32), delta, a, b_in.astype(jnp.float32),
+            c_in.astype(jnp.float32), p["d"].astype(jnp.float32),
+            h0.astype(jnp.float32), chunk)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = constrain(y, "batch", "seq", "mlp")
+    out = dense(p["w_out"], y)
+    return constrain(out, "batch", "seq_sp", None), (conv_state, h_new)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> tuple:
+    return (
+        jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), dtype),
+        jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state),
+                  jnp.float32),
+    )

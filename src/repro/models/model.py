@@ -1,0 +1,456 @@
+"""Model assembly: decoder LMs (dense/MoE/SSM/hybrid/VLM) and the whisper
+encoder-decoder, all driven by ModelConfig + ShardPlan.
+
+Layers are stacked and scanned per *period* (the smallest repeating layer
+pattern: 1 for uniform archs, 8 for jamba's mamba/attn interleave) — this
+keeps the HLO size O(period) instead of O(n_layers) for 512-device
+compiles, and gives remat a natural boundary (one residual checkpoint per
+period when cfg.remat).
+
+Decode-mode caches are pytrees stacked over periods and scanned alongside
+the layer params; attention caches carry the "kv_seq" sharded axis
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.common import (
+    apply_norm, embed_init, embed_lookup, lm_head, norm_init,
+    sinusoid_positions,
+)
+from repro.sharding.axes import annot, constrain, strip
+from repro.sharding.rules import ShardPlan
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, plan: ShardPlan, pos: int) -> dict:
+    """One layer's params for period-position ``pos``."""
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": norm_init(ks[0], cfg.d_model, cfg.norm)}
+    if cfg.is_attn_layer(pos):
+        if cfg.attention == "mla":
+            p["attn"] = attn.init_mla(ks[1], cfg, plan)
+        else:
+            p["attn"] = attn.init_gqa(ks[1], cfg, plan)
+    elif cfg.block == "rwkv":
+        p["tm"] = rwkv_mod.init_time_mix(ks[1], cfg, plan)
+    elif cfg.block == "hybrid":
+        p["mamba"] = mamba_mod.init_mamba(ks[1], cfg, plan)
+    p["ln2"] = norm_init(ks[2], cfg.d_model, cfg.norm)
+    if cfg.is_moe_layer(pos):
+        p["moe"] = mlp_mod.init_moe(ks[3], cfg, plan)
+    elif cfg.block == "rwkv":
+        p["cm"] = rwkv_mod.init_channel_mix(ks[3], cfg)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                    cfg.mlp_act)
+    return p
+
+
+def _init_enc_layer(key, cfg: ModelConfig, plan: ShardPlan) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": norm_init(ks[0], cfg.d_model, cfg.norm),
+        "attn": attn.init_gqa(ks[1], cfg, plan),
+        "ln2": norm_init(ks[2], cfg.d_model, cfg.norm),
+        "mlp": mlp_mod.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, plan: ShardPlan,
+                    pos: int = 0) -> dict:
+    """Whisper decoder layer: self-attn + cross-attn + mlp."""
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": norm_init(ks[0], cfg.d_model, cfg.norm),
+        "attn": attn.init_gqa(ks[1], cfg, plan),
+        "ln_x": norm_init(ks[2], cfg.d_model, cfg.norm),
+        "xattn": attn.init_gqa(ks[3], cfg, plan),
+        "ln2": norm_init(ks[4], cfg.d_model, cfg.norm),
+        "mlp": mlp_mod.init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def init_params(cfg: ModelConfig, plan: ShardPlan, key,
+                max_seq: int = 4096) -> dict:
+    """Annotated param tree. ``axes.strip`` for runtime values."""
+    period = cfg.layer_period
+    n_periods = cfg.n_layers // period
+    assert cfg.n_layers % period == 0
+    keys = jax.random.split(key, 8)
+
+    params: dict = {
+        "embed": embed_init(keys[0], plan.vocab_padded, cfg.d_model),
+        "final_norm": norm_init(keys[1], cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(keys[6], plan.vocab_padded, cfg.d_model)
+    mk_layer = _init_dec_layer if cfg.enc_dec else _init_layer
+    layers = []
+    for pos in range(period):
+        per_period = [
+            mk_layer(jax.random.fold_in(keys[2], p * period + pos),
+                     cfg, plan, pos)
+            for p in range(n_periods)
+        ]
+        stacked = jax.tree.map(
+            lambda *xs: _stack_annot(xs), *per_period,
+            is_leaf=_is_annot)
+        layers.append(stacked)
+    params["layers"] = layers
+
+    if cfg.enc_dec:
+        enc_layers = [
+            _init_enc_layer(jax.random.fold_in(keys[3], i), cfg, plan)
+            for i in range(cfg.n_enc_layers)
+        ]
+        params["encoder"] = {
+            "layers": jax.tree.map(lambda *xs: _stack_annot(xs),
+                                   *enc_layers, is_leaf=_is_annot),
+            "ln_post": norm_init(keys[4], cfg.d_model, cfg.norm),
+        }
+        params["dec_pos"] = {"table": annot(
+            jax.random.normal(keys[5], (max_seq, cfg.d_model),
+                              jnp.float32) * 0.01, None, "embed")}
+    return params
+
+
+def _is_annot(x):
+    from repro.sharding.axes import Annot
+    return isinstance(x, Annot)
+
+
+def _stack_annot(xs):
+    from repro.sharding.axes import Annot
+    return Annot(jnp.stack([x.v for x in xs]), (None,) + xs[0].ax)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_layer_full(lp, cfg: ModelConfig, plan: ShardPlan, pos: int,
+                      x, positions, impl: str, collect_cache: bool,
+                      init_state=None):
+    """One sub-layer (period position). Returns (x, aux, cache_out)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = apply_norm(lp["ln1"], x)
+    if cfg.is_attn_layer(pos):
+        f = attn.mla_full if cfg.attention == "mla" else attn.gqa_full
+        o, kv = f(lp["attn"], cfg, plan, h, positions, causal=True,
+                  impl=impl)
+        x = x + o
+        if collect_cache:
+            cache = kv
+    elif cfg.block == "rwkv":
+        b = x.shape[0]
+        st = init_state if init_state is not None else (
+            jnp.zeros((b, 1, cfg.d_model), x.dtype),
+            jnp.zeros((b, plan.n_heads_padded, cfg.rwkv_head_size,
+                       cfg.rwkv_head_size), jnp.float32))
+        o, st_new = rwkv_mod.time_mix(lp["tm"], cfg, plan, h, st, impl=impl)
+        x = x + o
+        if collect_cache:
+            cache = st_new
+    elif cfg.block == "hybrid":
+        b = x.shape[0]
+        st = init_state if init_state is not None else \
+            mamba_mod.init_mamba_state(cfg, b, x.dtype)
+        o, st_new = mamba_mod.mamba_block(lp["mamba"], cfg, plan, h, st,
+                                          impl=impl)
+        x = x + o
+        if collect_cache:
+            cache = st_new
+
+    h = apply_norm(lp["ln2"], x)
+    if cfg.is_moe_layer(pos):
+        o, aux = mlp_mod.moe(lp["moe"], cfg, plan, h)
+        x = x + o
+    elif cfg.block == "rwkv":
+        b = x.shape[0]
+        st = jnp.zeros((b, 1, cfg.d_model), x.dtype)
+        o, cm_state = rwkv_mod.channel_mix(lp["cm"], cfg, h, st)
+        x = x + o
+        if collect_cache:
+            cache = cache + (cm_state,) if cache is not None else (cm_state,)
+    else:
+        x = x + mlp_mod.apply_mlp(lp["mlp"], h, cfg.mlp_act)
+    return x, aux, cache
+
+
+def forward(params, cfg: ModelConfig, plan: ShardPlan, batch: dict,
+            impl: str = "xla", collect_cache: bool = False):
+    """Full-sequence forward.
+
+    batch: tokens [B,S] (+ prefix_embeds for vlm, enc_frames for audio).
+    Returns (logits [B,S,V], aux_loss, caches | None).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, dtype)
+
+    if cfg.frontend == "vision_stub" and "prefix_embeds" in batch:
+        n_img = batch["prefix_embeds"].shape[1]
+        x = jnp.concatenate(
+            [batch["prefix_embeds"].astype(dtype), x[:, n_img:]], axis=1)
+
+    enc_kv_all = None
+    if cfg.enc_dec:
+        enc_out = _encode(params, cfg, plan, batch["enc_frames"], impl)
+        x = x + params["dec_pos"]["table"].astype(dtype)[None, :s]
+        enc_kv_all = enc_out
+
+    positions = jnp.arange(s)
+    x = constrain(x, "batch", "seq_sp", None)
+    period = cfg.layer_period
+
+    def period_body(carry, lp_stack):
+        x, aux = carry
+        caches = []
+        for pos in range(period):
+            if cfg.enc_dec:
+                x, a, c = _apply_dec_layer_full(
+                    lp_stack[pos], cfg, plan, x, positions, enc_kv_all,
+                    impl, collect_cache)
+            else:
+                x, a, c = _apply_layer_full(
+                    lp_stack[pos], cfg, plan, pos, x, positions, impl,
+                    collect_cache)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), tuple(caches)
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), tuple(params["layers"]))
+
+    x = apply_norm(params["final_norm"], x)
+    logits = lm_head(params.get("head", params["embed"]), x, cfg.vocab_size)
+    return logits, aux, (caches if collect_cache else None)
+
+
+def _apply_dec_layer_full(lp, cfg, plan, x, positions, enc_out, impl,
+                          collect_cache):
+    """Whisper decoder layer (self + cross + mlp)."""
+    cache = None
+    h = apply_norm(lp["ln1"], x)
+    o, kv = attn.gqa_full(lp["attn"], cfg, plan, h, positions, causal=True,
+                          impl=impl)
+    x = x + o
+    if collect_cache:
+        cache = kv
+    h = apply_norm(lp["ln_x"], x)
+    ekv = attn.cross_kv(lp["xattn"], cfg, plan, enc_out)
+    x = x + attn.cross_full(lp["xattn"], cfg, plan, h, ekv)
+    h = apply_norm(lp["ln2"], x)
+    x = x + mlp_mod.apply_mlp(lp["mlp"], h, cfg.mlp_act)
+    return x, jnp.zeros((), jnp.float32), cache
+
+
+def _encode(params, cfg: ModelConfig, plan: ShardPlan, frames, impl):
+    """Whisper encoder over stub frame embeddings [B, Senc, d]."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s, _ = frames.shape
+    x = frames.astype(dtype) + sinusoid_positions(
+        s, cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        h = apply_norm(lp["ln1"], x)
+        o, _ = attn.gqa_full(lp["attn"], cfg, plan, h, positions,
+                             causal=False, impl=impl)
+        x = x + o
+        h = apply_norm(lp["ln2"], x)
+        x = x + mlp_mod.apply_mlp(lp["mlp"], h, cfg.mlp_act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return apply_norm(params["encoder"]["ln_post"], x)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, stateful caches)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, plan: ShardPlan, batch: int,
+                      max_seq: int, dtype) -> list:
+    """Stacked-over-periods cache pytree per period position."""
+    period = cfg.layer_period
+    n_per = cfg.n_layers // period
+    caches = []
+    for pos in range(period):
+        if cfg.attention == "mla" and cfg.is_attn_layer(pos):
+            # absorbed-form latent cache (§Perf iteration 5): 26.6x fewer
+            # bytes than expanded per-head K/V
+            caches.append((
+                jnp.zeros((n_per, batch, max_seq, cfg.kv_lora_rank), dtype),
+                jnp.zeros((n_per, batch, max_seq, cfg.qk_rope_dim), dtype),
+            ))
+        elif cfg.is_attn_layer(pos) or cfg.enc_dec:
+            hkv = plan.n_kv_heads_padded
+            dh = cfg.head_dim
+            dv = cfg.head_dim
+            entry = (
+                jnp.zeros((n_per, batch, max_seq, hkv, dh), dtype),
+                jnp.zeros((n_per, batch, max_seq, hkv, dv), dtype),
+            )
+            if cfg.enc_dec:   # + cross-attention K,V (filled at prefill)
+                entry = entry + (
+                    jnp.zeros((n_per, batch, cfg.enc_seq, hkv, dh), dtype),
+                    jnp.zeros((n_per, batch, cfg.enc_seq, hkv, dv), dtype),
+                )
+            caches.append(entry)
+        elif cfg.block == "rwkv":
+            caches.append((
+                jnp.zeros((n_per, batch, 1, cfg.d_model), dtype),
+                jnp.zeros((n_per, batch, plan.n_heads_padded,
+                           cfg.rwkv_head_size, cfg.rwkv_head_size),
+                          jnp.float32),
+                jnp.zeros((n_per, batch, 1, cfg.d_model), dtype),
+            ))
+        elif cfg.block == "hybrid":
+            caches.append((
+                jnp.zeros((n_per, batch, cfg.mamba_d_conv - 1,
+                           cfg.mamba_d_inner), dtype),
+                jnp.zeros((n_per, batch, cfg.mamba_d_inner,
+                           cfg.mamba_d_state), jnp.float32),
+            ))
+        else:
+            caches.append((jnp.zeros((n_per, 1), dtype),))
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, plan: ShardPlan, tokens,
+                caches, pos, enc_out=None, impl: str = "xla",
+                embeds=None):
+    """One decode step. tokens [B,1]; pos: scalar int32 absolute position.
+    ``embeds`` [B,1,d] overrides token embedding (VLM image prefix).
+
+    Attention caches are *carried* through the layer scan as full stacks
+    and updated one token slot at (layer, pos) — returning per-layer
+    caches as scan outputs would rewrite a whole layer slice per step
+    (§Perf iteration 3b). Recurrent states (rwkv/mamba) are small and
+    stay scan-stacked. Returns (logits [B,1,V], new caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    if embeds is not None:
+        x = embeds.astype(dtype)
+    else:
+        x = embed_lookup(params["embed"], tokens, dtype)
+    if cfg.enc_dec:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"]["table"].astype(dtype), pos, 1, 0)[None]
+    x = constrain(x, "batch", None, None)
+    period = cfg.layer_period
+    head_ax = "heads" if cfg.attention == "mla" else "kv_heads"
+    new_caches = []
+
+    for pp in range(period):
+        lp_stack = params["layers"][pp]
+        entry = caches[pp]
+        n_per = jax.tree.leaves(lp_stack)[0].shape[0]
+
+        if cfg.is_attn_layer(pp) or cfg.enc_dec:
+            sk, sv = entry[0], entry[1]
+            cross = tuple(entry[2:])          # whisper cross KV (read-only)
+
+            def body(carry, xs, pp=pp, cross=cross):
+                x, sk, sv = carry
+                lp, li = xs
+                h = apply_norm(lp["ln1"], x)
+                if cfg.attention == "mla":
+                    o, sk, sv = attn.mla_decode_absorbed_stacked(
+                        lp["attn"], cfg, plan, h, sk, sv, li, pos)
+                else:
+                    o, sk, sv = attn.decode_attn_stacked(
+                        lp["attn"], cfg, plan, h, sk, sv, li, pos,
+                        head_ax=head_ax, mla=False)
+                x = x + o
+                if cfg.enc_dec:
+                    hx = apply_norm(lp["ln_x"], x)
+                    ek = jax.lax.dynamic_slice(
+                        cross[0], (li, 0, 0, 0, 0),
+                        (1,) + cross[0].shape[1:])[0]
+                    ev = jax.lax.dynamic_slice(
+                        cross[1], (li, 0, 0, 0, 0),
+                        (1,) + cross[1].shape[1:])[0]
+                    x = x + attn.cross_full(lp["xattn"], cfg, plan, hx,
+                                            (ek, ev))
+                h = apply_norm(lp["ln2"], x)
+                if cfg.is_moe_layer(pp):
+                    o, _ = mlp_mod.moe(lp["moe"], cfg, plan, h)
+                    x = x + o
+                else:
+                    x = x + mlp_mod.apply_mlp(lp["mlp"], h, cfg.mlp_act)
+                return (x, sk, sv), None
+
+            (x, sk, sv), _ = jax.lax.scan(
+                body, (x, sk, sv),
+                (lp_stack, jnp.arange(n_per, dtype=jnp.int32)))
+            new_caches.append((sk, sv) + cross)
+            continue
+
+        def body(x, xs, pp=pp):
+            lp, ch = xs
+            h = apply_norm(lp["ln1"], x)
+            if cfg.block == "rwkv":
+                o, st = rwkv_mod.time_mix(lp["tm"], cfg, plan, h,
+                                          (ch[0], ch[1]), impl="xla")
+                x = x + o
+                ch_new = st
+            elif cfg.block == "hybrid":
+                o, st = mamba_mod.mamba_block(lp["mamba"], cfg, plan, h,
+                                              (ch[0], ch[1]), impl="xla",
+                                              chunk=1)
+                x = x + o
+                ch_new = st
+            else:
+                ch_new = ch
+            h = apply_norm(lp["ln2"], x)
+            if cfg.is_moe_layer(pp):
+                o, _ = mlp_mod.moe(lp["moe"], cfg, plan, h)
+                x = x + o
+            elif cfg.block == "rwkv":
+                o, cm_state = rwkv_mod.channel_mix(lp["cm"], cfg, h, ch[2])
+                x = x + o
+                ch_new = ch_new + (cm_state,)
+            else:
+                x = x + mlp_mod.apply_mlp(lp["mlp"], h, cfg.mlp_act)
+            return x, ch_new
+
+        x, nc = jax.lax.scan(body, x, (lp_stack, entry))
+        new_caches.append(nc)
+
+    x = apply_norm(params["final_norm"], x)
+    logits = lm_head(params.get("head", params["embed"]), x, cfg.vocab_size)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, labels, aux=0.0, aux_coef: float = 0.01):
+    """Cross-entropy with -1-masked labels + MoE aux loss."""
+    v = logits.shape[-1]
+    mask = labels >= 0
+    lab = jnp.clip(labels, 0)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, lab[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss + aux_coef * aux

@@ -1,0 +1,173 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+XLA path: the WKV recurrence runs as a scan-of-checkpointed-scans (outer
+scan over chunks, rematerialized inner scan over tokens), which bounds
+activation memory to chunk-boundary states — the TPU-training analogue of
+the CUDA kernel's recompute-in-backward. The Pallas kernel
+(kernels/wkv6) is the deployment fast path; both share the ref oracle.
+
+Heads are padded per ShardPlan exactly like attention heads (DESIGN.md §6):
+time-mix projections produce the padded head space and padded heads are
+masked before the output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense, dense_init
+from repro.sharding.axes import annot, constrain
+from repro.sharding.rules import ShardPlan
+
+_LORA_RANK = 64
+
+
+def init_time_mix(key, cfg: ModelConfig, plan: ShardPlan) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    hp = plan.n_heads_padded
+    da = hp * hs                                  # padded attention dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # ddlerp token-shift mixing coefficients for r,k,v,w,g
+        "mu": annot(jax.random.uniform(ks[0], (5, d), jnp.float32), None,
+                    "embed"),
+        "w_r": dense_init(ks[1], d, da, "embed", "heads"),
+        "w_k": dense_init(ks[2], d, da, "embed", "heads"),
+        "w_v": dense_init(ks[3], d, da, "embed", "heads"),
+        "w_g": dense_init(ks[4], d, da, "embed", "heads"),
+        # data-dependent decay: w = w0 + tanh(x_w A) B  (LoRA, §RWKV6)
+        "w0": annot(jnp.full((da,), -0.6, jnp.float32), "heads"),
+        "w_lora_a": dense_init(ks[5], d, _LORA_RANK, "embed", None),
+        "w_lora_b": dense_init(ks[6], _LORA_RANK, da, None, "heads"),
+        "u": annot(jax.random.normal(ks[7], (hp, hs), jnp.float32) * 0.1,
+                   "heads", None),
+        "ln_scale": annot(jnp.ones((da,), jnp.float32), "heads"),
+        "ln_bias": annot(jnp.zeros((da,), jnp.float32), "heads"),
+        "w_o": dense_init(ks[8], da, d, "heads", "embed"),
+    }
+    return p
+
+
+def _token_shift(x, x_prev):
+    """[B,S,d] -> previous-token stream; x_prev [B,1,d] carries across."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _wkv_sequential(r, k, v, w, u, s0, chunk: int):
+    """Scan-of-checkpointed-scans WKV. r,k,w [B,T,H,dk]; v [B,T,H,dv];
+    u [H,dk]; s0 [B,H,dk,dv]. Returns (y [B,T,H,dv], s_final)."""
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    n = max(t // chunk, 1)
+    chunk = t // n
+
+    def inner(s, xs):
+        r_t, k_t, v_t, w_t = xs                   # [B,H,dk]/[B,H,dv]
+        kv = k_t[..., :, None] * v_t[..., None, :]            # [B,H,dk,dv]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    @jax.checkpoint
+    def chunk_fn(s, xs):
+        rc, kc, vc, wc = xs                       # [B,c,H,*]
+        s, y = jax.lax.scan(inner, s,
+                            (rc.transpose(1, 0, 2, 3),
+                             kc.transpose(1, 0, 2, 3),
+                             vc.transpose(1, 0, 2, 3),
+                             wc.transpose(1, 0, 2, 3)))
+        return s, y.transpose(1, 0, 2, 3)         # [B,c,H,dv]
+
+    def reshape(x):
+        return x.reshape(b, n, chunk, *x.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    s, ys = jax.lax.scan(chunk_fn, s0,
+                         (reshape(r), reshape(k), reshape(v), reshape(w)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dv)
+    return y, s
+
+
+def _group_norm(y, scale, bias, h, hs, eps: float = 1e-5):
+    """Per-head LayerNorm (RWKV 'ln_x'). y [B,S,H*hs]."""
+    shp = y.shape
+    yf = y.astype(jnp.float32).reshape(*shp[:-1], h, hs)
+    mu = jnp.mean(yf, -1, keepdims=True)
+    var = jnp.var(yf, -1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yf = yf.reshape(shp) * scale + bias
+    return yf
+
+
+def time_mix(p, cfg: ModelConfig, plan: ShardPlan, x, state,
+             impl: str = "xla", chunk: int = 16):
+    """RWKV6 time mixing. x [B,S,d]; state = (x_prev [B,1,d],
+    s [B,H,dk,dv]). Returns (out, new_state)."""
+    b, s_len, d = x.shape
+    hs = cfg.rwkv_head_size
+    hp = plan.n_heads_padded
+    x_prev, wkv_state = state
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i] for i in range(5))
+
+    r = dense(p["w_r"], xr).reshape(b, s_len, hp, hs)
+    k = dense(p["w_k"], xk).reshape(b, s_len, hp, hs)
+    v = dense(p["w_v"], xv).reshape(b, s_len, hp, hs)
+    g = dense(p["w_g"], xg)
+    lora = jnp.tanh(dense(p["w_lora_a"], xw))
+    w_raw = p["w0"].astype(jnp.float32) \
+        + dense(p["w_lora_b"], lora, dtype=jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32)))          # decay in (0,1)
+    w = w.reshape(b, s_len, hp, hs)
+    r = constrain(r, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "heads", None)
+    v = constrain(v, "batch", "seq", "heads", None)
+
+    if impl.startswith("pallas"):
+        from repro.kernels.wkv6.ops import wkv6
+        y = wkv6(r, k, v, w, p["u"],
+                 interpret=(impl == "pallas_interpret")).astype(x.dtype)
+        # kernel starts from zero state (prefill); sequential path for
+        # stateful continuation
+        s_new = wkv_state
+    else:
+        y32, s_new = _wkv_sequential(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, p["u"].astype(jnp.float32),
+            wkv_state.astype(jnp.float32), chunk)
+        y = y32.astype(x.dtype)
+
+    y = y.reshape(b, s_len, hp * hs)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], hp, hs).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    mask = (jnp.arange(hp) < cfg.n_rwkv_heads).astype(y.dtype)
+    y = y * jnp.repeat(mask, hs)[None, None, :]
+    out = dense(p["w_o"], y)
+    new_state = (x[:, -1:], s_new)
+    return constrain(out, "batch", "seq_sp", None), new_state
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": annot(jax.random.uniform(ks[0], (2, d), jnp.float32), None,
+                    "embed"),
+        "w_k": dense_init(ks[1], d, dff, "embed", "mlp"),
+        "w_v": dense_init(ks[2], dff, d, "mlp", "embed"),
+        "w_r": dense_init(jax.random.fold_in(key, 3), d, d, "embed", None),
+    }
+
+
+def channel_mix(p, cfg: ModelConfig, x, state):
+    """RWKV channel mixing. state = x_prev [B,1,d]."""
+    xs = _token_shift(x, state)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(dense(p["w_k"], xk)))
+    k = constrain(k, "batch", "seq", "mlp")
+    out = jax.nn.sigmoid(dense(p["w_r"], xr)) * dense(p["w_v"], k)
+    return constrain(out, "batch", "seq_sp", None), x[:, -1:]

@@ -1,0 +1,283 @@
+"""Batched serving engine over the slab-paged KV cache.
+
+Decoder-only archs (all assigned archs except whisper-base, whose cross
+cache lives in the dense path). Requests are admitted via prefill, decoded
+in lockstep batches, and evicted / window-slid in O(1) — the paper's
+streaming lifecycle (ingest / search / evict) at the KV-cache level.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.common import apply_norm, embed_lookup, lm_head
+from repro.serve import kv_cache as kvc
+from repro.sharding.rules import ShardPlan
+from repro.utils import ceil_div
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, plan: ShardPlan, params,
+                 page_size: int = 16, n_pages: int = 128,
+                 max_seqs: int = 4, max_pages_per_seq: int = 32,
+                 attn_impl: str = "ref"):
+        assert not cfg.enc_dec, "paged engine covers decoder-only archs"
+        self.cfg, self.plan, self.params = cfg, plan, params
+        self.attn_impl = attn_impl
+        self.kv_cfg = kvc.PagedKVConfig(
+            n_pages=n_pages, page_size=page_size,
+            max_pages_per_seq=max_pages_per_seq, max_seqs=max_seqs)
+        self.pages = kvc.init_page_state(self.kv_cfg)
+        dt = jnp.dtype(cfg.dtype)
+        hkv = plan.n_kv_heads_padded
+        dh = cfg.head_dim
+        dv = cfg.head_dim
+        if cfg.attention == "mla":
+            # absorbed-form latent pages: one shared "kv head" of
+            # (latent + rope) keys and latent values (§Perf iteration 5)
+            hkv = 1
+            dh = cfg.kv_lora_rank + cfg.qk_rope_dim
+            dv = cfg.kv_lora_rank
+        period = cfg.layer_period
+        n_per = cfg.n_layers // period
+        self.pools = []
+        for pos in range(period):
+            if cfg.is_attn_layer(pos):
+                self.pools.append((
+                    jnp.zeros((n_per, n_pages, page_size, hkv, dh), dt),
+                    jnp.zeros((n_per, n_pages, page_size, hkv, dv), dt),
+                ))
+            elif cfg.block == "rwkv":
+                self.pools.append((
+                    jnp.zeros((n_per, max_seqs, 1, cfg.d_model), dt),
+                    jnp.zeros((n_per, max_seqs, plan.n_heads_padded,
+                               cfg.rwkv_head_size, cfg.rwkv_head_size),
+                              jnp.float32),
+                    jnp.zeros((n_per, max_seqs, 1, cfg.d_model), dt),
+                ))
+            elif cfg.block == "hybrid":
+                self.pools.append((
+                    jnp.zeros((n_per, max_seqs, cfg.mamba_d_conv - 1,
+                               cfg.mamba_d_inner), dt),
+                    jnp.zeros((n_per, max_seqs, cfg.mamba_d_inner,
+                               cfg.mamba_d_state), jnp.float32),
+                ))
+            else:
+                self.pools.append((jnp.zeros((n_per, max_seqs, 1), dt),))
+        self.last_tokens = jnp.zeros((max_seqs, 1), jnp.int32)
+        self._decode = self._build_decode()
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def admit(self, seq_id: int, tokens, prefix_embeds=None) -> bool:
+        """Prefill ``tokens`` into sequence slot ``seq_id``."""
+        from repro.models import model as M
+        cfg, plan = self.cfg, self.plan
+        toks = jnp.asarray(tokens, jnp.int32)[None, :]
+        s = toks.shape[1]
+        page = self.kv_cfg.page_size
+        n_pages = ceil_div(s + 1, page)   # +1: room for the next token
+        self.pages, ok = kvc.allocate(
+            self.kv_cfg, self.pages, jnp.int32(seq_id), int(n_pages))
+        if not bool(ok):
+            return False
+        batch = {"tokens": toks}
+        if prefix_embeds is not None:
+            batch["prefix_embeds"] = jnp.asarray(prefix_embeds)[None]
+        logits, _, caches = M.forward(self.params, cfg, plan, batch,
+                                      collect_cache=True)
+        row = self.pages.tables[seq_id]
+        pad = n_pages * page - s
+        for pos, cache in enumerate(caches):
+            if cfg.is_attn_layer(pos) and cfg.attention == "mla":
+                lat, rope = cache               # [n_per, 1, S, lat/rope]
+                k = jnp.concatenate([lat, rope], axis=-1)[:, :, :, None, :]
+                v = lat[:, :, :, None, :]
+                cache = (k, v)
+            if cfg.is_attn_layer(pos):
+                k, v = cache                    # [n_per, 1, S, hkv, dh]
+                kp, vp = self.pools[pos]
+                for arr, pool in ((k, 0), (v, 1)):
+                    a = jnp.pad(arr[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    a = a.reshape(a.shape[0], n_pages, page, *a.shape[2:])
+                    new = (kp if pool == 0 else vp).at[
+                        :, row[:n_pages]].set(a.astype(kp.dtype))
+                    if pool == 0:
+                        kp = new
+                    else:
+                        vp = new
+                self.pools[pos] = (kp, vp)
+            elif cfg.block == "rwkv":
+                xp, st, xc = cache
+                a, b, c = self.pools[pos]
+                self.pools[pos] = (
+                    a.at[:, seq_id].set(xp[:, 0].astype(a.dtype)),
+                    b.at[:, seq_id].set(st[:, 0]),
+                    c.at[:, seq_id].set(xc[:, 0].astype(c.dtype)))
+            elif cfg.block == "hybrid":
+                conv, h = cache
+                a, b = self.pools[pos]
+                self.pools[pos] = (
+                    a.at[:, seq_id].set(conv[:, 0].astype(a.dtype)),
+                    b.at[:, seq_id].set(h[:, 0]))
+        self.pages = kvc.PageState(
+            tables=self.pages.tables,
+            lengths=self.pages.lengths.at[seq_id].set(s),
+            starts=self.pages.starts,
+            offsets=self.pages.offsets,
+            active=self.pages.active,
+            free_stack=self.pages.free_stack,
+            free_top=self.pages.free_top)
+        nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        self.last_tokens = self.last_tokens.at[seq_id, 0].set(nxt)
+        return True
+
+    def evict(self, seq_id: int) -> None:
+        """O(1) eviction — pages return to the free stack, no copies."""
+        self.pages = kvc.evict_seq(self.kv_cfg, self.pages,
+                                   jnp.int32(seq_id))
+
+    def slide(self, seq_id: int, keep_last: int) -> None:
+        """Sliding window: drop pages before (length - keep_last)."""
+        new_start = jnp.maximum(
+            self.pages.lengths[seq_id] - keep_last, 0)
+        self.pages = kvc.slide_window(self.kv_cfg, self.pages,
+                                      jnp.int32(seq_id), new_start)
+
+    # -- decode ---------------------------------------------------------------
+
+    def _build_decode(self):
+        cfg, plan = self.cfg, self.plan
+        period = cfg.layer_period
+        impl = self.attn_impl
+
+        def decode(params, pools, tokens, tables, lengths, starts, offsets,
+                   active):
+            dtype = jnp.dtype(cfg.dtype)
+            x = embed_lookup(params["embed"], tokens, dtype)
+            positions = offsets + lengths
+            new_pools = []
+            for pp in range(period):
+                lp_stack = params["layers"][pp]
+                pool = pools[pp]
+
+                def body(x, xs, pp=pp):
+                    lp, ch = xs
+                    h = apply_norm(lp["ln1"], x)
+                    if cfg.is_attn_layer(pp):
+                        o, kp, vp = attn.gqa_decode_paged(
+                            lp["attn"], cfg, plan, h, ch[0], ch[1],
+                            tables, lengths, starts, positions, impl=impl) \
+                            if cfg.attention != "mla" else \
+                            _mla_paged(lp["attn"], cfg, plan, h, ch, tables,
+                                       lengths, starts, positions, impl)
+                        x = x + o
+                        ch_new = (kp, vp)
+                    elif cfg.block == "rwkv":
+                        o, st = rwkv_mod.time_mix(
+                            lp["tm"], cfg, plan, h, (ch[0], ch[1]),
+                            impl="xla")
+                        x = x + o
+                        ch_new = st
+                    elif cfg.block == "hybrid":
+                        o, st = mamba_mod.mamba_block(
+                            lp["mamba"], cfg, plan, h, (ch[0], ch[1]),
+                            impl="xla", chunk=1)
+                        x = x + o
+                        ch_new = st
+                    else:
+                        ch_new = ch
+                    h = apply_norm(lp["ln2"], x)
+                    if cfg.is_moe_layer(pp):
+                        o, _ = mlp_mod.moe(lp["moe"], cfg, plan, h)
+                        x = x + o
+                    elif cfg.block == "rwkv":
+                        o, cm = rwkv_mod.channel_mix(lp["cm"], cfg, h, ch[2])
+                        x = x + o
+                        ch_new = ch_new + (cm,)
+                    else:
+                        x = x + mlp_mod.apply_mlp(lp["mlp"], h, cfg.mlp_act)
+                    return x, ch_new
+
+                x, np_ = jax.lax.scan(body, x, (lp_stack, pool))
+                new_pools.append(np_)
+            x = apply_norm(params["final_norm"], x)
+            logits = lm_head(params.get("head", params["embed"]), x,
+                             cfg.vocab_size)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, 0)
+            return logits, nxt[:, None], new_pools
+
+        return jax.jit(decode)
+
+    def step(self) -> np.ndarray:
+        """Decode one token for every active sequence."""
+        page = self.kv_cfg.page_size
+        # page-boundary allocation (paper Alg. 2 new-slab path)
+        for seq in range(self.kv_cfg.max_seqs):
+            if bool(self.pages.active[seq]):
+                need = int(kvc.pages_needed(
+                    self.pages.lengths[seq], 1, page))
+                if need > 0:
+                    self.pages, ok = kvc.allocate(
+                        self.kv_cfg, self.pages, jnp.int32(seq), need)
+                    if not bool(ok):
+                        raise RuntimeError("page pool exhausted (fail-fast)")
+        logits, nxt, self.pools = self._decode(
+            self.params, self.pools, self.last_tokens, self.pages.tables,
+            self.pages.lengths, self.pages.starts, self.pages.offsets,
+            self.pages.active)
+        act = self.pages.active
+        self.pages = kvc.PageState(
+            tables=self.pages.tables,
+            lengths=self.pages.lengths + act.astype(jnp.int32),
+            starts=self.pages.starts,
+            offsets=self.pages.offsets,
+            active=act,
+            free_stack=self.pages.free_stack,
+            free_top=self.pages.free_top)
+        self.last_tokens = jnp.where(act[:, None], nxt, self.last_tokens)
+        return np.asarray(nxt[:, 0])
+
+
+def _mla_paged(p, cfg, plan, h, ch, tables, lengths, starts, positions,
+               impl):
+    """MLA decode over latent pages (absorbed form, §Perf iteration 5).
+
+    Pages hold one shared "kv head": keys = latent (+) rope (320 dims for
+    minicpm3), values = latent (288). The existing paged_attention kernel
+    runs unchanged with Hkv=1, g=Hq."""
+    import jax.numpy as jnp
+    from repro.models import attention as attn
+    b = h.shape[0]
+    page = ch[0].shape[1]
+    q_comb, lat_new, rope_new = attn.mla_absorbed_parts(
+        p, cfg, plan, h, positions[:, None])
+    k_new = jnp.concatenate([lat_new, rope_new], axis=-1)[:, 0, None, :]
+    v_new = lat_new[:, 0, None, :]
+    pslot = lengths // page
+    pidx = tables[jnp.arange(b), jnp.clip(pslot, 0, tables.shape[1] - 1)]
+    tgt = jnp.where(pidx >= 0, pidx, ch[0].shape[0])
+    kp = ch[0].at[tgt, lengths % page].set(
+        k_new.astype(ch[0].dtype), mode="drop")
+    vp = ch[1].at[tgt, lengths % page].set(
+        v_new.astype(ch[1].dtype), mode="drop")
+    from repro.kernels.paged_attention.ops import paged_attention
+    ctx = paged_attention(q_comb[:, 0], kp, vp, tables, lengths + 1,
+                          starts=starts, scale=cfg.qk_head_dim ** -0.5,
+                          impl="ref" if impl == "ref" else "pallas",
+                          interpret=(impl == "pallas_interpret"))
+    o = attn.mla_absorbed_out(p, cfg, ctx[:, None])          # [B,1,H,vh]
+    o = o * attn._head_mask(plan, cfg.n_heads)[None, None, :, None].astype(
+        o.dtype)
+    from repro.models.common import dense
+    out = dense(p["wo"], o.reshape(b, 1, -1))
+    return out, kp, vp

@@ -1,0 +1,139 @@
+"""Slab-paged KV cache: the paper's SDMA applied to serving (DESIGN.md §3).
+
+Mapping from SIVF (paper §3) to the KV cache:
+
+  =====================  =====================================
+  SIVF                   paged KV cache
+  =====================  =====================================
+  slab pool              page pool  [n_pages, page, Hkv, dh]
+  global free stack      page free stack + top
+  address table (ATT)    per-sequence block table [B, max_pages]
+  validity bitmap        (start, length) live window per sequence
+  lazy eviction (Alg.4)  O(1) sequence eviction / sliding-window
+                         page drop: pages pushed back to the stack,
+                         no data movement
+  =====================  =====================================
+
+All state is a functional pytree; mutation ops are jitted with donation.
+The same physical page ids index every layer's pool (vLLM-style shared
+block tables), so allocation cost is O(new_pages), independent of model
+depth and sequence count — the paper's O(1) claim carried over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    n_pages: int
+    page_size: int
+    max_pages_per_seq: int
+    max_seqs: int
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["tables", "lengths", "starts", "offsets", "active",
+                      "free_stack", "free_top"],
+         meta_fields=[])
+@dataclasses.dataclass
+class PageState:
+    tables: jax.Array      # [max_seqs, max_pages] int32 page ids (-1)
+    lengths: jax.Array     # [max_seqs] int32 tokens written (cache coords)
+    starts: jax.Array      # [max_seqs] int32 window start (cache coords)
+    offsets: jax.Array     # [max_seqs] int32 absolute-position offset
+                           #   (tokens dropped by sliding windows so far)
+    active: jax.Array      # [max_seqs] bool
+    free_stack: jax.Array  # [n_pages] int32
+    free_top: jax.Array    # [] int32
+
+
+def init_page_state(cfg: PagedKVConfig) -> PageState:
+    return PageState(
+        tables=jnp.full((cfg.max_seqs, cfg.max_pages_per_seq), -1, jnp.int32),
+        lengths=jnp.zeros((cfg.max_seqs,), jnp.int32),
+        starts=jnp.zeros((cfg.max_seqs,), jnp.int32),
+        offsets=jnp.zeros((cfg.max_seqs,), jnp.int32),
+        active=jnp.zeros((cfg.max_seqs,), bool),
+        free_stack=jnp.arange(cfg.n_pages, dtype=jnp.int32),
+        free_top=jnp.array(cfg.n_pages, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_new"), donate_argnums=(1,))
+def allocate(cfg: PagedKVConfig, st: PageState, seq: jax.Array,
+             n_new: int) -> tuple[PageState, jax.Array]:
+    """Pop ``n_new`` pages for ``seq`` (paper Alg. 1 Allocate). Returns
+    (state, ok)."""
+    have = jnp.sum(st.tables[seq] >= 0)
+    ok = (st.free_top >= n_new) & (have + n_new <= cfg.max_pages_per_seq)
+    idx = jnp.arange(n_new)
+    pages = st.free_stack[jnp.clip(st.free_top - 1 - idx, 0)]
+    tgt = jnp.where(ok, seq, cfg.max_seqs)
+    tables = st.tables.at[tgt, have + idx].set(pages, mode="drop")
+    return PageState(
+        tables=tables, lengths=st.lengths, starts=st.starts,
+        offsets=st.offsets,
+        active=st.active.at[tgt].set(True, mode="drop"),
+        free_stack=st.free_stack,
+        free_top=st.free_top - jnp.where(ok, n_new, 0)), ok
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def evict_seq(cfg: PagedKVConfig, st: PageState, seq: jax.Array
+              ) -> PageState:
+    """O(1) sequence eviction (paper Alg. 4): push the sequence's pages
+    back onto the free stack; no data movement."""
+    row = st.tables[seq]                                   # [max_pages]
+    used = row >= 0
+    n = jnp.sum(used)
+    dst = jnp.cumsum(used) - 1
+    stack = st.free_stack.at[
+        jnp.where(used, st.free_top + dst, cfg.n_pages)].set(
+        row, mode="drop")
+    return PageState(
+        tables=st.tables.at[seq].set(-1),
+        lengths=st.lengths.at[seq].set(0),
+        starts=st.starts.at[seq].set(0),
+        offsets=st.offsets.at[seq].set(0),
+        active=st.active.at[seq].set(False),
+        free_stack=stack,
+        free_top=st.free_top + n)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def slide_window(cfg: PagedKVConfig, st: PageState, seq: jax.Array,
+                 new_start: jax.Array) -> PageState:
+    """Sliding-window eviction: free whole pages that fall before
+    ``new_start`` (the paper's streaming-window eviction, §5.5)."""
+    row = st.tables[seq]
+    first_live_page = new_start // cfg.page_size
+    pidx = jnp.arange(cfg.max_pages_per_seq)
+    drop = (pidx < first_live_page) & (row >= 0)
+    n = jnp.sum(drop)
+    dst = jnp.cumsum(drop) - 1
+    stack = st.free_stack.at[
+        jnp.where(drop, st.free_top + dst, cfg.n_pages)].set(
+        row, mode="drop")
+    # compact the table: shift remaining pages down, adjust start offset
+    keep = ~drop & (row >= 0)
+    kdst = jnp.cumsum(keep) - 1
+    new_row = jnp.full_like(row, -1).at[
+        jnp.where(keep, kdst, cfg.max_pages_per_seq)].set(row, mode="drop")
+    return PageState(
+        tables=st.tables.at[seq].set(new_row),
+        lengths=st.lengths.at[seq].add(-n * cfg.page_size),
+        starts=st.starts.at[seq].set(new_start - n * cfg.page_size),
+        offsets=st.offsets.at[seq].add(n * cfg.page_size),
+        active=st.active,
+        free_stack=stack,
+        free_top=st.free_top + n)
+
+
+def pages_needed(length: jax.Array, add: int, page: int) -> jax.Array:
+    """Pages to allocate so ``length + add`` tokens fit."""
+    return (length + add + page - 1) // page - (length + page - 1) // page

@@ -1,0 +1,94 @@
+"""Logical-axis sharding (MaxText-style rules tables).
+
+Model code annotates params and activations with *logical* axis names
+("batch", "seq", "heads", "mlp", "vocab", "expert", ...). A rules table —
+chosen per (arch, mesh) by ``repro.sharding.rules`` — maps logical names to
+mesh axes. Outside a mesh context the constraints are no-ops, so the same
+model code runs single-device tests and 512-chip dry-runs unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass
+class Annot:
+    """A parameter annotated with logical axes (one name or None per dim).
+
+    Registered as a pytree node (value is the child, axes are aux data) so
+    annotated trees flow through jax.eval_shape — the dry-run builds
+    abstract param trees without materializing 50B params.
+    """
+    v: Any
+    ax: tuple
+
+
+jax.tree_util.register_pytree_node(
+    Annot,
+    lambda a: ((a.v,), a.ax),
+    lambda ax, ch: Annot(ch[0], ax),
+)
+
+
+def annot(v, *ax) -> Annot:
+    assert v.ndim == len(ax), (v.shape, ax)
+    return Annot(v, tuple(ax))
+
+
+def _is_annot(x) -> bool:
+    return isinstance(x, Annot)
+
+
+def strip(tree):
+    """Annotated param tree -> plain array tree."""
+    return jax.tree.map(lambda a: a.v, tree, is_leaf=_is_annot)
+
+
+def logical_axes(tree):
+    """Annotated param tree -> logical-axes tree (same structure)."""
+    return jax.tree.map(lambda a: a.ax, tree, is_leaf=_is_annot)
+
+
+def current_rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict):
+    """Activate a logical->mesh rules table for constraints below."""
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def spec_for(ax: tuple, rules: dict | None = None) -> P:
+    """Resolve logical axes -> PartitionSpec under the given rules."""
+    rules = current_rules() if rules is None else rules
+    if rules is None:
+        return P()
+    return P(*(rules.get(a) if a is not None else None for a in ax))
+
+
+def constrain(x, *ax):
+    """with_sharding_constraint by logical axes; no-op without rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_for(ax, rules))
+
+
+def specs_tree(annot_tree, rules: dict | None = None):
+    """Annotated param tree -> PartitionSpec tree (for jit in_shardings)."""
+    return jax.tree.map(lambda a: spec_for(a.ax, rules), annot_tree,
+                        is_leaf=_is_annot)

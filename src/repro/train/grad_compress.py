@@ -1,0 +1,62 @@
+"""Error-feedback int8 gradient compression for cross-pod reduction.
+
+Distributed-optimization trick for the thin cross-pod links: gradients are
+quantized to int8 with a per-tensor scale before the cross-pod all-reduce,
+and the quantization residual is fed back into the next step's gradients
+(error feedback keeps SGD/Adam convergence; 1-bit-Adam-style). Intra-pod
+reduction stays full precision — only the "pod" axis pays the compression.
+
+Used by train_step when ``compress_pod_grads`` is on: grads are computed
+with per-pod psum only (shard_map over "pod"), compressed, all-reduced over
+"pod", decompressed, and residual carried in the train state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residual):
+    """Quantize grads+residual; return (int8 tree, scales, new residual)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return q, s, gf - deq
+
+    out = jax.tree.map(one, grads, residual)
+    istuple = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=istuple)
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=istuple)
+    res = jax.tree.map(lambda t: t[2], out, is_leaf=istuple)
+    return q, s, res
+
+
+def psum_compressed(q, s, axis: str):
+    """All-reduce compressed grads over ``axis``.
+
+    int8 payloads are summed in int32 (values bounded by 127 * pod_count)
+    and rescaled by the mean scale — a mean-of-quantized estimator.
+    """
+    n = jax.lax.psum(1, axis)
+    qs = jax.tree.map(
+        lambda x: jax.lax.psum(x.astype(jnp.int32), axis), q)
+    ss = jax.tree.map(lambda x: jax.lax.psum(x, axis) / n, s)
+    return jax.tree.map(
+        lambda qi, si: qi.astype(jnp.float32) * si / n, qs, ss)
+
+
+def init_residual(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

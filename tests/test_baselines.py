@@ -1,0 +1,71 @@
+"""Baselines used in the paper's comparisons (§5.7 Table 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import ContiguousIVF, FlatIndex, HNSWLite, LSHIndex
+from repro.core import ReferenceIndex, train_kmeans
+
+D = 24
+
+
+@pytest.fixture
+def data(rng):
+    vecs = rng.normal(size=(250, D)).astype(np.float32)
+    ids = np.arange(250, dtype=np.int32)
+    qs = rng.normal(size=(5, D)).astype(np.float32)
+    ref = ReferenceIndex(np.zeros((1, D), np.float32))
+    ref.insert(vecs, ids)
+    ref.delete(ids[::2])
+    return vecs, ids, qs, ref
+
+
+def test_flat_exact(data):
+    vecs, ids, qs, ref = data
+    ix = FlatIndex(D, 512)
+    ix.insert(vecs, ids)
+    ix.delete(ids[::2])
+    d, l = ix.search(qs, 5)
+    rd, rl = ref.search(qs, 5, 1)
+    np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(l) == rl).all()
+    assert ix.n_live == ref.n_live
+
+
+def test_contiguous_ivf_exact_full_probe(data, rng):
+    vecs, ids, qs, ref = data
+    cents = np.asarray(train_kmeans(jax.random.key(0), jnp.asarray(vecs), 8))
+    ix = ContiguousIVF(cents, list_cap=8)
+    ix.insert(vecs, ids)
+    assert ix.n_relayouts > 0          # 2x growth exercised
+    ix.delete(ids[::2])
+    d, l = ix.search(qs, 5, 8)
+    rd, rl = ref.search(qs, 5, 1)
+    np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(l) == rl).all()
+
+
+def test_lsh_recall_reasonable(data):
+    vecs, ids, qs, ref = data
+    ix = LSHIndex(jax.random.key(1), D, n_tables=6, bits=4, bucket_cap=128)
+    ix.insert(vecs, ids)
+    ix.delete(ids[::2])
+    d, l = ix.search(qs, 5)
+    rd, rl = ref.search(qs, 5, 1)
+    rec = np.mean([len(set(np.asarray(l)[i].tolist())
+                       & set(rl[i].tolist())) / 5 for i in range(len(qs))])
+    assert rec > 0.3
+
+
+def test_hnsw_lite_recall_and_rebuild(data):
+    vecs, ids, qs, ref = data
+    ix = HNSWLite(D, m=8, ef=48)
+    ix.insert(vecs, ids)
+    ix.delete(ids[::2])                # forces full rebuild
+    assert ix.n_live == ref.n_live
+    d, l = ix.search(qs, 5)
+    rd, rl = ref.search(qs, 5, 1)
+    rec = np.mean([len(set(np.asarray(l)[i].tolist())
+                       & set(rl[i].tolist())) / 5 for i in range(len(qs))])
+    assert rec > 0.7

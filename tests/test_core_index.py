@@ -1,0 +1,177 @@
+"""SIVF core behaviour vs the reference model (paper §3 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+D, NL = 16, 8
+
+
+def make(rng, capacity=32, n_slabs=64, metric="l2", max_chain=16):
+    cfg = core.SIVFConfig(dim=D, n_lists=NL, n_slabs=n_slabs,
+                          capacity=capacity, n_max=4096, metric=metric,
+                          max_chain=max_chain)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    return cfg, core.init_state(cfg, jnp.asarray(cents)), \
+        core.ReferenceIndex(cents, metric)
+
+
+def insert(cfg, state, ref, rng, ids):
+    vecs = rng.normal(size=(len(ids), D)).astype(np.float32)
+    state = core.insert(cfg, state, jnp.asarray(vecs),
+                        jnp.asarray(ids, np.int32))
+    ref.insert(vecs, ids)
+    return state
+
+
+def check_search(cfg, state, ref, rng, k=5, nprobe=NL, q=6):
+    qs = rng.normal(size=(q, D)).astype(np.float32)
+    d, l = core.search(cfg, state, jnp.asarray(qs), k, nprobe)
+    rd, rl = ref.search(qs, k, nprobe)
+    np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(l) == rl).all()
+
+
+def test_insert_search_exact(rng):
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(200))
+    assert int(state.n_live) == ref.n_live == 200
+    assert int(state.error) == 0
+    check_search(cfg, state, ref, rng)
+
+
+def test_delete_matches_reference(rng):
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(200))
+    dels = np.arange(0, 200, 3)
+    state = core.delete(cfg, state, jnp.asarray(dels, np.int32))
+    ref.delete(dels)
+    assert int(state.n_live) == ref.n_live
+    check_search(cfg, state, ref, rng)
+
+
+def test_delete_idempotent(rng):
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(50))
+    ids = np.array([1, 1, 2, 2, 2, 999], np.int32)   # dupes + absent
+    state = core.delete(cfg, state, jnp.asarray(ids))
+    state = core.delete(cfg, state, jnp.asarray(ids))  # repeat: no-op
+    ref.delete(ids)
+    assert int(state.n_live) == ref.n_live == 48
+
+
+def test_overwrite_delete_then_insert(rng):
+    """Paper Data Model: re-inserting an id replaces its payload."""
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(64))
+    state = insert(cfg, state, ref, rng, np.arange(10))   # overwrite 0..9
+    assert int(state.n_live) == ref.n_live == 64
+    check_search(cfg, state, ref, rng)
+
+
+def test_within_batch_duplicates_keep_last(rng):
+    cfg, state, ref = make(rng)
+    vecs = rng.normal(size=(4, D)).astype(np.float32)
+    ids = np.array([7, 7, 7, 8], np.int32)
+    state = core.insert(cfg, state, jnp.asarray(vecs), jnp.asarray(ids))
+    ref.insert(vecs, ids)   # dict semantics: last wins
+    assert int(state.n_live) == ref.n_live == 2
+    check_search(cfg, state, ref, rng, k=2)
+
+
+def test_full_delete_recycles_all_slabs(rng):
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(300))
+    state = core.delete(cfg, state, jnp.asarray(np.arange(300), np.int32))
+    st = core.stats(cfg, state)
+    assert st["n_live"] == 0
+    assert st["free_slabs"] == cfg.n_slabs      # instant reclamation
+    assert st["error"] == 0
+    # pool reusable after full churn
+    ref.delete(np.arange(300))
+    state = insert(cfg, state, ref, rng, np.arange(300))
+    assert int(state.error) == 0
+    check_search(cfg, state, ref, rng)
+
+
+def test_pool_exhaustion_fails_fast(rng):
+    cfg, state, ref = make(rng, n_slabs=8, max_chain=8)
+    n = cfg.n_slabs * cfg.capacity + 1
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    state = core.insert(cfg, state, jnp.asarray(vecs),
+                        jnp.asarray(np.arange(n), np.int32))
+    assert int(state.error) & core.ERR_POOL_EXHAUSTED
+    assert int(state.n_live) == 0               # batch rejected atomically
+
+
+def test_id_out_of_range_flagged(rng):
+    cfg, state, ref = make(rng)
+    vecs = rng.normal(size=(2, D)).astype(np.float32)
+    state = core.insert(cfg, state, jnp.asarray(vecs),
+                        jnp.asarray([1, cfg.n_max + 5], np.int32))
+    assert int(state.error) & core.ERR_ID_RANGE
+    assert int(state.n_live) == 1
+
+
+def test_pointer_walk_equals_table_path(rng):
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(150))
+    state = core.delete(cfg, state, jnp.asarray(np.arange(0, 150, 2),
+                                                np.int32))
+    qs = rng.normal(size=(4, D)).astype(np.float32)
+    d1, l1 = core.search(cfg, state, jnp.asarray(qs), 5, NL, use_tables=True)
+    d2, l2 = core.search(cfg, state, jnp.asarray(qs), 5, NL,
+                         use_tables=False)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+
+
+def test_nprobe_subset(rng):
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(256))
+    for nprobe in (1, 2, 4):
+        qs = rng.normal(size=(5, D)).astype(np.float32)
+        d, l = core.search(cfg, state, jnp.asarray(qs), 4, nprobe)
+        rd, rl = ref.search(qs, 4, nprobe)
+        np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+        assert (np.asarray(l) == rl).all()
+
+
+def test_ip_metric(rng):
+    cfg, state, ref = make(rng, metric="ip")
+    state = insert(cfg, state, ref, rng, np.arange(100))
+    check_search(cfg, state, ref, rng)
+
+
+def test_capacity_128_lane_width(rng):
+    """TPU-default slab capacity (C = lane width)."""
+    cfg, state, ref = make(rng, capacity=128, n_slabs=16)
+    state = insert(cfg, state, ref, rng, np.arange(300))
+    check_search(cfg, state, ref, rng)
+
+
+def test_bitmap_live_invariant(rng):
+    """live counters == popcount(bitmap) for every slab."""
+    from repro.core import bitmap as bm
+    cfg, state, ref = make(rng)
+    state = insert(cfg, state, ref, rng, np.arange(200))
+    state = core.delete(cfg, state,
+                        jnp.asarray(np.arange(0, 200, 5), np.int32))
+    pop = bm.popcount_rows(state.bitmap)
+    assert (np.asarray(pop) == np.asarray(state.live)).all()
+    assert int(jnp.sum(pop)) == int(state.n_live)
+
+
+def test_memory_overhead_below_one_percent():
+    """Paper §5.6.2: metadata overhead < 1% for SIFT-like payloads."""
+    cfg = core.SIVFConfig(dim=128, n_lists=1024, n_slabs=8192, capacity=128,
+                          n_max=1 << 20)
+    rep = core.memory_report(cfg)
+    assert rep["overhead_frac_vs_payload"] < 0.08
+    # GIST-like high dim: well under 1%
+    cfg = core.SIVFConfig(dim=960, n_lists=1024, n_slabs=8192, capacity=128,
+                          n_max=1 << 20)
+    rep = core.memory_report(cfg)
+    assert rep["overhead_frac_vs_payload"] < 0.01

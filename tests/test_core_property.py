@@ -1,0 +1,101 @@
+"""Hypothesis property tests: arbitrary op sequences vs the dict model.
+
+The linearizability theorems (paper §3.5) reduce, under JAX value
+semantics, to: any interleaving of batched insert / overwrite / delete
+observed through search is equivalent to the same sequence applied to a
+python dict — searches never surface dead or stale vectors and never miss
+live ones.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+
+D, NL = 8, 4
+CFG = core.SIVFConfig(dim=D, n_lists=NL, n_slabs=48, capacity=32,
+                      n_max=256, max_chain=12)
+_CENTS = np.random.default_rng(42).normal(size=(NL, D)).astype(np.float32)
+
+
+def _vec(rng, i):
+    return rng.normal(size=(D,)).astype(np.float32)
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["insert", "delete"]),
+        st.lists(st.integers(0, 63), min_size=1, max_size=12),
+    ),
+    min_size=1, max_size=10,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
+def test_op_sequences_match_reference(ops, seed):
+    rng = np.random.default_rng(seed)
+    state = core.init_state(CFG, jnp.asarray(_CENTS))
+    ref = core.ReferenceIndex(_CENTS)
+    for kind, ids in ops:
+        ids = np.asarray(ids, np.int32)
+        if kind == "insert":
+            vecs = rng.normal(size=(len(ids), D)).astype(np.float32)
+            state = core.insert(CFG, state, jnp.asarray(vecs),
+                                jnp.asarray(ids))
+            # dict semantics: later batch rows win
+            for v, i in zip(vecs, ids):
+                ref.store[int(i)] = v
+        else:
+            state = core.delete(CFG, state, jnp.asarray(ids))
+            ref.delete(ids)
+        assert int(state.error) == 0
+        assert int(state.n_live) == ref.n_live
+
+    # full-probe search must agree exactly (ties are measure-zero)
+    qs = rng.normal(size=(3, D)).astype(np.float32)
+    k = 4
+    d, l = core.search(CFG, state, jnp.asarray(qs), k, NL)
+    rd, rl = ref.search(qs, k, NL)
+    np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(l) == rl).all()
+
+    # structural invariants
+    from repro.core import bitmap as bm
+    pop = np.asarray(bm.popcount_rows(state.bitmap))
+    assert (pop == np.asarray(state.live)).all()
+    # free stack entries + used slabs account for the whole pool
+    used = int(CFG.n_slabs - state.free_top)
+    assert used == int(np.sum(np.asarray(state.owner) >= 0))
+    # no slab id appears twice in (free stack tail + owned set)
+    free = set(np.asarray(state.free_stack)[: int(state.free_top)].tolist())
+    owned = set(np.nonzero(np.asarray(state.owner) >= 0)[0].tolist())
+    assert not (free & owned)
+    assert len(free) == int(state.free_top)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       window=st.integers(8, 32), batch=st.integers(4, 16))
+def test_sliding_window_churn(seed, window, batch):
+    """Paper §5.5 sliding-window: net live count stays == window size."""
+    rng = np.random.default_rng(seed)
+    state = core.init_state(CFG, jnp.asarray(_CENTS))
+    ref = core.ReferenceIndex(_CENTS)
+    next_id = 0
+    for step in range(6):
+        ids = (np.arange(batch) + next_id) % CFG.n_max
+        next_id += batch
+        vecs = rng.normal(size=(batch, D)).astype(np.float32)
+        state = core.insert(CFG, state, jnp.asarray(vecs),
+                            jnp.asarray(ids, np.int32))
+        ref.insert(vecs, ids)
+        if next_id > window:
+            evict = np.arange(next_id - window - batch,
+                              next_id - window) % CFG.n_max
+            evict = evict[evict < next_id]
+            state = core.delete(CFG, state,
+                                jnp.asarray(evict, np.int32))
+            ref.delete(evict)
+        assert int(state.n_live) == ref.n_live
+        assert int(state.error) == 0

@@ -1,0 +1,89 @@
+"""Distributed behaviour on fake devices (subprocess: device count must be
+set before jax initializes, so these run isolated)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+_DIST_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro import core
+from repro.core import distributed as dist
+
+rng = np.random.default_rng(1)
+D, NL = 16, 8
+cfg = core.SIVFConfig(dim=D, n_lists=NL, n_slabs=32, capacity=32,
+                      n_max=4096, max_chain=8)
+cents = rng.normal(size=(NL, D)).astype(np.float32)
+mesh = jax.make_mesh((4,), ("data",))
+state = dist.init_sharded_state(cfg, jnp.asarray(cents), mesh)
+ref = core.ReferenceIndex(cents)
+
+B = 64
+vecs = rng.normal(size=(B, D)).astype(np.float32)
+ids = np.arange(B, dtype=np.int32)
+state = dist.dist_insert(cfg, mesh, state, jnp.asarray(vecs), jnp.asarray(ids))
+ref.insert(vecs, ids)
+assert dist.total_live(state) == ref.n_live
+
+qs = rng.normal(size=(4, D)).astype(np.float32)
+d, l = dist.dist_search(cfg, mesh, state, jnp.asarray(qs), 5, NL)
+rd, rl = ref.search(qs, 5, NL)
+np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+assert (np.asarray(l) == rl).all()
+
+state = dist.dist_delete(cfg, mesh, state, jnp.asarray(ids[::2]))
+ref.delete(ids[::2])
+assert dist.total_live(state) == ref.n_live
+d, l = dist.dist_search(cfg, mesh, state, jnp.asarray(qs), 5, NL)
+rd, rl = ref.search(qs, 5, NL)
+np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+print(json.dumps({"ok": True, "live": dist.total_live(state)}))
+"""
+
+_DRYRUN_SCRIPT = r"""
+import os, sys
+os.environ["REPRO_DRYRUN_DEVICES"] = "8"
+os.environ["REPRO_DRYRUN_MESH"] = "2,2"
+sys.argv = ["dryrun", "--arch", "llama3-8b", "--shape", "decode_32k",
+            "--mesh", "both", "--out", sys.argv[1]]
+from repro.launch import dryrun
+dryrun.main()
+"""
+
+
+def _run(script, *args):
+    return subprocess.run(
+        [sys.executable, "-c", script, *args], capture_output=True,
+        text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd="/root/repo")
+
+
+def test_sharded_sivf_scatter_gather():
+    """Paper §4.2: data-sharded insert, scatter-gather search, broadcast
+    delete across 4 shards match the reference model exactly."""
+    r = _run(_DIST_SCRIPT)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["live"] == 32
+
+
+def test_dryrun_cell_compiles(tmp_path):
+    """dryrun.py lowers+compiles a (arch x shape) cell on a reduced mesh on
+    both single- and multi-pod layouts (smoke for the real 512-dev sweep)."""
+    out = tmp_path / "res.json"
+    r = _run(_DRYRUN_SCRIPT, str(out))
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    res = json.loads(out.read_text())
+    assert res["llama3-8b|decode_32k|single"]["status"] == "ok"
+    assert res["llama3-8b|decode_32k|multi"]["status"] == "ok"
+    cell = res["llama3-8b|decode_32k|single"]
+    assert cell["hlo_flops"] > 0
+    assert cell["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                            "collective_s")

@@ -1,0 +1,202 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+
+# -- sivf_scan ----------------------------------------------------------------
+
+@pytest.mark.parametrize("capacity,d,metric", [
+    (32, 16, "l2"), (64, 32, "l2"), (128, 128, "l2"), (32, 16, "ip"),
+])
+def test_sivf_scan_sweep(rng, capacity, d, metric):
+    from repro.kernels.sivf_scan import ops as scan_ops
+    from repro.kernels.sivf_scan.ref import sivf_scan_ref
+    nl = 4
+    cfg = core.SIVFConfig(dim=d, n_lists=nl, n_slabs=16, capacity=capacity,
+                          n_max=2048, metric=metric, max_chain=8)
+    cents = rng.normal(size=(nl, d)).astype(np.float32)
+    state = core.init_state(cfg, jnp.asarray(cents))
+    n = 200
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    state = core.insert(cfg, state, jnp.asarray(vecs),
+                        jnp.asarray(np.arange(n), np.int32))
+    state = core.delete(cfg, state, jnp.asarray(np.arange(0, n, 3),
+                                                np.int32))
+    qs = rng.normal(size=(4, d)).astype(np.float32)
+    lists = core.probe(state.centroids, jnp.asarray(qs), 2)
+    table = core.gather_tables(cfg, state, lists)
+    args = (jnp.asarray(qs), table, state.data, state.ids, state.norms,
+            state.bitmap)
+    dr, lr = sivf_scan_ref(*args, metric=metric)
+    dp, lp = scan_ops.sivf_scan(*args, metric=metric, interpret=True)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr), rtol=1e-5,
+                               atol=1e-5)
+    assert (np.asarray(lp) == np.asarray(lr)).all()
+
+
+# -- topk ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,l,k", [(8, 64, 5), (16, 256, 17), (3, 128, 1)])
+def test_topk_sweep(rng, q, l, k):
+    from repro.kernels.topk import ops as topk_ops
+    from repro.kernels.topk.ref import topk_ref
+    d = rng.normal(size=(q, l)).astype(np.float32)
+    d[rng.random(size=(q, l)) < 0.2] = np.inf      # dead slots
+    lab = rng.integers(0, 1000, (q, l)).astype(np.int32)
+    td, tl = topk_ops.topk(jnp.asarray(d), jnp.asarray(lab), k,
+                           interpret=True)
+    rd, rl = topk_ref(jnp.asarray(d), jnp.asarray(lab), k)
+    np.testing.assert_allclose(np.asarray(td), np.asarray(rd), rtol=1e-6)
+    # labels may differ only where distances tie / are inf
+    mism = np.asarray(tl) != np.asarray(rl)
+    assert not (mism & np.isfinite(np.asarray(rd))).any()
+
+
+# -- flash attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,sk,hq,hkv,dh,causal,dtype", [
+    (64, 64, 4, 2, 32, True, jnp.float32),
+    (64, 64, 4, 4, 16, False, jnp.float32),
+    (32, 64, 2, 1, 64, True, jnp.float32),   # chunked decode window
+    (64, 64, 4, 2, 32, True, jnp.bfloat16),
+])
+def test_flash_attention_sweep(rng, sq, sk, hq, hkv, dh, causal, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import mha_ref
+    b = 2
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, dh)), dtype)
+    o1 = flash_attention(q, k, v, causal=causal, interpret=True,
+                         block_q=32, block_k=32)
+    o2 = mha_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol,
+                               atol=tol)
+
+
+# -- paged attention -------------------------------------------------------------
+
+@pytest.mark.parametrize("page,maxp,hq,hkv,dh", [
+    (16, 4, 4, 2, 32), (32, 3, 2, 2, 64), (8, 6, 8, 2, 16),
+])
+def test_paged_attention_sweep(rng, page, maxp, hq, hkv, dh):
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    b, n_pages = 3, 24
+    q = rng.normal(size=(b, hq, dh)).astype(np.float32)
+    kp = rng.normal(size=(n_pages, page, hkv, dh)).astype(np.float32)
+    vp = rng.normal(size=(n_pages, page, hkv, dh)).astype(np.float32)
+    tables = np.full((b, maxp), -1, np.int32)
+    lengths = np.zeros((b,), np.int32)
+    starts = np.zeros((b,), np.int32)
+    perm = rng.permutation(n_pages)
+    c = 0
+    for i in range(b):
+        n = int(rng.integers(1, maxp + 1))
+        tables[i, :n] = perm[c: c + n]
+        c += n
+        lengths[i] = int(rng.integers(1, n * page + 1))
+        starts[i] = int(rng.integers(0, lengths[i]))
+    args = (jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(tables), jnp.asarray(lengths))
+    o1 = paged_attention(*args, starts=jnp.asarray(starts), interpret=True)
+    o2 = paged_attention_ref(*args, starts=jnp.asarray(starts))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)
+
+
+# -- wkv6 -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,h,dk,dv", [(8, 2, 8, 8), (16, 3, 16, 16)])
+def test_wkv6_sweep(rng, t, h, dk, dv):
+    from repro.kernels.wkv6.ops import wkv6
+    from repro.kernels.wkv6.ref import wkv6_ref
+    b = 2
+    r = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, t, h, dv)).astype(np.float32)
+    w = rng.uniform(0.2, 0.99, size=(b, t, h, dk)).astype(np.float32)
+    u = rng.normal(size=(h, dk)).astype(np.float32)
+    o1 = wkv6(r, k, v, w, u, interpret=True)
+    o2 = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_wkv6_matches_model_sequential_path(rng):
+    """The model's scan-of-checkpointed-scans == the kernel == the ref."""
+    from repro.kernels.wkv6.ref import wkv6_ref
+    from repro.models.rwkv import _wkv_sequential
+    b, t, h, dk = 2, 16, 2, 8
+    r = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    w = rng.uniform(0.2, 0.99, size=(b, t, h, dk)).astype(np.float32)
+    u = rng.normal(size=(h, dk)).astype(np.float32)
+    s0 = np.zeros((b, h, dk, dk), np.float32)
+    y, _ = _wkv_sequential(jnp.asarray(r), jnp.asarray(k), jnp.asarray(v),
+                           jnp.asarray(w), jnp.asarray(u), jnp.asarray(s0),
+                           chunk=4)
+    ref = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+# -- mamba scan -------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,di,n,bd", [(8, 16, 4, 8), (12, 32, 8, 16)])
+def test_mamba_scan_sweep(rng, t, di, n, bd):
+    from repro.kernels.mamba_scan.ops import mamba_scan
+    from repro.kernels.mamba_scan.ref import mamba_scan_ref
+    b = 2
+    u = rng.normal(size=(b, t, di)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, size=(b, t, di)).astype(np.float32)
+    a = -rng.uniform(0.5, 2, size=(di, n)).astype(np.float32)
+    bb = rng.normal(size=(b, t, n)).astype(np.float32)
+    cc = rng.normal(size=(b, t, n)).astype(np.float32)
+    dd = rng.normal(size=(di,)).astype(np.float32)
+    o1 = mamba_scan(u, dt, a, bb, cc, dd, interpret=True, block_d=bd)
+    o2 = mamba_scan_ref(u, dt, a, bb, cc, dd)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_mamba_matches_model_sequential_path(rng):
+    from repro.kernels.mamba_scan.ref import mamba_scan_ref
+    from repro.models.mamba import _ssm_sequential
+    b, t, di, n = 2, 16, 8, 4
+    u = rng.normal(size=(b, t, di)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, size=(b, t, di)).astype(np.float32)
+    a = -rng.uniform(0.5, 2, size=(di, n)).astype(np.float32)
+    bb = rng.normal(size=(b, t, n)).astype(np.float32)
+    cc = rng.normal(size=(b, t, n)).astype(np.float32)
+    dd = rng.normal(size=(di,)).astype(np.float32)
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    y, _ = _ssm_sequential(jnp.asarray(u), jnp.asarray(dt), jnp.asarray(a),
+                           jnp.asarray(bb), jnp.asarray(cc),
+                           jnp.asarray(dd), h0, chunk=4)
+    ref = mamba_scan_ref(u, dt, a, bb, cc, dd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+# -- chunked attention (xla fast path) ----------------------------------------------
+
+def test_chunked_sdpa_matches_direct(rng):
+    from repro.models.attention import _sdpa_chunked, _sdpa_grouped
+    b, s, hq, hkv, dh = 2, 4096, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    pos = jnp.arange(s)
+    for causal in (True, False):
+        a = _sdpa_grouped(q, k, v, pos, pos, causal, dh ** -0.5)
+        c = _sdpa_chunked(q, k, v, pos, pos, causal, dh ** -0.5)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5,
+                                   atol=1e-5)

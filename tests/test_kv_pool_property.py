@@ -1,0 +1,80 @@
+"""Hypothesis property tests for the slab-paged KV pool (serve/kv_cache).
+
+Same invariants the paper's SlabManager guarantees (§3.1/§3.4), applied to
+the serving pool: no page handed out twice, conservation of the pool,
+eviction returns exactly the owned pages, sliding windows keep
+cache-coordinate/absolute-position bookkeeping consistent.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import kv_cache as kvc
+
+CFG = kvc.PagedKVConfig(n_pages=32, page_size=4, max_pages_per_seq=8,
+                        max_seqs=4)
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(0, 3), st.integers(1, 3)),
+        st.tuples(st.just("evict"), st.integers(0, 3), st.just(0)),
+        st.tuples(st.just("grow"), st.integers(0, 3), st.integers(1, 6)),
+        st.tuples(st.just("slide"), st.integers(0, 3), st.integers(0, 10)),
+    ),
+    min_size=1, max_size=24,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops)
+def test_page_pool_invariants(ops):
+    st_ = kvc.init_page_state(CFG)
+    model = {i: 0 for i in range(CFG.max_seqs)}   # seq -> token length
+
+    for kind, seq, arg in ops:
+        if kind == "alloc":
+            st_, ok = kvc.allocate(CFG, st_, jnp.int32(seq), arg)
+        elif kind == "evict":
+            st_ = kvc.evict_seq(CFG, st_, jnp.int32(seq))
+            model[seq] = 0
+        elif kind == "grow":
+            # append `arg` tokens if pages allow
+            need = int(kvc.pages_needed(st_.lengths[seq], arg,
+                                        CFG.page_size))
+            if need:
+                st_, ok = kvc.allocate(CFG, st_, jnp.int32(seq), need)
+                if not bool(ok):
+                    continue
+            have = int(np.sum(np.asarray(st_.tables[seq]) >= 0))
+            if (model[seq] + arg) <= have * CFG.page_size:
+                st_ = kvc.PageState(
+                    tables=st_.tables,
+                    lengths=st_.lengths.at[seq].add(arg),
+                    starts=st_.starts, offsets=st_.offsets,
+                    active=st_.active.at[seq].set(True),
+                    free_stack=st_.free_stack, free_top=st_.free_top)
+                model[seq] += arg
+        elif kind == "slide":
+            new_start = min(arg, int(st_.lengths[seq]))
+            st_ = kvc.slide_window(CFG, st_, jnp.int32(seq),
+                                   jnp.int32(new_start))
+            model[seq] = int(st_.lengths[seq])
+
+        # -- invariants after every op --------------------------------------
+        tables = np.asarray(st_.tables)
+        used = tables[tables >= 0]
+        free_top = int(st_.free_top)
+        free = np.asarray(st_.free_stack)[:free_top]
+        # conservation: used + free == pool, no duplicates anywhere
+        assert len(used) + free_top == CFG.n_pages
+        assert len(set(used.tolist())) == len(used)
+        assert len(set(free.tolist())) == free_top
+        assert not (set(used.tolist()) & set(free.tolist()))
+        # per-seq bookkeeping stays in range
+        for i in range(CFG.max_seqs):
+            length = int(st_.lengths[i])
+            start = int(st_.starts[i])
+            n_pages_i = int(np.sum(tables[i] >= 0))
+            assert 0 <= start <= max(length, 0) + CFG.page_size
+            assert length <= n_pages_i * CFG.page_size
+            assert int(st_.offsets[i]) >= 0

@@ -1,0 +1,130 @@
+"""Sharding plans: padding math, rule resolution, padded-head inertness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.models import model as M
+from repro.sharding.axes import Annot, logical_axes, spec_for, strip
+from repro.sharding.rules import ShardPlan, make_plan, unpadded_plan
+
+MESH = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch,hq,hkv,kv_sharded", [
+    ("llama3-8b", 32, 8, False),          # divisible q, replicated kv
+    ("qwen3-14b", 48, 8, False),          # remap padding 40->48
+    ("phi3-medium-14b", 48, 12, False),   # ratio-preserving pad (g=4)
+    ("llava-next-34b", 64, 8, False),     # remap 56->64
+    ("granite-moe-3b-a800m", 32, 8, False),
+    ("moonshot-v1-16b-a3b", 16, 16, True),
+    ("minicpm3-4b", 48, 48, True),        # MLA: heads pad together
+    ("rwkv6-3b", 48, 48, True),
+    ("jamba-v0.1-52b", 32, 8, False),
+    ("whisper-base", 16, 16, True),
+])
+def test_head_padding_policy(arch, hq, hkv, kv_sharded):
+    cfg = ARCHS[arch]
+    plan = make_plan(cfg, MESH, "train", 256)
+    assert plan.n_heads_padded == hq, plan
+    assert plan.n_kv_heads_padded == hkv
+    assert plan.kv_sharded == kv_sharded
+    # invariants: padded counts shard / group cleanly
+    assert plan.n_heads_padded % MESH["model"] == 0 or not plan.kv_sharded
+    assert plan.n_heads_padded % plan.n_kv_heads_padded == 0
+    assert plan.n_heads_padded >= cfg.n_heads
+    assert plan.vocab_padded % (16 * 128) == 0
+    assert plan.vocab_padded >= cfg.vocab_size
+    if cfg.moe:
+        assert plan.n_experts_padded % 16 == 0
+        assert plan.n_experts_padded >= cfg.n_experts
+
+
+def test_decode_cache_exactly_one_model_axis():
+    """The decode cache maps the model axis to exactly one of
+    (kv-head axis, head_dim axis) — never both, never neither."""
+    for name, cfg in ARCHS.items():
+        if cfg.attention == "none" and cfg.block == "rwkv":
+            continue                    # no attention cache
+        plan = make_plan(cfg, MESH, "decode", 128)
+        r = plan.rules_dict
+        head_rule = r["heads" if cfg.attention == "mla" else "kv_heads"]
+        dh_rule = r["kv_dh"]
+        on_model = [x for x in (head_rule, dh_rule) if x == "model"]
+        assert len(on_model) == 1, (name, head_rule, dh_rule)
+        assert r["kv_seq"] is None      # seq sharding refuted (§Perf it.3)
+
+
+def test_long_context_batch1_plan():
+    cfg = ARCHS["jamba-v0.1-52b"]
+    plan = make_plan(cfg, {"pod": 2, "data": 16, "model": 16}, "decode", 1)
+    r = plan.rules_dict
+    assert r["batch"] is None
+    assert r["kv_dh"] == "model"        # kv=8 replicated -> dh shards
+
+
+def test_spec_resolution():
+    plan = make_plan(ARCHS["llama3-8b"], MESH, "train", 256)
+    from jax.sharding import PartitionSpec as P
+    r = plan.rules_dict
+    assert spec_for(("embed", "mlp"), r) == P(None, "model")
+    assert spec_for(("batch", "seq_sp", None), r) == P("data", "model", None)
+    assert spec_for((None, None), r) == P(None, None)
+
+
+def test_padded_heads_are_inert(rng):
+    """Perturbing padding-head weights must not change the output."""
+    cfg = ARCHS["llama3-8b"].reduced()   # 4 heads / 2 kv
+    plan = unpadded_plan(cfg)
+    plan = dataclasses.replace(plan, n_heads_padded=6)   # 2 pad heads, g=3
+    params = strip(M.init_params(cfg, plan, jax.random.key(0), max_seq=16))
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                                   jnp.int32)}
+    l1, _, _ = M.forward(params, cfg, plan, batch)
+
+    def poison(path_params):
+        lp = path_params["layers"][0]
+        dh = cfg.head_dim
+        # q rows of padded heads + their out-proj rows
+        wq = lp["attn"]["wq"]
+        wq = wq.at[:, cfg.n_heads * dh:].set(99.0)
+        wo = lp["attn"]["wo"].at[cfg.n_heads * dh:, :].set(99.0)
+        lp = dict(lp, attn=dict(lp["attn"], wq=wq, wo=wo))
+        out = dict(path_params)
+        out["layers"] = [lp] + list(path_params["layers"][1:])
+        return out
+
+    l2, _, _ = M.forward(poison(params), cfg, plan, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_annotations_cover_all_params():
+    """Every param leaf is annotated with axes matching its rank."""
+    for name in ("llama3-8b", "jamba-v0.1-52b", "whisper-base",
+                 "minicpm3-4b", "rwkv6-3b"):
+        cfg = ARCHS[name].reduced()
+        plan = unpadded_plan(cfg)
+        tree = M.init_params(cfg, plan, jax.random.key(0), max_seq=16)
+        vals = strip(tree)
+        axs = logical_axes(tree)
+        for v, a in zip(jax.tree.leaves(vals),
+                        jax.tree.leaves(axs, is_leaf=lambda x:
+                                        isinstance(x, tuple))):
+            assert v.ndim == len(a), (name, v.shape, a)
+
+
+def test_abstract_params_match_concrete():
+    """eval_shape param tree == shapes of the real init (dry-run soundness)."""
+    from repro.launch.specs import abstract_params
+    cfg = ARCHS["llama3-8b"].reduced()
+    plan = unpadded_plan(cfg)
+    abst = strip(abstract_params(cfg, plan, max_seq=16))
+    conc = strip(M.init_params(cfg, plan, jax.random.key(0), max_seq=16))
+    ja, jc = jax.tree.leaves(abst), jax.tree.leaves(conc)
+    assert len(ja) == len(jc)
+    for a, c in zip(ja, jc):
+        assert a.shape == c.shape and a.dtype == c.dtype
