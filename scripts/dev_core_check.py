@@ -38,6 +38,13 @@ assert (np.asarray(l) == rl).all(), "label mismatch"
 d2, l2 = core.search(cfg, state, jnp.asarray(qs), K, NL, use_tables=False)
 np.testing.assert_allclose(np.asarray(d2), rd, rtol=1e-4, atol=1e-4)
 
+# fused Pallas kernel (interpret mode) must agree with the xla dispatch
+d3, l3 = core.search(cfg, state, jnp.asarray(qs), K, NL,
+                     impl="pallas_interpret")
+np.testing.assert_allclose(np.asarray(d3), np.asarray(d), rtol=1e-4,
+                           atol=1e-4)
+assert (np.asarray(l3) == np.asarray(l)).all(), "fused kernel label mismatch"
+
 # delete half, re-check
 dels = np.arange(0, 4 * B, 2, dtype=np.int32)
 state = core.delete(cfg, state, jnp.asarray(dels))

@@ -26,6 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import index as ix
 from repro.core.state import SIVFConfig, SlabPoolState, init_state
+from repro.utils import shard_map_compat
 
 
 def shard_of(ids: jax.Array, n_shards: int) -> jax.Array:
@@ -62,7 +63,7 @@ def dist_insert(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
         st = ix._insert_impl(cfg, st, v, jnp.where(mine, i, -1), lists)
         return jax.tree.map(lambda x: x[None], st)
 
-    f = jax.shard_map(
+    f = shard_map_compat(
         local, mesh=mesh, check_vma=False,
         in_specs=(_spec_tree(state, axis), P(), P()),
         out_specs=_spec_tree(state, axis))
@@ -78,7 +79,7 @@ def dist_delete(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
         st = ix._delete_impl(cfg, st, i)
         return jax.tree.map(lambda x: x[None], st)
 
-    f = jax.shard_map(
+    f = shard_map_compat(
         local, mesh=mesh, check_vma=False,
         in_specs=(_spec_tree(state, axis), P()),
         out_specs=_spec_tree(state, axis))
@@ -86,18 +87,20 @@ def dist_delete(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
 
 
 def dist_search(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
-                queries: jax.Array, k: int, nprobe: int, axis: str = "data"
+                queries: jax.Array, k: int, nprobe: int, axis: str = "data",
+                impl: str = "xla", block_q: int = 8
                 ) -> tuple[jax.Array, jax.Array]:
-    """Scatter-gather: local top-k per shard, all-gather, global merge."""
+    """Scatter-gather: fused local top-k per shard, all-gather, global merge.
+
+    Each shard runs the same unified scan->top-k dispatch as `core.search`
+    (``impl`` selects xla / pallas / pallas_interpret), so only the fused
+    [Q, k] partials ever cross the interconnect — never per-slab candidates.
+    """
 
     def local(st, q):
         st = jax.tree.map(lambda x: x[0], st)
-        from repro.core.quantizer import probe
-        lists = probe(st.centroids, q.astype(cfg.dtype), nprobe, cfg.metric)
-        table = (ix.gather_tables if cfg.track_tables else ix.walk_chains)(
-            cfg, st, lists)
-        d, l = ix.scan_slabs_topk(cfg, st, q, table, k)
-        # gather partial results from all shards (paper's MPI_Gather)
+        d, l = ix._search_impl(cfg, st, q, k, nprobe, None, impl, block_q)
+        # gather fused [Q, k] partials from all shards (paper's MPI_Gather)
         dg = jax.lax.all_gather(d, axis)                   # [S, Q, k]
         lg = jax.lax.all_gather(l, axis)
         s, qn, _ = dg.shape
@@ -106,7 +109,7 @@ def dist_search(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
         nd, idx = jax.lax.top_k(-dg, k)                    # global merge
         return -nd, jnp.take_along_axis(lg, idx, axis=1)
 
-    f = jax.shard_map(
+    f = shard_map_compat(
         local, mesh=mesh, check_vma=False,
         in_specs=(_spec_tree(state, axis), P()),
         out_specs=(P(), P()))

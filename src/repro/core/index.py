@@ -12,10 +12,11 @@ protocols (Algorithms 1, 2, 4) become *bulk-synchronous batched plans*:
             linearization point becomes the functional state swap), then a
             bounded sequential pass reclaims slabs that dropped to zero
             occupancy (unlink + push to free stack; Alg. 4 lines 15-19).
-  search  — coarse probe + slab-chain traversal + validity-masked distance
-            scan + top-k (Alg. 3). Two data paths: the paper-faithful
-            pointer walk over ``nxt``, and the beyond-paper dense
-            list->slab table gather.
+  search  — coarse probe + slab-chain traversal + fused validity-masked
+            distance scan + streaming top-k (Alg. 3). Two table sources
+            (the paper-faithful pointer walk over ``nxt`` and the
+            beyond-paper dense list->slab gather) feed one scan->top-k
+            dispatch; no backend materializes the [Q, T*C] candidates.
 
 All ops are jit-compiled with state donation: the returned state reuses the
 input buffers (XLA in-place), mirroring "in-place mutation in VRAM".
@@ -340,7 +341,8 @@ def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
 
     Memory-bounded: scans the slab table column-by-column keeping a running
     [Q, k] result, the jnp analogue of Alg. 3's per-lane register top-k.
-    The Pallas path (kernels/sivf_scan + kernels/topk) is the TPU analogue.
+    The fused Pallas kernel (kernels/sivf_scan/fused.py) is the TPU
+    analogue and matches this reference bit-for-bit, ties included.
     """
     qn = queries.shape[0]
     qf = queries.astype(jnp.float32)
@@ -371,30 +373,58 @@ def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
     return d, l
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "nprobe", "use_tables", "impl"))
-def search(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
-           k: int, nprobe: int, use_tables: bool | None = None,
-           impl: str = "xla") -> tuple[jax.Array, jax.Array]:
-    """Top-k search. queries [Q, D] -> (distances [Q, k], labels [Q, k]).
+SEARCH_IMPLS = ("xla", "pallas", "pallas_interpret")
 
-    ``use_tables`` selects the beyond-paper dense-table slab lookup (default
-    from config). ``impl``: "xla" (jnp math, used for CPU + dry-run) or
-    "pallas_interpret" (runs the Pallas kernels in interpret mode).
+
+def _scan_dispatch(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
+                   table: jax.Array, k: int, impl: str, block_q: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Route a gathered slab table through one scan->top-k backend.
+
+    Every backend streams: none materializes the [Q, T*C] candidate matrix.
+      "xla"              — jnp column scan (CPU, dry-run, shard_map bodies);
+      "pallas"           — the fused TPU kernel (kernels/sivf_scan/fused.py);
+      "pallas_interpret" — same kernel, Pallas interpreter (CPU emulation).
     """
+    if impl == "xla":
+        return scan_slabs_topk(cfg, state, queries, table, k)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.sivf_scan import ops as scan_ops
+        return scan_ops.sivf_fused_search(
+            queries.astype(jnp.float32), table, state.data, state.ids,
+            state.norms, state.bitmap, k, metric=cfg.metric,
+            block_q=block_q, interpret=impl == "pallas_interpret")
+    raise ValueError(f"unknown impl {impl!r}; expected one of {SEARCH_IMPLS}")
+
+
+def _search_impl(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
+                 k: int, nprobe: int, use_tables: bool | None, impl: str,
+                 block_q: int) -> tuple[jax.Array, jax.Array]:
+    """Un-jitted search body, shared by `search` and distributed shards."""
     ut = cfg.track_tables if use_tables is None else use_tables
     lists = quantizer.probe(state.centroids, queries.astype(cfg.dtype),
                             nprobe, cfg.metric)
     table = (gather_tables if ut else walk_chains)(cfg, state, lists)
-    if impl == "xla":
-        return scan_slabs_topk(cfg, state, queries, table, k)
-    elif impl == "pallas_interpret":
-        from repro.kernels.sivf_scan import ops as scan_ops
-        from repro.kernels.topk import ops as topk_ops
-        dists, labels = scan_ops.sivf_scan(
-            queries.astype(jnp.float32), table, state.data, state.ids,
-            state.norms, state.bitmap, metric=cfg.metric, interpret=True)
-        return topk_ops.topk(dists, labels, k, interpret=True)
-    raise ValueError(f"unknown impl {impl}")
+    return _scan_dispatch(cfg, state, queries, table, k, impl, block_q)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "nprobe", "use_tables",
+                                   "impl", "block_q"))
+def search(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
+           k: int, nprobe: int, use_tables: bool | None = None,
+           impl: str = "xla", block_q: int = 8
+           ) -> tuple[jax.Array, jax.Array]:
+    """Top-k search. queries [Q, D] -> (distances [Q, k], labels [Q, k]).
+
+    ``use_tables`` selects the beyond-paper dense-table slab lookup (default
+    from config); both the dense-table and pointer-walk tables feed the same
+    fused scan->top-k dispatch. ``impl``: "xla" (jnp math, used for CPU +
+    dry-run), "pallas" (fused TPU kernel), or "pallas_interpret" (the fused
+    kernel under the Pallas interpreter). ``block_q`` is the fused kernel's
+    query-tile height.
+    """
+    return _search_impl(cfg, state, queries, k, nprobe, use_tables, impl,
+                        block_q)
 
 
 # ---------------------------------------------------------------------------

@@ -19,11 +19,14 @@ def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref):
     a = a_ref[...]                                             # [bd, n]
     d = d_ref[...]                                             # [1, bd]
 
+    # bare-int indices are rejected by older pallas releases; use size-1
+    # dynamic slices and flatten instead
     def body(t, _):
-        u_t = pl.load(u_ref, (0, pl.dslice(t, 1), slice(None)))[0]   # [bd]? -> [1, bd]
-        dt_t = pl.load(dt_ref, (0, pl.dslice(t, 1), slice(None)))[0]
-        b_t = pl.load(b_ref, (0, pl.dslice(t, 1), slice(None)))[0]   # [1, n] -> [n]
-        c_t = pl.load(c_ref, (0, pl.dslice(t, 1), slice(None)))[0]
+        row = (pl.dslice(0, 1), pl.dslice(t, 1), slice(None))
+        u_t = pl.load(u_ref, row).reshape(-1)                  # [bd]
+        dt_t = pl.load(dt_ref, row).reshape(-1)
+        b_t = pl.load(b_ref, row).reshape(-1)                  # [n]
+        c_t = pl.load(c_ref, row).reshape(-1)
         da = jnp.exp(dt_t.reshape(-1, 1) * a)                  # [bd, n]
         h = da * h_ref[...] + (dt_t * u_t).reshape(-1, 1) * b_t.reshape(1, -1)
         h_ref[...] = h
@@ -31,7 +34,8 @@ def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref):
                                 (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # [bd, 1]
         y = y.reshape(1, -1) + d * u_t.reshape(1, -1)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y)
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y.reshape(1, 1, -1))
         return 0
 
     jax.lax.fori_loop(0, t_len, body, 0)

@@ -1,0 +1,179 @@
+"""Fused slab-scan -> top-k search — Pallas TPU kernel (paper Alg. 3, whole).
+
+The unfused pipeline (``sivf_scan`` kernel -> ``topk`` kernel) materializes
+the full ``[Q, T*C]`` candidate distance/label matrices in HBM between the
+two kernels, which caps the query batch size and spends HBM bandwidth on
+intermediates the paper's Alg. 3 never writes: the CUDA design keeps a
+per-lane *register* top-k while scanning slabs and only ever emits ``[Q, k]``.
+
+This kernel is the TPU analogue of that register top-k:
+
+  * the slab-id table (one row per query, ``T = nprobe * max_chain``
+    entries) is scalar-prefetched to SMEM and drives the ``BlockSpec``
+    index_map, so each non-contiguous slab tile is DMA'd into VMEM as if it
+    were a contiguous operand (§3.3 "coalesced search on non-contiguous
+    memory");
+  * queries are blocked into ``[bq, D]`` tiles; the grid walks
+    ``(q_tile, q_within_tile, slab)`` with the slab axis innermost, and the
+    ``[bq, k]`` output block is *revisited* across the inner two axes — it
+    lives in VMEM for the whole scan of a query tile and is flushed to HBM
+    exactly once per tile;
+  * each grid step scores one ``(query, slab)`` pair on the MXU, masks dead
+    slots via the validity bitmap, and folds the ``[1, C]`` candidates into
+    the running ``[1, k]`` row by k rounds of min-extraction (k is small, so
+    k passes over a VMEM-resident ``[1, k+C]`` row beat a sort).
+
+Peak memory is ``O(Q*k + bq*D + C*D)`` instead of the unfused
+``O(Q*T*C)`` — the ``T*C`` candidate matrix is never built.
+
+Tie-breaking matches the XLA reference ``core.index.scan_slabs_topk``
+exactly: the running buffer occupies the low indices of the merge row and
+``lax.top_k`` (reference) / first-index-argmin (here) both prefer lower
+indices, so distances AND labels agree bit-for-bit with the streaming
+reference on every slab order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD_BITS = 32
+_NEG = -(2 ** 31) + 1  # python literal; jnp scalars would be captured consts
+
+
+def _unpack_bitmap(words: jax.Array, capacity: int) -> jax.Array:
+    """[1, W] u32 validity words -> [1, C] bool, slot-ordered."""
+    w = capacity // WORD_BITS
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
+    word_ix = slot // WORD_BITS
+    bit_ix = (slot % WORD_BITS).astype(jnp.uint32)
+    # gather word per slot via broadcast-compare (W is tiny)
+    wsel = jnp.zeros((1, capacity), jnp.uint32)
+    for wi in range(w):
+        wsel = jnp.where(word_ix == wi, words[0, wi], wsel)
+    return (jnp.right_shift(wsel, bit_ix) & jnp.uint32(1)) != 0
+
+
+def _kernel(table_ref, q_ref, data_ref, ids_ref, norms_ref, bitmap_ref,
+            outd_ref, outl_ref, *, capacity: int, k: int, metric: str):
+    qj = pl.program_id(1)                               # query within tile
+    ti = pl.program_id(2)                               # slab within chain
+    bq = pl.num_programs(1)
+    t = pl.num_programs(2)
+    qi = pl.program_id(0) * bq + qj                     # global query row
+    slab = table_ref[qi * t + ti]                       # scalar, may be -1
+
+    # first touch of this output block: reset the running top-k
+    @pl.when((qj == 0) & (ti == 0))
+    def _init():
+        outd_ref[...] = jnp.full((bq, k), jnp.inf, jnp.float32)
+        outl_ref[...] = jnp.full((bq, k), -1, jnp.int32)
+
+    # -- score one (query, slab) pair on the MXU ---------------------------
+    q = q_ref[pl.ds(qj, 1), :]                          # [1, D]
+    x = data_ref[0]                                     # [C, D]
+    dot = jax.lax.dot_general(
+        q.astype(jnp.float32), x.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [1, C]
+    if metric == "l2":
+        qq = jnp.sum(q.astype(jnp.float32) ** 2)
+        d = qq - 2.0 * dot + norms_ref[...]
+    else:
+        d = -dot
+
+    valid = _unpack_bitmap(bitmap_ref[...], capacity) & (slab >= 0)
+    d = jnp.where(valid, d, jnp.inf)
+    lab = jnp.where(valid, ids_ref[...], -1)
+
+    # -- fold candidates into the running [1, k] row -----------------------
+    # Merge row layout = [running k | C candidates]; identical to the
+    # reference's concatenate order, so first-index tie-breaking matches.
+    run_d = outd_ref[pl.ds(qj, 1), :]                   # [1, k]
+    run_l = outl_ref[pl.ds(qj, 1), :]
+    cd = jnp.concatenate([run_d, d], axis=1)            # [1, k+C]
+    cl = jnp.concatenate([run_l, lab], axis=1)
+    m = k + capacity
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+
+    def body(j, cur):
+        lo = jnp.min(cur, axis=1, keepdims=True)        # [1, 1]
+        ix = jnp.min(jnp.where(cur == lo, col, m), axis=1, keepdims=True)
+        oh = col == ix
+        lj = jnp.max(jnp.where(oh, cl, _NEG), axis=1, keepdims=True)
+        # masking an extracted slot to +inf makes it re-selectable once the
+        # true min is +inf; every genuinely-inf slot carries label -1
+        # (dead / pad / init), so force -1 there instead of the stale label
+        lj = jnp.where(jnp.isinf(lo), -1, lj)
+        pl.store(outd_ref, (pl.dslice(qj, 1), pl.dslice(j, 1)), lo)
+        pl.store(outl_ref, (pl.dslice(qj, 1), pl.dslice(j, 1)), lj)
+        return jnp.where(oh, jnp.inf, cur)
+
+    jax.lax.fori_loop(0, k, body, cd)
+
+
+def sivf_fused_search_pallas(queries: jax.Array, table: jax.Array,
+                             data: jax.Array, ids: jax.Array,
+                             norms: jax.Array, bitmap: jax.Array, k: int,
+                             metric: str = "l2", block_q: int = 8,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """queries [Q,D], table [Q,T] -> (dists [Q,k], labels [Q,k]).
+
+    Never materializes the [Q, T*C] candidate matrix; ragged Q is handled
+    by padding to a block_q multiple with -1 slab rows (masked to +inf).
+    """
+    qn, d_dim = queries.shape
+    t = table.shape[1]
+    _, c, _ = data.shape
+    w = bitmap.shape[1]
+
+    bq = max(1, min(block_q, qn))
+    pad = (-qn) % bq
+    if pad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((pad, d_dim), queries.dtype)])
+        table = jnp.concatenate(
+            [table, jnp.full((pad, t), -1, table.dtype)])
+    qp = qn + pad
+
+    grid = (qp // bq, bq, t)
+
+    def slab_ix(qt, qj, ti, tab):
+        return (jnp.maximum(tab[(qt * bq + qj) * t + ti], 0), 0, 0)
+
+    def slab_ix2(qt, qj, ti, tab):
+        return (jnp.maximum(tab[(qt * bq + qj) * t + ti], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d_dim), lambda qt, qj, ti, tab: (qt, 0)),  # q
+            pl.BlockSpec((1, c, d_dim), slab_ix),                        # data
+            pl.BlockSpec((1, c), slab_ix2),                              # ids
+            pl.BlockSpec((1, c), slab_ix2),                              # norms
+            pl.BlockSpec((1, w), slab_ix2),                              # bitmap
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda qt, qj, ti, tab: (qt, 0)),
+            pl.BlockSpec((bq, k), lambda qt, qj, ti, tab: (qt, 0)),
+        ],
+    )
+    kernel = functools.partial(_kernel, capacity=c, k=k, metric=metric)
+    dists, labels = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((qp, k), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(table.reshape(-1), queries, data, ids, norms, bitmap)
+    return dists[:qn], labels[:qn]

@@ -1,10 +1,19 @@
-"""Jitted public wrapper for the SIVF slab-scan kernel."""
+"""Jitted public wrappers for the SIVF slab-scan kernels.
+
+``sivf_scan`` is the legacy *unfused* scan: it materializes the full
+``[Q, T*C]`` candidate matrix and leaves k-selection to the separate topk
+kernel. ``sivf_fused_search`` is the fused scan->top-k pipeline that emits
+``[Q, k]`` directly (kernels/sivf_scan/fused.py); new code should use it —
+the unfused pair is kept as the memory-heavy baseline for benchmarks and
+kernel-level tests.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
+from repro.kernels.sivf_scan.fused import sivf_fused_search_pallas
 from repro.kernels.sivf_scan.ref import sivf_scan_ref
 from repro.kernels.sivf_scan.sivf_scan import sivf_scan_pallas
 
@@ -12,7 +21,7 @@ from repro.kernels.sivf_scan.sivf_scan import sivf_scan_pallas
 @partial(jax.jit, static_argnames=("metric", "interpret", "impl"))
 def sivf_scan(queries, table, data, ids, norms, bitmap, metric: str = "l2",
               interpret: bool = False, impl: str = "pallas"):
-    """Validity-masked slab distance scan.
+    """Validity-masked slab distance scan (unfused; returns [Q, T*C]).
 
     impl="pallas": the TPU kernel (interpret=True to emulate on CPU);
     impl="ref": the pure-jnp oracle (memory-heavy; test sizes only).
@@ -21,3 +30,25 @@ def sivf_scan(queries, table, data, ids, norms, bitmap, metric: str = "l2",
         return sivf_scan_ref(queries, table, data, ids, norms, bitmap, metric)
     return sivf_scan_pallas(queries, table, data, ids, norms, bitmap,
                             metric=metric, interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("k", "metric", "block_q", "interpret", "impl"))
+def sivf_fused_search(queries, table, data, ids, norms, bitmap, k: int,
+                      metric: str = "l2", block_q: int = 8,
+                      interpret: bool = False, impl: str = "pallas"):
+    """Fused scan->top-k: queries [Q,D], table [Q,T] -> ([Q,k], [Q,k]).
+
+    impl="pallas": the fused TPU kernel (interpret=True to emulate on CPU);
+    impl="ref": unfused oracle composition (sivf_scan_ref + lax.top_k) —
+    memory-heavy, test sizes only.
+    """
+    if impl == "ref":
+        import jax.numpy as jnp
+        d, lab = sivf_scan_ref(queries, table, data, ids, norms, bitmap,
+                               metric)
+        nd, idx = jax.lax.top_k(-d, k)
+        return -nd, jnp.take_along_axis(lab, idx, axis=1)
+    return sivf_fused_search_pallas(queries, table, data, ids, norms, bitmap,
+                                    k, metric=metric, block_q=block_q,
+                                    interpret=interpret)

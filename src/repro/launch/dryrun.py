@@ -34,6 +34,7 @@ from repro.launch.mesh import make_production_mesh, mesh_axes_dict
 from repro.models import model as M
 from repro.sharding import axes as AX
 from repro.sharding.rules import make_plan
+from repro.utils import set_mesh_compat
 from repro.train.train_step import (TrainConfig, init_train_state,
                                     make_train_step, state_specs)
 
@@ -64,7 +65,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool) -> dict:
     batch_sh = SP.input_shardings(cfg, shape, plan, mesh)
 
     t0 = time.time()
-    with jax.set_mesh(mesh), AX.use_rules(rules):
+    with set_mesh_compat(mesh), AX.use_rules(rules):
         if shape.kind == "train":
             tcfg = TrainConfig()
             step_fn = make_train_step(cfg, plan, tcfg)
@@ -115,6 +116,8 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool) -> dict:
     # analyzer docstring) — kept only as a cross-check column. The
     # trip-count-aware analyzer provides the real per-device numbers.
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # old jaxlib: list of per-program dicts
+        cost = cost[0] if cost else {}
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
     try:

@@ -188,17 +188,33 @@ def _trip_count(comps: dict, cond_name: str) -> int:
     return 1
 
 
+def _first_call_arg(line: str, kind: str) -> str:
+    """First top-level operand of ``kind(...)`` — comma-split is wrong when
+    operands carry inline shapes (``dot(f32[32,64]{1,0} %a, ...)``, older
+    jaxlib), so track bracket depth instead."""
+    args = line.split(kind + "(", 1)[1]
+    depth = 0
+    for i, ch in enumerate(args):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
+                return args[:i]
+            depth -= 1
+        elif ch == "," and depth == 0:
+            return args[:i]
+    return args
+
+
 def _dot_flops(op: Op, shapes: dict) -> float:
     out_dims = _shape_dims(op.result_text)
     out_n = 1
     for d in out_dims:
         out_n *= d
     # contraction size from lhs shape + lhs_contracting_dims
-    lhs_m = re.search(r"\(([^)]*)\)", op.line[op.line.index(op.kind):])
     cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
     # lhs shape: first operand — inline shape or symbol lookup
-    call_args = op.line.split(op.kind + "(", 1)[1]
-    first_arg = call_args.split(",")[0]
+    first_arg = _first_call_arg(op.line, op.kind)
     dims = _shape_dims(first_arg)
     if not dims:
         nm = _OPERAND_RE.search(first_arg)

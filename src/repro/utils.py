@@ -6,6 +6,29 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    jax >= 0.6 exposes ``jax.shard_map(..., check_vma=)``; older releases
+    only have ``jax.experimental.shard_map.shard_map(..., check_rep=)``
+    (same flag, earlier name).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)
+
+
+def set_mesh_compat(mesh):
+    """Context manager entering ``mesh``: ``jax.set_mesh`` on new jax,
+    the Mesh's own context-manager protocol on older releases."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def ceil_div(a, b):
     """Ceiling division for ints or int arrays."""
     return -(-a // b)

@@ -1,3 +1,11 @@
+import os
+
+# This suite is CPU-targeted (Pallas kernels run in interpret mode). On
+# hosts that have libtpu installed but no TPU attached, jax's default
+# platform probe can stall for minutes per process before falling back to
+# CPU — pin the platform unless the caller overrides it explicitly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 import numpy as np
 import pytest
 

@@ -8,6 +8,9 @@ live ones.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev extra; tier-1 stays green without it
 from hypothesis import given, settings, strategies as st
 
 from repro import core

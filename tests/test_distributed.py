@@ -61,7 +61,10 @@ def _run(script, *args):
         [sys.executable, "-c", script, *args], capture_output=True,
         text=True, timeout=560,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # fake-device CPU tests; avoid the TPU-probe stall on hosts
+             # with libtpu installed (see conftest.py)
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo")
 
 

@@ -7,6 +7,9 @@ cache-coordinate/absolute-position bookkeeping consistent.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev extra; tier-1 stays green without it
 from hypothesis import given, settings, strategies as st
 
 from repro.serve import kv_cache as kvc

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # compile-heavy; CI runs these in the main-branch `slow` job
+
 from repro.configs import ARCHS
 from repro.models import model as M
 from repro.sharding.axes import strip

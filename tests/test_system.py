@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # long end-to-end churn loops; main-branch `slow` CI job
 
 from repro import core
 from repro.data.pipeline import VectorStream, VectorStreamConfig
