@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import sivf
 from repro import core
 from repro.baselines import ContiguousIVF, FlatIndex, HNSWLite, LSHIndex
 from benchmarks.common import (Row, build_sivf, dataset, exact_topk,
@@ -453,44 +454,100 @@ def tab3_time_breakdown():
 
 
 def tab4_non_ivf_indexes():
-    """Table 4: add throughput + delete latency across index families."""
+    """Table 4: add throughput + delete latency across index families.
+
+    Every engine — SIVF included — is driven through the one
+    ``IndexProtocol`` surface (``add``/``remove``), so the comparison
+    measures the index, not per-engine call conventions.
+    """
     rows = []
     n, b = 5_000, 500
     vecs = dataset(D, n, seed=41)
     ids = np.arange(n, dtype=np.int32)
-    newv = dataset(D, b, seed=42)
-    nid = np.arange(n, n + b).astype(np.int32)
 
-    cfg, state, cents = build_sivf(D, NL, n + b)
-    state = core.insert(cfg, state, jnp.asarray(vecs),
-                        jnp.asarray(ids))                 # warm compile
-    state = core.delete(cfg, state, jnp.asarray(ids))     # drain (+warm)
-    t_add, state = timeit(core.insert, cfg, state, jnp.asarray(vecs),
-                          jnp.asarray(ids), warmup=0, iters=1)
-    state = core.delete(cfg, state, jnp.asarray(ids[n - b:]))  # warm shape b
-    t_del, _ = timeit(core.delete, cfg, state, jnp.asarray(ids[:b]),
-                      warmup=0, iters=1)
-    rows.append(Row("tab4.sivf.add", t_add, f"{n / t_add:.0f} vec/s"))
-    rows.append(Row("tab4.sivf.delete", t_del, f"{t_del * 1e3:.2f} ms"))
+    cfg, _, cents = build_sivf(D, NL, n + b)
+    sivf_idx = sivf.Index(cfg, cents)
+    sivf_idx.add(vecs, ids)                       # warm compile
+    sivf_idx.remove(ids[n - b:])                  # warm shape-b remove
+    sivf_idx.remove(ids)                          # drain
+    engines = [
+        ("sivf", sivf_idx, n, b, ""),
+        ("flat", FlatIndex(D, 2 * n), n, b, ""),
+        ("lsh", LSHIndex(jax.random.key(2), D, bucket_cap=n), n, b, ""),
+        # graph insert is O(N log N) python: smaller workload
+        ("hnsw", HNSWLite(D, m=8, ef=24), 800, 100, " (full rebuild)"),
+    ]
+    for name, eng, na, nd, note in engines:
+        t_add, _ = timeit(lambda e=eng, m=na: e.add(vecs[:m], ids[:m]),
+                          warmup=0, iters=1)
+        t_del, _ = timeit(lambda e=eng, m=nd: e.remove(ids[:m]),
+                          warmup=0, iters=1)
+        rows.append(Row(f"tab4.{name}.add", t_add, f"{na / t_add:.0f} vec/s"))
+        rows.append(Row(f"tab4.{name}.delete", t_del,
+                        f"{t_del * 1e3:.2f} ms{note}"))
+    return rows
 
-    flat = FlatIndex(D, 2 * n)
-    t_add, _ = timeit(lambda: flat.insert(vecs, ids), warmup=0, iters=1)
-    t_del, _ = timeit(lambda: flat.delete(ids[:b]), warmup=0, iters=1)
-    rows.append(Row("tab4.flat.add", t_add, f"{n / t_add:.0f} vec/s"))
-    rows.append(Row("tab4.flat.delete", t_del, f"{t_del * 1e3:.2f} ms"))
 
-    lsh = LSHIndex(jax.random.key(2), D, bucket_cap=n)
-    t_add, _ = timeit(lambda: lsh.insert(vecs, ids), warmup=0, iters=1)
-    t_del, _ = timeit(lambda: lsh.delete(ids[:b]), warmup=0, iters=1)
-    rows.append(Row("tab4.lsh.add", t_add, f"{n / t_add:.0f} vec/s"))
-    rows.append(Row("tab4.lsh.delete", t_del, f"{t_del * 1e3:.2f} ms"))
+def streaming_churn():
+    """Streaming-session benchmark through the `sivf.Index` handle (ISSUE 2).
 
-    hn = HNSWLite(D, m=8, ef=24)
-    sub = 800                                     # graph insert is O(N log N) python
-    t_add, _ = timeit(lambda: hn.insert(vecs[:sub], ids[:sub]), warmup=0,
-                      iters=1)
-    t_del, _ = timeit(lambda: hn.delete(ids[:100]), warmup=0, iters=1)
-    rows.append(Row("tab4.hnsw.add", t_add, f"{sub / t_add:.0f} vec/s"))
-    rows.append(Row("tab4.hnsw.delete", t_del,
-                    f"{t_del * 1e3:.2f} ms (full rebuild)"))
+    A sliding-window churn with *ragged* batch sizes: per-op p50/p99 wall
+    latency for add / remove / search, plus the observed jit-executable
+    counts — the handle's power-of-two bucketing must keep them bounded by
+    the number of bucket shapes, not the number of distinct batch sizes.
+    """
+    from repro.data.pipeline import VectorStream, VectorStreamConfig
+    rng = np.random.default_rng(7)
+    stream = VectorStream(VectorStreamConfig(dim=D, n_clusters=NL))
+    cfg, _, cents = build_sivf(D, NL, 40_000, capacity=64, max_chain=48,
+                               train_vecs=stream.batch(0, 4096))
+    idx = sivf.Index(cfg, cents, min_bucket=64)
+    window, max_b = 8_192, 1_024
+
+    next_id = 0
+    step = 0
+    while next_id <= window + max_b:              # fill to steady state
+        s = int(rng.integers(200, max_b))
+        idx.add(stream.batch(1 + step, s),
+                np.arange(next_id, next_id + s, dtype=np.int32))
+        next_id += s
+        step += 1
+
+    lat = {"add": [], "remove": [], "search": []}
+    sizes_seen = set()
+    for step in range(60):
+        s = int(rng.integers(1, max_b))
+        sizes_seen.add(s)
+        vecs_b = stream.batch(100 + step, s)
+        ids_b = np.arange(next_id, next_id + s, dtype=np.int32)
+        t0 = time.perf_counter()
+        rep = idx.add(vecs_b, ids_b)
+        lat["add"].append(time.perf_counter() - t0)
+        assert rep.ok, rep
+        next_id += s
+        evict = np.arange(next_id - window - s, next_id - window,
+                          dtype=np.int32)
+        t0 = time.perf_counter()
+        idx.remove(evict)
+        lat["remove"].append(time.perf_counter() - t0)
+        q = int(rng.integers(1, 64))
+        qs = rng.normal(size=(q, D)).astype(np.float32)
+        t0 = time.perf_counter()
+        res = idx.search(qs, 10, 8)
+        jax.block_until_ready(res.distances)
+        lat["search"].append(time.perf_counter() - t0)
+
+    rows = []
+    for op in ("add", "remove", "search"):
+        a = np.asarray(lat[op])
+        rows.append(Row(f"streaming_churn.{op}.p50",
+                        float(np.percentile(a, 50)),
+                        f"p99={np.percentile(a, 99) * 1e6:.0f}us"))
+    comp = idx.compile_stats()
+    n_buckets = len(idx.bucket_shapes(max_b))
+    rows.append(Row(
+        "streaming_churn.jit_compiles", 0.0,
+        f"add={comp['add']} remove={comp['remove']} "
+        f"search={comp['search']} over {len(sizes_seen)} ragged sizes "
+        f"(bucket bound {n_buckets})"))
     return rows

@@ -24,6 +24,7 @@ ARTIFACTS = [
     ("fig6_7_8", paper.fig6_7_8_real_datasets),
     ("fig9", paper.fig9_recall_pareto),
     ("fused", paper.fused_search_sweep),
+    ("streaming_churn", paper.streaming_churn),
     ("fig10", paper.fig10_zipfian_skew),
     ("fig11", paper.fig11_sliding_window),
     ("tab1", paper.tab1_tail_latency),

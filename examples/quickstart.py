@@ -1,58 +1,65 @@
 """Quickstart: the SIVF streaming vector index in 60 lines.
 
-Builds an index, streams inserts, searches, deletes in O(1), and runs a
-sliding window — the paper's core loop (§5.5).
+One `sivf.Index` session handle: stream ragged batches in, search, evict
+in O(1), run a sliding window — the paper's core loop (§5.5) — and read
+per-batch MutationReports instead of decoding sticky error bits. CI runs
+this file end-to-end as a smoke test.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import core
+import sivf
 
 D, N_LISTS = 64, 32
 rng = np.random.default_rng(0)
 
-# 1. train the coarse quantizer and build an empty pool
+# 1. train the coarse quantizer and open a session handle
 train = rng.normal(size=(2048, D)).astype(np.float32)
-centroids = core.train_kmeans(jax.random.key(0), jnp.asarray(train), N_LISTS)
-cfg = core.SIVFConfig(dim=D, n_lists=N_LISTS, n_slabs=512, capacity=64,
+centroids = sivf.train_kmeans(jax.random.key(0), train, N_LISTS)
+cfg = sivf.SIVFConfig(dim=D, n_lists=N_LISTS, n_slabs=512, capacity=64,
                       n_max=1 << 16, max_chain=128)
-state = core.init_state(cfg, centroids)
+index = sivf.Index(cfg, centroids)
 
-# 2. stream in 10k vectors
+# 2. stream in 10k vectors with deliberately ragged batch sizes; the handle
+#    pads to power-of-two buckets so jit compiles stay bounded
 vecs = rng.normal(size=(10_000, D)).astype(np.float32)
-ids = np.arange(10_000, dtype=np.int32)
-for lo in range(0, 10_000, 2048):
-    state = core.insert(cfg, state, jnp.asarray(vecs[lo:lo + 2048]),
-                        jnp.asarray(ids[lo:lo + 2048]))
-print("after ingest:", core.stats(cfg, state))
+lo = 0
+while lo < 10_000:
+    n = min(int(rng.integers(300, 2048)), 10_000 - lo)
+    report = index.add(vecs[lo:lo + n], np.arange(lo, lo + n, dtype=np.int32))
+    assert report.ok and report.accepted == n, report
+    lo += n
+print("after ingest:", index.stats())
 
 # 3. search (top-10, probing 8 of 32 lists)
 queries = rng.normal(size=(4, D)).astype(np.float32)
-dists, labels = core.search(cfg, state, jnp.asarray(queries), 10, 8)
+dists, labels = index.search(queries, k=10, nprobe=8)
 print("top-3 neighbours of q0:", np.asarray(labels)[0, :3],
       np.asarray(dists)[0, :3].round(2))
 
 # 4. O(1) deletion — no compaction, slabs recycle instantly
 t0 = time.perf_counter()
-state = core.delete(cfg, state, jnp.asarray(ids[:5000]))
-jax.block_until_ready(state.n_live)
-print(f"deleted 5k in {(time.perf_counter() - t0) * 1e3:.1f} ms;",
-      core.stats(cfg, state))
+report = index.remove(np.arange(5000, dtype=np.int32))
+print(f"removed {report.accepted} in {(time.perf_counter() - t0) * 1e3:.1f} ms;",
+      index.stats())
+assert report.accepted == 5000
 
-# 5. sliding window: steady-state churn with bounded memory
+# 5. re-adding a live id overwrites it (delete-then-insert, one report)
+report = index.add(vecs[:64], np.arange(5000, 5064, dtype=np.int32))
+print(f"overwrite batch: accepted={report.accepted} "
+      f"overwritten={report.overwritten}")
+
+# 6. sliding window: steady-state churn with bounded memory
 next_id = 10_000
 for step in range(5):
     batch = rng.normal(size=(1000, D)).astype(np.float32)
     new_ids = np.arange(next_id, next_id + 1000, dtype=np.int32)
-    state = core.insert(cfg, state, jnp.asarray(batch),
-                        jnp.asarray(new_ids))
-    state = core.delete(cfg, state,
-                        jnp.asarray(new_ids - 5000))   # evict oldest
+    assert index.add(batch, new_ids).ok
+    index.remove(new_ids - 5000)                    # evict oldest
     next_id += 1000
-print("after sliding window:", core.stats(cfg, state))
-assert int(state.error) == 0
+print("after sliding window:", index.stats())
+print("jit executables this session:", index.compile_stats())

@@ -1,9 +1,11 @@
 """Streaming RAG — the paper's motivating application (§1), end to end.
 
 A document stream is embedded (mean-pooled LM hidden states), ingested
-into SIVF under a sliding window, and queries retrieve fresh context that
-conditions generation through the slab-paged serving engine. Expired
-documents are evicted in O(1) — no index rebuilds, ever.
+into a `sivf.Index` session under a sliding window, and queries retrieve
+fresh context that conditions generation through the slab-paged serving
+engine. Expired documents are evicted in O(1) — no index rebuilds, ever.
+The retrieval loop only touches the `IndexProtocol` surface
+(add/remove/search/stats), so any baseline engine drops in unchanged.
 
 Run: PYTHONPATH=src python examples/streaming_rag.py
 """
@@ -11,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import core
+import sivf
 from repro.configs import ARCHS
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
@@ -35,13 +37,13 @@ def embed_doc(tokens: np.ndarray) -> np.ndarray:
     return np.asarray(jnp.mean(emb, axis=0), np.float32)
 
 
-# -- 1. vector index over the document stream -------------------------------
+# -- 1. vector index session over the document stream ------------------------
 N_LISTS = 8
 train = rng.normal(size=(512, D)).astype(np.float32) * 0.02
-cents = core.train_kmeans(jax.random.key(1), jnp.asarray(train), N_LISTS)
-icfg = core.SIVFConfig(dim=D, n_lists=N_LISTS, n_slabs=64, capacity=32,
+cents = sivf.train_kmeans(jax.random.key(1), jnp.asarray(train), N_LISTS)
+icfg = sivf.SIVFConfig(dim=D, n_lists=N_LISTS, n_slabs=64, capacity=32,
                        n_max=4096, max_chain=32)
-index = core.init_state(icfg, cents)
+index = sivf.Index(icfg, cents, strict=True, min_bucket=8)
 
 docs: dict[int, np.ndarray] = {}
 WINDOW = 24
@@ -55,20 +57,20 @@ for step in range(6):
         batch_vecs.append(embed_doc(toks))
         batch_ids.append(doc_id)
         doc_id += 1
-    index = core.insert(icfg, index, jnp.asarray(np.stack(batch_vecs)),
-                        jnp.asarray(batch_ids, jnp.int32))
+    report = index.add(np.stack(batch_vecs), np.asarray(batch_ids, np.int32))
     expired = [i for i in list(docs) if i < doc_id - WINDOW]
     if expired:
-        index = core.delete(icfg, index, jnp.asarray(expired, jnp.int32))
+        index.remove(np.asarray(expired, np.int32))
         for i in expired:
             docs.pop(i)
-    print(f"  step {step}: live docs = {int(index.n_live)} "
-          f"(window {WINDOW}), O(1) evictions = {len(expired)}")
+    print(f"  step {step}: live docs = {index.n_live} "
+          f"(window {WINDOW}), admitted = {report.accepted}, "
+          f"O(1) evictions = {len(expired)}")
 
 # -- 2. retrieve-and-generate -------------------------------------------------
 query_toks = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
 q_emb = embed_doc(query_toks)[None]
-_, labels = core.search(icfg, index, jnp.asarray(q_emb), 2, N_LISTS)
+_, labels = index.search(q_emb, k=2)          # nprobe=None: probe all lists
 hits = [int(x) for x in np.asarray(labels)[0] if int(x) >= 0]
 print("retrieved docs:", hits)
 assert all(h in docs for h in hits), "retrieval returned an evicted doc!"

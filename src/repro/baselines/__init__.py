@@ -8,8 +8,49 @@
   * ``LSHIndex``        — hash-bucket baseline (paper Table 4).
   * ``HNSWLite``        — small graph baseline; deletion requires rebuild,
                           reproducing the paper's graph-index pathology.
+
+Every baseline implements :class:`repro.core.api.IndexProtocol`
+(``add`` / ``remove`` / ``search`` / ``stats`` / ``n_live``) via
+:class:`ProtocolEngine`, so ``benchmarks/`` and the examples drive SIVF and
+all baselines through one interface. The legacy ``insert``/``delete``
+method names stay as the underlying implementations.
 """
-from repro.baselines.flat import FlatIndex  # noqa: F401
-from repro.baselines.contiguous_ivf import ContiguousIVF  # noqa: F401
-from repro.baselines.lsh import LSHIndex  # noqa: F401
-from repro.baselines.hnsw_lite import HNSWLite  # noqa: F401
+import numpy as np
+
+
+class ProtocolEngine:
+    """Mixin mapping ``insert``/``delete`` engines onto ``IndexProtocol``.
+
+    Reports are measured from live-count deltas: rows the engine silently
+    dropped (bucket/list overflow) surface as ``rejected``. Baselines do
+    not track overwrite semantics, so ``overwritten`` is always 0.
+    """
+
+    def add(self, vecs, ids):
+        from repro.core.api import report_from_counts
+        ids_np = np.asarray(ids).reshape(-1)
+        requested = int((ids_np >= 0).sum())
+        n0 = self.n_live
+        self.insert(vecs, ids)
+        n1 = self.n_live
+        return report_from_counts("add", requested, n1 - n0, 0, n1,
+                                  len(ids_np))
+
+    def remove(self, ids):
+        from repro.core.api import report_from_counts
+        ids_np = np.asarray(ids).reshape(-1)
+        requested = int((ids_np >= 0).sum())
+        n0 = self.n_live
+        self.delete(ids)
+        n1 = self.n_live
+        return report_from_counts("remove", requested, n0 - n1, 0, n1,
+                                  len(ids_np))
+
+    def stats(self) -> dict:
+        return {"engine": type(self).__name__, "n_live": self.n_live}
+
+
+from repro.baselines.flat import FlatIndex  # noqa: F401,E402
+from repro.baselines.contiguous_ivf import ContiguousIVF  # noqa: F401,E402
+from repro.baselines.lsh import LSHIndex  # noqa: F401,E402
+from repro.baselines.hnsw_lite import HNSWLite  # noqa: F401,E402

@@ -21,7 +21,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.baselines import ProtocolEngine
 from repro.core import quantizer
+from repro.core.api import SearchResult
 from repro.utils import l2_sq
 
 
@@ -82,7 +84,7 @@ def _search(centroids, buf, ids, counts, qs, k, nprobe, metric):
     return -nd, jnp.take_along_axis(xi, idx, axis=1)
 
 
-class ContiguousIVF:
+class ContiguousIVF(ProtocolEngine):
     def __init__(self, centroids, list_cap: int = 64, metric: str = "l2"):
         self.centroids = jnp.asarray(centroids, jnp.float32)
         self.metric = metric
@@ -120,9 +122,20 @@ class ContiguousIVF:
         self.buf, self.ids, self.counts = _compact_lists(
             self.buf, self.ids, self.counts, jnp.asarray(ids, jnp.int32))
 
-    def search(self, qs, k, nprobe):
-        return _search(self.centroids, self.buf, self.ids, self.counts,
-                       jnp.asarray(qs, jnp.float32), k, nprobe, self.metric)
+    def search(self, qs, k, nprobe=None):
+        """IVF search; ``nprobe=None`` probes every list."""
+        nprobe = self.centroids.shape[0] if nprobe is None \
+            else min(int(nprobe), self.centroids.shape[0])
+        qs = jnp.asarray(qs, jnp.float32)
+        d, l = _search(self.centroids, self.buf, self.ids, self.counts,
+                       qs, k, nprobe, self.metric)
+        return SearchResult(distances=d, labels=l, k=k, nprobe=nprobe,
+                            padded_to=qs.shape[0])
+
+    def stats(self) -> dict:
+        return {"engine": type(self).__name__, "n_live": self.n_live,
+                "list_cap": int(self.buf.shape[1]),
+                "n_relayouts": self.n_relayouts}
 
     @property
     def n_live(self) -> int:

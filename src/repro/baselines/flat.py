@@ -12,6 +12,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.baselines import ProtocolEngine
+from repro.core.api import SearchResult
 from repro.utils import l2_sq
 
 
@@ -52,7 +54,7 @@ def _search(buf, ids, cursor, qs, k, metric):
     return -nd, ids[idx]
 
 
-class FlatIndex:
+class FlatIndex(ProtocolEngine):
     def __init__(self, dim: int, capacity: int, metric: str = "l2"):
         self.metric = metric
         self.buf = jnp.zeros((capacity, dim), jnp.float32)
@@ -68,9 +70,12 @@ class FlatIndex:
         self.buf, self.ids, self.cursor = _compact(
             self.buf, self.ids, self.cursor, jnp.asarray(ids, jnp.int32))
 
-    def search(self, qs, k):
-        return _search(self.buf, self.ids, self.cursor,
-                       jnp.asarray(qs, jnp.float32), k, self.metric)
+    def search(self, qs, k, nprobe=None):
+        """Exact search; ``nprobe`` accepted for IndexProtocol, unused."""
+        qs = jnp.asarray(qs, jnp.float32)
+        d, l = _search(self.buf, self.ids, self.cursor, qs, k, self.metric)
+        return SearchResult(distances=d, labels=l, k=k, nprobe=0,
+                            padded_to=qs.shape[0])
 
     @property
     def n_live(self) -> int:

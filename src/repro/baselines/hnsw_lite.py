@@ -12,8 +12,10 @@ import heapq
 
 import numpy as np
 
+from repro.baselines import ProtocolEngine
 
-class HNSWLite:
+
+class HNSWLite(ProtocolEngine):
     def __init__(self, dim: int, m: int = 8, ef: int = 32,
                  metric: str = "l2"):
         self.dim, self.m, self.ef, self.metric = dim, m, ef, metric
@@ -75,7 +77,9 @@ class HNSWLite:
         for i, v in survivors:
             self._insert_one(i, v)
 
-    def search(self, qs, k):
+    def search(self, qs, k, nprobe=None):
+        """Graph search; ``nprobe`` accepted for IndexProtocol, unused."""
+        from repro.core.api import SearchResult
         qs = np.asarray(qs, np.float32)
         out_d = np.full((len(qs), k), np.inf, np.float32)
         out_l = np.full((len(qs), k), -1, np.int64)
@@ -84,7 +88,8 @@ class HNSWLite:
             for j, (d, u) in enumerate(res):
                 out_d[qi, j] = d
                 out_l[qi, j] = u
-        return out_d, out_l
+        return SearchResult(distances=out_d, labels=out_l, k=k, nprobe=0,
+                            padded_to=len(qs))
 
     @property
     def n_live(self) -> int:

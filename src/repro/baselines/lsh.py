@@ -11,6 +11,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.baselines import ProtocolEngine
+from repro.core.api import SearchResult
 from repro.utils import l2_sq
 
 
@@ -75,7 +77,7 @@ def _search(bucket_vecs, bucket_ids, planes, qs, k, metric):
     return -nd, jnp.take_along_axis(xis, idx, axis=1)
 
 
-class LSHIndex:
+class LSHIndex(ProtocolEngine):
     def __init__(self, key, dim: int, n_tables: int = 4, bits: int = 8,
                  bucket_cap: int = 64, metric: str = "l2"):
         self.metric = metric
@@ -95,6 +97,15 @@ class LSHIndex:
         self.bucket_ids = _tombstone(self.bucket_ids,
                                      jnp.asarray(ids, jnp.int32))
 
-    def search(self, qs, k):
-        return _search(self.bucket_vecs, self.bucket_ids, self.planes,
-                       jnp.asarray(qs, jnp.float32), k, self.metric)
+    def search(self, qs, k, nprobe=None):
+        """Hash-bucket search; ``nprobe`` accepted for IndexProtocol, unused."""
+        qs = jnp.asarray(qs, jnp.float32)
+        d, l = _search(self.bucket_vecs, self.bucket_ids, self.planes,
+                       qs, k, self.metric)
+        return SearchResult(distances=d, labels=l, k=k, nprobe=0,
+                            padded_to=qs.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        """Live entries in table 0 (approximate under bucket overflow)."""
+        return int(jnp.sum(self.bucket_ids[0] >= 0))

@@ -93,6 +93,21 @@ class CheckpointManager:
         for s in steps[: -self.keep_last]:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
+    # -- metadata sidecars ----------------------------------------------------
+
+    def save_metadata(self, name: str, obj: dict) -> None:
+        """Atomically publish a JSON sidecar (e.g. index config/topology)."""
+        tmp = self.dir / f"{name}.json.tmp"
+        with open(tmp, "w") as f:
+            json.dump(obj, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.dir / f"{name}.json")
+
+    def load_metadata(self, name: str) -> dict:
+        with open(self.dir / f"{name}.json") as f:
+            return json.load(f)
+
     # -- restore --------------------------------------------------------------
 
     def all_steps(self) -> list[int]:

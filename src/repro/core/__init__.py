@@ -19,3 +19,11 @@ from repro.core.index import (  # noqa: F401
 )
 from repro.core.quantizer import assign, probe, train_kmeans  # noqa: F401
 from repro.core.reference import ReferenceIndex  # noqa: F401
+from repro.core.api import (  # noqa: F401
+    ErrorCode,
+    Index,
+    IndexProtocol,
+    MutationRejected,
+    MutationReport,
+    SearchResult,
+)

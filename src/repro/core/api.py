@@ -1,0 +1,580 @@
+"""``sivf.Index`` — the unified streaming-session facade over SIVF backends.
+
+The paper ships SIVF behind one mutable Faiss-style handle; this module is
+that handle for the JAX reproduction. It folds the three parallel surfaces
+(``core.index`` free functions, ``core.distributed.dist_*``, and the
+baselines' ad-hoc signatures) into a single stateful session object:
+
+    cfg = SIVFConfig(dim=64, n_lists=32, n_slabs=512)
+    index = Index(cfg, centroids)                  # or backend=mesh
+    report = index.add(vecs, ids)                  # -> MutationReport
+    result = index.search(queries, k=10, nprobe=8) # -> SearchResult
+    report = index.remove(ids)
+    index.save(path); index = Index.load(path)
+
+Design points (ISSUE 2):
+
+  * **One code path over backends.** ``backend="single"`` wraps the
+    batched kernels of ``core.index``; ``backend=<jax Mesh>`` wraps the
+    shard-mapped builders of ``core.distributed``. The handle logic —
+    batch bucketing, error decoding, report accounting — is identical for
+    both; only the raw jitted op differs.
+  * **Structured error reporting.** The core kernels accumulate sticky
+    int error bits in ``state.error``; the handle converts them into a
+    per-batch :class:`MutationReport` with a typed :class:`ErrorCode` and
+    disjoint ``accepted`` / ``overwritten`` / ``rejected`` counts, then
+    clears the handled bits so each report describes exactly one batch.
+    ``strict=True`` (per handle or per call) raises
+    :class:`MutationRejected` instead.
+  * **Bounded jit compilations under ragged streaming.** Live clients send
+    arbitrary batch sizes; every batch is padded to the next power-of-two
+    bucket (floor ``min_bucket``), so a stream whose batches span sizes
+    ``[1, S]`` compiles at most ``log2(S / min_bucket) + 1`` add / remove /
+    search executables. This is *measured*, not assumed:
+    :meth:`Index.compile_stats` exposes the jit cache sizes and the tests
+    assert the bound over 8+ distinct ragged sizes.
+  * **Persistence** goes through ``checkpoint/manager.py`` (atomic,
+    checksummed) plus a JSON sidecar holding the config and backend
+    topology, so :meth:`Index.load` can rebuild the handle.
+  * :class:`IndexProtocol` is the structural interface the baselines
+    (``baselines/contiguous_ivf.py``, ``baselines/lsh.py``, ...) also
+    implement, so benchmarks and examples drive every engine identically.
+
+The old functional API (``core.insert/delete/search``, ``dist_*``) remains
+importable and delegates to the same kernels; see README for the migration
+map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import lru_cache, partial
+from types import SimpleNamespace
+from typing import Iterator, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import index as ix
+from repro.core import quantizer
+from repro.core.state import (
+    ERR_CHAIN_OVERFLOW,
+    ERR_ID_RANGE,
+    ERR_POOL_EXHAUSTED,
+    SIVFConfig,
+    SlabPoolState,
+    clear_error as _clear_error,
+    init_state,
+)
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Report types
+# ---------------------------------------------------------------------------
+
+class ErrorCode(enum.IntFlag):
+    """Typed view of the core kernels' sticky ``state.error`` bits."""
+
+    NONE = 0
+    POOL_EXHAUSTED = ERR_POOL_EXHAUSTED
+    ID_RANGE = ERR_ID_RANGE
+    CHAIN_OVERFLOW = ERR_CHAIN_OVERFLOW
+
+
+@dataclasses.dataclass(frozen=True)
+class MutationReport:
+    """Per-batch admission report for :meth:`Index.add` / :meth:`Index.remove`.
+
+    The three counts are disjoint and sum to ``requested``:
+
+      * ``accepted``    — distinct new ids now live in the index;
+      * ``overwritten`` — distinct ids that existed before the batch and
+        whose payload was replaced (delete-then-insert semantics);
+      * ``rejected``    — everything else: rows superseded by a later
+        duplicate in the same batch, ids outside ``[0, n_max)``, and rows
+        dropped by a pool-exhausted / chain-overflow failure. On a failed
+        batch, ids that were *being* overwritten are also counted here —
+        the core linearizes overwrite as delete-then-insert, so their old
+        payload is gone (visible as a drop in ``n_live``).
+
+    All counts are measured from device state (live totals and address-
+    table presence before/after), not inferred, so they stay truthful under
+    partial per-shard failures on the mesh backend.
+    """
+
+    op: str                 # "add" | "remove"
+    requested: int          # non-padding rows in the caller's batch
+    accepted: int
+    overwritten: int
+    rejected: int
+    errors: ErrorCode       # this batch's error bits (already cleared)
+    n_live: int             # total live vectors after the batch
+    padded_to: int          # bucket shape the batch was padded to
+
+    @property
+    def ok(self) -> bool:
+        return self.errors == ErrorCode.NONE
+
+
+class MutationRejected(RuntimeError):
+    """Raised in strict mode when a batch reports any error bit."""
+
+    def __init__(self, report: MutationReport):
+        super().__init__(
+            f"{report.op} batch rejected: errors={report.errors!r} "
+            f"accepted={report.accepted} overwritten={report.overwritten} "
+            f"rejected={report.rejected} of requested={report.requested}")
+        self.report = report
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Top-k result. Iterable as ``(distances, labels)`` for tuple-compat."""
+
+    distances: jax.Array    # [Q, k] f32 (inf pads empty slots)
+    labels: jax.Array       # [Q, k] int32 external ids (-1 pads)
+    k: int
+    nprobe: int
+    padded_to: int          # query bucket the batch was padded to
+
+    def __iter__(self) -> Iterator:
+        return iter((self.distances, self.labels))
+
+
+@runtime_checkable
+class IndexProtocol(Protocol):
+    """Structural interface every engine (SIVF + baselines) implements.
+
+    ``benchmarks/`` and ``examples/streaming_rag.py`` drive all engines
+    through this surface; engines without IVF probing accept and ignore
+    ``nprobe``.
+    """
+
+    def add(self, vecs, ids) -> MutationReport: ...
+
+    def remove(self, ids) -> MutationReport: ...
+
+    def search(self, queries, k: int, nprobe: int | None = None
+               ) -> SearchResult: ...
+
+    def stats(self) -> dict: ...
+
+    @property
+    def n_live(self) -> int: ...
+
+
+def report_from_counts(op: str, requested: int, accepted: int,
+                       overwritten: int, n_live: int, padded_to: int,
+                       errors: ErrorCode = ErrorCode.NONE) -> MutationReport:
+    """Build a consistent report from host-side counts (baseline engines)."""
+    accepted = max(int(accepted), 0)
+    overwritten = max(int(overwritten), 0)
+    return MutationReport(
+        op=op, requested=int(requested), accepted=accepted,
+        overwritten=overwritten,
+        rejected=max(int(requested) - accepted - overwritten, 0),
+        errors=errors, n_live=int(n_live), padded_to=int(padded_to))
+
+
+# ---------------------------------------------------------------------------
+# Traced accounting helpers (run inside the jitted mutation wrappers)
+# ---------------------------------------------------------------------------
+
+def _count_unique(ids: jax.Array, mask: jax.Array) -> jax.Array:
+    """Number of distinct ids where ``mask`` holds (traced)."""
+    key = jnp.where(mask, ids, _I32_MAX)
+    s = jnp.sort(key)
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    return jnp.sum((first & (s != _I32_MAX)).astype(jnp.int32))
+
+
+def _or_bits(err: jax.Array) -> jax.Array:
+    """Bitwise-OR reduce error bits over any shape (per-shard arrays)."""
+    acc = jnp.zeros((), jnp.int32)
+    for bit in (ERR_POOL_EXHAUSTED, ERR_ID_RANGE, ERR_CHAIN_OVERFLOW):
+        acc = acc | jnp.where(jnp.any((err & bit) != 0), bit, 0)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Backend op factories (cached so handles with equal configs share jit
+# caches — this is what keeps compile counts bounded across sessions)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _single_ops(cfg: SIVFConfig, impl: str, block_q: int,
+                use_tables: bool | None) -> SimpleNamespace:
+    """Jitted single-device insert/delete/search with report accounting."""
+
+    def _presence(state, ids, valid):
+        return valid & (state.att_slab[jnp.clip(ids, 0, cfg.n_max - 1)] >= 0)
+
+    def _pre(state, ids):
+        valid = (ids >= 0) & (ids < cfg.n_max)
+        pb = _presence(state, ids, valid)
+        aux = {"n_valid": _count_unique(ids, valid),
+               "n_present": _count_unique(ids, pb),
+               "n_live_before": state.n_live}
+        return valid, pb, aux
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def insert_fn(state, vecs, ids):
+        valid, pb, aux = _pre(state, ids)
+        lists = quantizer.assign(state.centroids, vecs.astype(cfg.dtype),
+                                 cfg.metric)
+        st = ix._insert_impl(cfg, _clear_error(state), vecs, ids, lists)
+        aux["errors"] = _or_bits(st.error)
+        aux["n_live_after"] = st.n_live
+        aux["n_overwritten"] = _count_unique(
+            ids, pb & _presence(st, ids, valid))
+        return _clear_error(st), aux
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def delete_fn(state, ids):
+        _, _, aux = _pre(state, ids)
+        st = ix._delete_impl(cfg, _clear_error(state), ids)
+        aux["errors"] = _or_bits(st.error)
+        aux["n_live_after"] = st.n_live
+        aux["n_overwritten"] = jnp.zeros((), jnp.int32)
+        return _clear_error(st), aux
+
+    @partial(jax.jit, static_argnums=(2, 3))
+    def search_fn(state, queries, k, nprobe):
+        return ix._search_impl(cfg, state, queries, k, nprobe, use_tables,
+                               impl, block_q)
+
+    return SimpleNamespace(insert=insert_fn, delete=delete_fn,
+                           search=search_fn, n_shards=1)
+
+
+@lru_cache(maxsize=None)
+def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
+              block_q: int, use_tables: bool | None) -> SimpleNamespace:
+    """Jitted shard_map insert/delete/search over a stacked sharded state."""
+    from repro.core import distributed as dist
+    n = mesh.shape[axis]
+    raw_insert = dist.sharded_insert(cfg, mesh, axis)
+    raw_delete = dist.sharded_delete(cfg, mesh, axis)
+    raw_search = dist.sharded_search(cfg, mesh, axis, impl, block_q,
+                                     use_tables)
+
+    def _presence(state, ids, valid):
+        # an id lives only on its owner shard: gather that shard's ATT row
+        owner = jnp.where(ids >= 0, ids % n, 0)
+        slot = state.att_slab[owner, jnp.clip(ids, 0, cfg.n_max - 1)]
+        return valid & (slot >= 0)
+
+    def _pre(state, ids):
+        valid = (ids >= 0) & (ids < cfg.n_max)
+        pb = _presence(state, ids, valid)
+        aux = {"n_valid": _count_unique(ids, valid),
+               "n_present": _count_unique(ids, pb),
+               "n_live_before": jnp.sum(state.n_live)}
+        return valid, pb, aux
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def insert_fn(state, vecs, ids):
+        valid, pb, aux = _pre(state, ids)
+        st = raw_insert(_clear_error(state), vecs, ids)
+        aux["errors"] = _or_bits(st.error)
+        aux["n_live_after"] = jnp.sum(st.n_live)
+        aux["n_overwritten"] = _count_unique(
+            ids, pb & _presence(st, ids, valid))
+        return _clear_error(st), aux
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def delete_fn(state, ids):
+        _, _, aux = _pre(state, ids)
+        st = raw_delete(_clear_error(state), ids)
+        aux["errors"] = _or_bits(st.error)
+        aux["n_live_after"] = jnp.sum(st.n_live)
+        aux["n_overwritten"] = jnp.zeros((), jnp.int32)
+        return _clear_error(st), aux
+
+    @partial(jax.jit, static_argnums=(2, 3))
+    def search_fn(state, queries, k, nprobe):
+        return raw_search(state, queries, k, nprobe)
+
+    return SimpleNamespace(insert=insert_fn, delete=delete_fn,
+                           search=search_fn, n_shards=n)
+
+
+# ---------------------------------------------------------------------------
+# The handle
+# ---------------------------------------------------------------------------
+
+class Index:
+    """Stateful SIVF session handle; see module docstring for the contract.
+
+    Parameters
+    ----------
+    cfg:        static :class:`SIVFConfig` (hashable; keys the jit caches).
+    centroids:  ``[n_lists, dim]`` coarse-quantizer centroids.
+    backend:    ``"single"`` (default) or a ``jax.sharding.Mesh`` whose
+                ``axis`` dimension data-shards the index (paper §4.2).
+    impl:       scan->top-k backend: "xla" | "pallas" | "pallas_interpret".
+    block_q:    fused kernel query-tile height.
+    use_tables: dense-table vs pointer-walk slab lookup (None = cfg default).
+    strict:     raise :class:`MutationRejected` on any per-batch error bit.
+    min_bucket: smallest padded batch shape; batches are padded to
+                ``max(min_bucket, next_pow2(B))`` so ragged streams trigger
+                a bounded number of jit compilations.
+    """
+
+    def __init__(self, cfg: SIVFConfig, centroids, backend="single", *,
+                 axis: str = "data", impl: str = "xla", block_q: int = 8,
+                 use_tables: bool | None = None, strict: bool = False,
+                 min_bucket: int = 64, _state: SlabPoolState | None = None):
+        if min_bucket < 1:
+            raise ValueError("min_bucket must be >= 1")
+        self.cfg = cfg
+        self.strict = bool(strict)
+        self.min_bucket = int(min_bucket)
+        self._axis = axis
+        self._impl = impl
+        self._block_q = int(block_q)
+        self._use_tables = use_tables
+        if isinstance(backend, str) and backend == "single":
+            self._backend_kind = "single"
+            self._mesh = None
+            self._ops = _single_ops(cfg, impl, self._block_q, use_tables)
+            if _state is None:
+                _state = init_state(cfg, jnp.asarray(centroids))
+        elif isinstance(backend, Mesh):
+            from repro.core import distributed as dist
+            self._backend_kind = "mesh"
+            self._mesh = backend
+            self._ops = _mesh_ops(cfg, backend, axis, impl, self._block_q,
+                                  use_tables)
+            if _state is None:
+                _state = dist.init_sharded_state(
+                    cfg, jnp.asarray(centroids), backend, axis)
+        else:
+            raise TypeError(
+                f"backend must be 'single' or a jax Mesh, got {backend!r}")
+        self._state = _state
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def backend(self) -> str:
+        return self._backend_kind
+
+    @property
+    def n_shards(self) -> int:
+        return self._ops.n_shards
+
+    @property
+    def state(self) -> SlabPoolState:
+        """The underlying pytree (functional-API interop; treat read-only)."""
+        return self._state
+
+    @property
+    def n_live(self) -> int:
+        return int(jnp.sum(self._state.n_live))
+
+    def __len__(self) -> int:
+        return self.n_live
+
+    def stats(self) -> dict:
+        """Occupancy/fragmentation report + handle/backend metadata."""
+        s = ix.stats(self.cfg, self._state)
+        s["backend"] = self._backend_kind
+        s["n_shards"] = self.n_shards
+        s["compiles"] = self.compile_stats()
+        return s
+
+    def compile_stats(self) -> dict:
+        """Observed jit-executable counts for this handle's op set.
+
+        Counters are shared between handles constructed with an identical
+        (cfg, backend, impl, block_q, use_tables) tuple — that sharing is
+        deliberate (sessions over the same index config reuse executables).
+        Use a fresh ``SIVFConfig`` to measure in isolation.
+        """
+        def size(f):
+            try:
+                return int(f._cache_size())
+            except Exception:               # pragma: no cover - private API
+                return -1
+        return {"add": size(self._ops.insert),
+                "remove": size(self._ops.delete),
+                "search": size(self._ops.search)}
+
+    # -- batch bucketing ----------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        return b
+
+    def bucket_shapes(self, max_size: int) -> list[int]:
+        """The bounded set of padded shapes for batches up to ``max_size``."""
+        out = [self.min_bucket]
+        while out[-1] < max_size:
+            out.append(out[-1] * 2)
+        return out
+
+    def _pad_ids(self, ids: np.ndarray, bucket: int) -> jax.Array:
+        out = np.full((bucket,), -1, np.int32)
+        out[: len(ids)] = ids
+        return jnp.asarray(out)
+
+    def _pad_rows(self, rows: np.ndarray, bucket: int) -> jax.Array:
+        out = np.zeros((bucket, self.cfg.dim), np.float32)
+        out[: len(rows)] = rows
+        return jnp.asarray(out)
+
+    # -- mutation -----------------------------------------------------------
+
+    def add(self, vecs, ids, *, strict: bool | None = None) -> MutationReport:
+        """Ingest a batch. ``vecs [B, D]``, ``ids [B]`` (-1 rows skipped).
+
+        Re-adding a live id overwrites its payload (paper delete-then-insert
+        semantics); within-batch duplicate ids keep the last row.
+        """
+        vecs = np.asarray(vecs, np.float32)
+        ids_np = np.asarray(ids, np.int32).reshape(-1)
+        if vecs.ndim != 2 or vecs.shape[0] != ids_np.shape[0]:
+            raise ValueError(
+                f"vecs {vecs.shape} / ids {ids_np.shape} mismatch")
+        if vecs.shape[1] != self.cfg.dim:
+            raise ValueError(f"dim {vecs.shape[1]} != cfg.dim {self.cfg.dim}")
+        bucket = self._bucket(len(ids_np))
+        self._state, aux = self._ops.insert(
+            self._state, self._pad_rows(vecs, bucket),
+            self._pad_ids(ids_np, bucket))
+        return self._report("add", int((ids_np >= 0).sum()), aux, bucket,
+                            strict)
+
+    def remove(self, ids, *, strict: bool | None = None) -> MutationReport:
+        """Evict a batch of ids in O(1); absent ids count as ``rejected``."""
+        ids_np = np.asarray(ids, np.int32).reshape(-1)
+        bucket = self._bucket(len(ids_np))
+        self._state, aux = self._ops.delete(self._state,
+                                            self._pad_ids(ids_np, bucket))
+        return self._report("remove", int((ids_np >= 0).sum()), aux, bucket,
+                            strict)
+
+    def _report(self, op: str, requested: int, aux: dict, bucket: int,
+                strict: bool | None) -> MutationReport:
+        n0 = int(aux["n_live_before"])
+        n1 = int(aux["n_live_after"])
+        errors = ErrorCode(int(aux["errors"]))
+        if op == "add":
+            overwritten = int(aux["n_overwritten"])
+            # every pre-present id was deleted first, so the live delta is
+            # (new adds) + (overwrites re-inserted) - (pre-present deleted)
+            accepted = max(n1 - n0 + int(aux["n_present"]) - overwritten, 0)
+        else:
+            overwritten = 0
+            accepted = max(n0 - n1, 0)
+        report = MutationReport(
+            op=op, requested=requested, accepted=accepted,
+            overwritten=overwritten,
+            rejected=max(requested - accepted - overwritten, 0),
+            errors=errors, n_live=n1, padded_to=bucket)
+        strict = self.strict if strict is None else strict
+        if strict and not report.ok:
+            raise MutationRejected(report)
+        return report
+
+    # -- search -------------------------------------------------------------
+
+    def search(self, queries, k: int, nprobe: int | None = None
+               ) -> SearchResult:
+        """Top-k search; ``nprobe=None`` probes every list (exact recall)."""
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        if queries.shape[1] != self.cfg.dim:
+            raise ValueError(
+                f"dim {queries.shape[1]} != cfg.dim {self.cfg.dim}")
+        nprobe = self.cfg.n_lists if nprobe is None \
+            else min(int(nprobe), self.cfg.n_lists)
+        q = queries.shape[0]
+        bucket = self._bucket(q)
+        d, l = self._ops.search(self._state, self._pad_rows(queries, bucket),
+                                int(k), nprobe)
+        return SearchResult(distances=d[:q], labels=l[:q], k=int(k),
+                            nprobe=nprobe, padded_to=bucket)
+
+    # -- persistence --------------------------------------------------------
+
+    _META = "index"
+
+    def save(self, path) -> None:
+        """Persist the index (atomic + checksummed via CheckpointManager)."""
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(path, keep_last=1)
+        cfg = dataclasses.asdict(self.cfg)
+        cfg["dtype"] = np.dtype(self.cfg.dtype).name
+        mgr.save_metadata(self._META, {
+            "format": 1,
+            "backend": self._backend_kind,
+            "n_shards": self.n_shards,
+            "axis": self._axis,
+            "impl": self._impl,
+            "block_q": self._block_q,
+            "use_tables": self._use_tables,
+            "strict": self.strict,
+            "min_bucket": self.min_bucket,
+            "cfg": cfg,
+        })
+        mgr.save(0, self._state)
+
+    @classmethod
+    def load(cls, path, backend=None, **overrides) -> "Index":
+        """Rebuild a handle from :meth:`save` output.
+
+        Single-device checkpoints load with no arguments. Sharded
+        checkpoints need the target ``backend=<Mesh>`` (same shard count —
+        elastic resharding of the slab pool is future work); keyword
+        ``overrides`` replace any saved handle option (impl, strict, ...).
+        """
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(path)
+        meta = mgr.load_metadata(cls._META)
+        cfg_d = dict(meta["cfg"])
+        cfg_d["dtype"] = jnp.dtype(cfg_d["dtype"])
+        cfg = SIVFConfig(**cfg_d)
+        kw = {"axis": meta["axis"], "impl": meta["impl"],
+              "block_q": meta["block_q"], "use_tables": meta["use_tables"],
+              "strict": meta["strict"], "min_bucket": meta["min_bucket"]}
+        kw.update(overrides)
+        if meta["backend"] == "mesh":
+            if not isinstance(backend, Mesh):
+                raise ValueError(
+                    "sharded checkpoint: pass the target mesh as backend=")
+            if backend.shape[kw["axis"]] != meta["n_shards"]:
+                raise ValueError(
+                    f"checkpoint has {meta['n_shards']} shards but mesh axis "
+                    f"{kw['axis']!r} has {backend.shape[kw['axis']]}")
+        else:
+            backend = "single" if backend is None else backend
+            if backend != "single":
+                raise ValueError("single-device checkpoint: backend must be "
+                                 "'single' (resharding unsupported)")
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint steps under {path}")
+        # abstract example tree: restore needs only structure/shapes, so no
+        # throwaway zero pool is ever allocated next to the restored one
+        example = jax.eval_shape(lambda: init_state(
+            cfg, jnp.zeros((cfg.n_lists, cfg.dim), cfg.dtype)))
+        sharding_tree = None
+        if meta["backend"] == "mesh":
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            n = meta["n_shards"]
+            example = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((n,) + x.shape, x.dtype),
+                example)
+            sharding_tree = jax.tree.map(
+                lambda _: NamedSharding(backend, P(kw["axis"])), example)
+        state = mgr.restore(step, example, sharding_tree=sharding_tree)
+        return cls(cfg, None, backend=backend, _state=state, **kw)

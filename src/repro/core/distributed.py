@@ -15,10 +15,13 @@ mesh axis:
     MPI_Gather / tree reduction).
   * **Deletion** — broadcast; ids live on exactly one shard, others no-op
     (paper: "the target ID exists on at most one worker").
+
+The ``sharded_*`` builders return the raw shard-mapped callables; they are
+the single code path behind both the legacy ``dist_*`` free functions and
+the ``sivf.Index`` mesh backend (``core/api.py``), which wraps them in jit
+with buffer donation and shape-bucketed batches.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -48,72 +51,120 @@ def _spec_tree(state: SlabPoolState, axis: str):
     return jax.tree.map(lambda _: P(axis), state)
 
 
+# ---------------------------------------------------------------------------
+# Shard-mapped op builders (one code path for dist_* and sivf.Index)
+# ---------------------------------------------------------------------------
+
+def sharded_insert(cfg: SIVFConfig, mesh: Mesh, axis: str = "data"):
+    """Broadcast-ingest op: each shard ingests the ids it owns.
+
+    Returns ``run(state, vecs, ext_ids) -> state``. Building the shard_map
+    wrapper happens at trace time, so callers that jit ``run`` pay it once
+    per shape bucket.
+    """
+    n = mesh.shape[axis]
+
+    def run(state: SlabPoolState, vecs: jax.Array, ext_ids: jax.Array
+            ) -> SlabPoolState:
+        def local(st, v, i):
+            st = jax.tree.map(lambda x: x[0], st)
+            me = jax.lax.axis_index(axis)
+            mine = shard_of(i, n) == me
+            from repro.core.quantizer import assign
+            lists = assign(st.centroids, v.astype(cfg.dtype), cfg.metric)
+            st = ix._insert_impl(cfg, st, v, jnp.where(mine, i, -1), lists)
+            return jax.tree.map(lambda x: x[None], st)
+
+        f = shard_map_compat(
+            local, mesh=mesh, check_vma=False,
+            in_specs=(_spec_tree(state, axis), P(), P()),
+            out_specs=_spec_tree(state, axis))
+        return f(state, vecs, ext_ids)
+
+    return run
+
+
+def sharded_delete(cfg: SIVFConfig, mesh: Mesh, axis: str = "data"):
+    """Broadcast-delete op: non-owners see ATT misses and no-op.
+
+    Returns ``run(state, ext_ids) -> state``.
+    """
+
+    def run(state: SlabPoolState, ext_ids: jax.Array) -> SlabPoolState:
+        def local(st, i):
+            st = jax.tree.map(lambda x: x[0], st)
+            st = ix._delete_impl(cfg, st, i)
+            return jax.tree.map(lambda x: x[None], st)
+
+        f = shard_map_compat(
+            local, mesh=mesh, check_vma=False,
+            in_specs=(_spec_tree(state, axis), P()),
+            out_specs=_spec_tree(state, axis))
+        return f(state, ext_ids)
+
+    return run
+
+
+def sharded_search(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
+                   impl: str = "xla", block_q: int = 8,
+                   use_tables: bool | None = None):
+    """Scatter-gather search op: fused local top-k, all-gather, global merge.
+
+    Returns ``run(state, queries, k, nprobe) -> (dists, labels)`` where
+    ``k``/``nprobe`` must be trace-time constants. Each shard runs the same
+    unified scan->top-k dispatch as ``core.search`` (``impl`` selects
+    xla / pallas / pallas_interpret), so only the fused [Q, k] partials ever
+    cross the interconnect — never per-slab candidates.
+    """
+
+    def run(state: SlabPoolState, queries: jax.Array, k: int, nprobe: int
+            ) -> tuple[jax.Array, jax.Array]:
+        def local(st, q):
+            st = jax.tree.map(lambda x: x[0], st)
+            d, l = ix._search_impl(cfg, st, q, k, nprobe, use_tables, impl,
+                                   block_q)
+            # gather fused [Q, k] partials from all shards (paper MPI_Gather)
+            dg = jax.lax.all_gather(d, axis)                   # [S, Q, k]
+            lg = jax.lax.all_gather(l, axis)
+            s, qn, _ = dg.shape
+            dg = jnp.moveaxis(dg, 0, 1).reshape(qn, s * k)
+            lg = jnp.moveaxis(lg, 0, 1).reshape(qn, s * k)
+            nd, idx = jax.lax.top_k(-dg, k)                    # global merge
+            return -nd, jnp.take_along_axis(lg, idx, axis=1)
+
+        f = shard_map_compat(
+            local, mesh=mesh, check_vma=False,
+            in_specs=(_spec_tree(state, axis), P()),
+            out_specs=(P(), P()))
+        return f(state, queries)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Legacy free-function surface (thin delegation; prefer sivf.Index)
+# ---------------------------------------------------------------------------
+
 def dist_insert(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
                 vecs: jax.Array, ext_ids: jax.Array, axis: str = "data"
                 ) -> SlabPoolState:
     """Broadcast batch; each shard ingests the ids it owns."""
-    n = mesh.shape[axis]
-
-    def local(st, v, i):
-        st = jax.tree.map(lambda x: x[0], st)
-        me = jax.lax.axis_index(axis)
-        mine = shard_of(i, n) == me
-        from repro.core.quantizer import assign
-        lists = assign(st.centroids, v.astype(cfg.dtype), cfg.metric)
-        st = ix._insert_impl(cfg, st, v, jnp.where(mine, i, -1), lists)
-        return jax.tree.map(lambda x: x[None], st)
-
-    f = shard_map_compat(
-        local, mesh=mesh, check_vma=False,
-        in_specs=(_spec_tree(state, axis), P(), P()),
-        out_specs=_spec_tree(state, axis))
-    return f(state, vecs, ext_ids)
+    return sharded_insert(cfg, mesh, axis)(state, vecs, ext_ids)
 
 
 def dist_delete(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
                 ext_ids: jax.Array, axis: str = "data") -> SlabPoolState:
     """Broadcast deletes; non-owners see ATT misses and no-op."""
-
-    def local(st, i):
-        st = jax.tree.map(lambda x: x[0], st)
-        st = ix._delete_impl(cfg, st, i)
-        return jax.tree.map(lambda x: x[None], st)
-
-    f = shard_map_compat(
-        local, mesh=mesh, check_vma=False,
-        in_specs=(_spec_tree(state, axis), P()),
-        out_specs=_spec_tree(state, axis))
-    return f(state, ext_ids)
+    return sharded_delete(cfg, mesh, axis)(state, ext_ids)
 
 
 def dist_search(cfg: SIVFConfig, mesh: Mesh, state: SlabPoolState,
                 queries: jax.Array, k: int, nprobe: int, axis: str = "data",
                 impl: str = "xla", block_q: int = 8
                 ) -> tuple[jax.Array, jax.Array]:
-    """Scatter-gather: fused local top-k per shard, all-gather, global merge.
-
-    Each shard runs the same unified scan->top-k dispatch as `core.search`
-    (``impl`` selects xla / pallas / pallas_interpret), so only the fused
-    [Q, k] partials ever cross the interconnect — never per-slab candidates.
-    """
-
-    def local(st, q):
-        st = jax.tree.map(lambda x: x[0], st)
-        d, l = ix._search_impl(cfg, st, q, k, nprobe, None, impl, block_q)
-        # gather fused [Q, k] partials from all shards (paper's MPI_Gather)
-        dg = jax.lax.all_gather(d, axis)                   # [S, Q, k]
-        lg = jax.lax.all_gather(l, axis)
-        s, qn, _ = dg.shape
-        dg = jnp.moveaxis(dg, 0, 1).reshape(qn, s * k)
-        lg = jnp.moveaxis(lg, 0, 1).reshape(qn, s * k)
-        nd, idx = jax.lax.top_k(-dg, k)                    # global merge
-        return -nd, jnp.take_along_axis(lg, idx, axis=1)
-
-    f = shard_map_compat(
-        local, mesh=mesh, check_vma=False,
-        in_specs=(_spec_tree(state, axis), P()),
-        out_specs=(P(), P()))
-    return f(state, queries)
+    """Scatter-gather search across the mesh (see ``sharded_search``)."""
+    return sharded_search(cfg, mesh, axis, impl, block_q)(
+        state, queries, k, nprobe)
 
 
 def total_live(state: SlabPoolState) -> int:

@@ -20,6 +20,13 @@ protocols (Algorithms 1, 2, 4) become *bulk-synchronous batched plans*:
 
 All ops are jit-compiled with state donation: the returned state reuses the
 input buffers (XLA in-place), mirroring "in-place mutation in VRAM".
+
+This module is the *functional* surface (explicit cfg/state threading). The
+preferred client entry point is the stateful session handle
+``sivf.Index`` (``core/api.py``), which owns the state, buckets ragged
+batches, and turns the sticky ``state.error`` bits into per-batch
+``MutationReport``s; these free functions remain supported and the handle
+delegates to the same kernels.
 """
 from __future__ import annotations
 
@@ -432,7 +439,36 @@ def search(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
 # ---------------------------------------------------------------------------
 
 def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
-    """Occupancy / fragmentation report (paper §5.6.2)."""
+    """Occupancy / fragmentation report (paper §5.6.2).
+
+    Handles both a single-device ``SlabPoolState`` and the stacked
+    per-shard state produced by ``distributed.init_sharded_state`` (leaves
+    carry a leading shard axis): shard occupancy is aggregated, the live
+    count folds ``distributed.total_live``, and error bits are OR-reduced.
+    """
+    import numpy as np
+    free_top = np.asarray(state.free_top)
+    if free_top.ndim:                      # stacked per-shard state
+        from repro.core.distributed import total_live
+        used_per = (cfg.n_slabs - free_top).astype(int)
+        used = int(used_per.sum())
+        live = total_live(state)
+        alloc_slots = used * cfg.capacity
+        table_len = np.asarray(state.table_len)          # [S, n_lists]
+        err = int(np.bitwise_or.reduce(np.asarray(state.error).ravel()))
+        return {
+            "n_live": live,
+            "slabs_used": used,
+            "free_slabs": int(free_top.sum()),
+            "alloc_slots": alloc_slots,
+            "fill_frac": live / max(alloc_slots, 1),
+            "error": err,
+            "max_chain_len": int(table_len.max()),
+            "mean_chain_len": float(table_len.mean()),
+            "n_shards": int(free_top.shape[0]),
+            "per_shard_live": np.asarray(state.n_live).astype(int).tolist(),
+            "per_shard_slabs_used": used_per.tolist(),
+        }
     used = int(cfg.n_slabs - state.free_top)
     live = int(state.n_live)
     alloc_slots = used * cfg.capacity

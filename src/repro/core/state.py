@@ -101,6 +101,17 @@ ERR_ID_RANGE = 2
 ERR_CHAIN_OVERFLOW = 4
 
 
+def clear_error(state: SlabPoolState) -> SlabPoolState:
+    """Return ``state`` with the sticky error bits zeroed.
+
+    The error word is cumulative by design (fail-fast kernels OR bits in);
+    the session facade (``core/api.py``) snapshots the bits into a typed
+    per-batch ``MutationReport`` and clears them with this helper so each
+    report describes exactly one batch.
+    """
+    return dataclasses.replace(state, error=jnp.zeros_like(state.error))
+
+
 def init_state(cfg: SIVFConfig, centroids: jax.Array) -> SlabPoolState:
     """Fresh empty pool. ``centroids`` [n_lists, D] from the coarse quantizer."""
     if centroids.shape != (cfg.n_lists, cfg.dim):
@@ -124,7 +135,9 @@ def init_state(cfg: SIVFConfig, centroids: jax.Array) -> SlabPoolState:
         att_slot=jnp.zeros((cfg.n_max,), jnp.int32),
         n_live=jnp.array(0, jnp.int32),
         error=jnp.array(0, jnp.int32),
-        centroids=centroids.astype(cfg.dtype),
+        # copy, never alias: mutation kernels donate the whole state, and a
+        # donated alias would delete the caller's centroids buffer
+        centroids=jnp.array(centroids, dtype=cfg.dtype),
         tables=jnp.full((cfg.n_lists, cfg.max_chain), -1, jnp.int32),
         table_len=jnp.zeros((cfg.n_lists,), jnp.int32),
         table_pos=jnp.full((ns,), -1, jnp.int32),

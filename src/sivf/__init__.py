@@ -1,0 +1,32 @@
+"""``sivf`` — the client-facing namespace of the SIVF reproduction.
+
+One import gives the whole streaming-session surface:
+
+    import sivf
+
+    cfg = sivf.SIVFConfig(dim=64, n_lists=32, n_slabs=512)
+    centroids = sivf.train_kmeans(key, train_vecs, cfg.n_lists)
+    index = sivf.Index(cfg, centroids)          # or backend=<jax Mesh>
+    report = index.add(vecs, ids)               # -> MutationReport
+    dists, labels = index.search(queries, k=10, nprobe=8)
+
+Everything re-exported here lives in ``repro.core`` (the functional API
+remains importable from there); this package is the stable alias clients
+should depend on.
+"""
+from repro.core.api import (  # noqa: F401
+    ErrorCode,
+    Index,
+    IndexProtocol,
+    MutationRejected,
+    MutationReport,
+    SearchResult,
+)
+from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
+from repro.core.quantizer import train_kmeans  # noqa: F401
+
+__all__ = [
+    "ErrorCode", "Index", "IndexProtocol", "MutationRejected",
+    "MutationReport", "SearchResult", "SIVFConfig", "init_state",
+    "memory_report", "train_kmeans",
+]

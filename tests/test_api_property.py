@@ -1,0 +1,121 @@
+"""Hypothesis churn tests for the `sivf.Index` session handle.
+
+Randomized interleaved add / remove / search (ragged batch sizes, id
+overwrites, pool exhaustion) against the brute-force dict oracle, on both
+the single-device and the shard-mapped mesh backend. The linearizability
+argument is the same as ``test_core_property``, lifted to the handle: any
+op sequence observed through ``search`` must match the dict model, and
+every ``MutationReport`` must account for its batch exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev extra; tier-1 stays green without it
+from hypothesis import given, settings, strategies as st
+
+import sivf
+from repro import core
+
+D, NL = 8, 4
+CFG = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=48, capacity=32,
+                      n_max=256, max_chain=12)
+# tiny pool: 3 slabs over 4 lists, chain bound 2 — batches routinely hit
+# POOL_EXHAUSTED / CHAIN_OVERFLOW so the failure semantics get exercised
+CFG_TINY = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=3, capacity=32,
+                           n_max=256, max_chain=2)
+_CENTS = np.random.default_rng(42).normal(size=(NL, D)).astype(np.float32)
+
+_MESH = None
+
+
+def _backend(name):
+    global _MESH
+    if name == "single":
+        return "single"
+    if _MESH is None:
+        _MESH = jax.make_mesh((1,), ("data",))
+    return _MESH
+
+
+def _oracle_add(ref, vecs, ids, rep, cfg):
+    """Dict-model update honouring the documented failure semantics: a
+    batch rejected by POOL_EXHAUSTED / CHAIN_OVERFLOW inserts nothing, but
+    ids it was overwriting lose their old payload (delete-then-insert)."""
+    if rep.errors & (sivf.ErrorCode.POOL_EXHAUSTED
+                     | sivf.ErrorCode.CHAIN_OVERFLOW):
+        for i in ids:
+            ref.store.pop(int(i), None)
+    else:
+        for v, i in zip(vecs, ids):
+            if 0 <= int(i) < cfg.n_max:
+                ref.store[int(i)] = v.copy()
+
+
+def _check_search(idx, ref, rng, q=3, k=4):
+    qs = rng.normal(size=(q, D)).astype(np.float32)
+    d, l = idx.search(qs, k, NL)
+    rd, rl = ref.search(qs, k, NL)
+    np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(l) == rl).all()
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["add", "remove", "search"]),
+        st.lists(st.integers(0, 63), min_size=1, max_size=14),
+    ),
+    min_size=1, max_size=10,
+)
+
+
+def _drive(idx, ref, cfg, ops, seed):
+    rng = np.random.default_rng(seed)
+    for kind, ids in ops:
+        ids = np.asarray(ids, np.int32)
+        if kind == "add":
+            vecs = rng.normal(size=(len(ids), D)).astype(np.float32)
+            rep = idx.add(vecs, ids)
+            _oracle_add(ref, vecs, ids, rep, cfg)
+            # the disjoint counts always account for the whole batch
+            assert rep.accepted + rep.overwritten + rep.rejected \
+                == rep.requested == len(ids)
+        elif kind == "remove":
+            before = len(set(ids.tolist()) & set(ref.store))
+            rep = idx.remove(ids)
+            ref.delete(ids)
+            assert rep.accepted == before
+        else:
+            _check_search(idx, ref, rng, q=1 + len(ids) % 5)
+        assert idx.n_live == ref.n_live
+    _check_search(idx, ref, rng)
+
+
+@pytest.mark.parametrize("backend_name", ["single", "mesh"])
+@settings(max_examples=25, deadline=None)
+@given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
+def test_handle_churn_matches_reference(backend_name, ops, seed):
+    idx = sivf.Index(CFG, _CENTS, backend=_backend(backend_name),
+                     min_bucket=8)
+    ref = core.ReferenceIndex(_CENTS)
+    _drive(idx, ref, CFG, ops, seed)
+    # structural invariants still hold under the handle
+    state = idx.state
+    free_top = np.asarray(state.free_top).reshape(-1)
+    owner = np.asarray(state.owner).reshape(-1, CFG.n_slabs)
+    assert int(free_top.sum()) + int((owner >= 0).sum()) \
+        == CFG.n_slabs * len(free_top)
+
+
+@pytest.mark.parametrize("backend_name", ["single", "mesh"])
+@settings(max_examples=20, deadline=None)
+@given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
+def test_handle_churn_under_pool_exhaustion(backend_name, ops, seed):
+    """Same sequences on a pool small enough that batches routinely fail:
+    reports must stay truthful and the oracle must track the documented
+    reject-atomically-but-drop-overwrites semantics."""
+    idx = sivf.Index(CFG_TINY, _CENTS, backend=_backend(backend_name),
+                     min_bucket=8)
+    ref = core.ReferenceIndex(_CENTS)
+    _drive(idx, ref, CFG_TINY, ops, seed)

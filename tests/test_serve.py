@@ -1,10 +1,13 @@
-"""Slab-paged serving engine: parity with the dense path + O(1) lifecycle."""
+"""Slab-paged serving engine: parity with the dense path + O(1) lifecycle.
+
+Tier-1 runs the page-pool lifecycle tests plus one representative decode
+arch (llama3-8b reduced); the remaining compile-heavy archs carry the
+``slow`` marker and run in the main-branch CI job.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-pytestmark = pytest.mark.slow  # compile-heavy; CI runs these in the main-branch `slow` job
 
 from repro.configs import ARCHS
 from repro.models import model as M
@@ -15,8 +18,13 @@ from repro.sharding.rules import unpadded_plan
 
 # MoE archs get a loose tolerance: top-k routing is discontinuous, so
 # attention-order numerics can flip near-tied experts.
-CASES = [("llama3-8b", 5e-3), ("minicpm3-4b", 5e-3), ("rwkv6-3b", 5e-3),
-         ("jamba-v0.1-52b", 5e-2), ("moonshot-v1-16b-a3b", 2e-1)]
+CASES = [
+    ("llama3-8b", 5e-3),
+    pytest.param("minicpm3-4b", 5e-3, marks=pytest.mark.slow),
+    pytest.param("rwkv6-3b", 5e-3, marks=pytest.mark.slow),
+    pytest.param("jamba-v0.1-52b", 5e-2, marks=pytest.mark.slow),
+    pytest.param("moonshot-v1-16b-a3b", 2e-1, marks=pytest.mark.slow),
+]
 
 
 @pytest.mark.parametrize("arch,tol", CASES)

@@ -1,10 +1,12 @@
-"""End-to-end behaviour tests for the paper's system."""
+"""End-to-end behaviour tests for the paper's system.
+
+The streaming/recall cases are cheap enough for tier-1; only the train
+launcher restart (three full train-step compiles) stays ``slow``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-pytestmark = pytest.mark.slow  # long end-to-end churn loops; main-branch `slow` CI job
 
 from repro import core
 from repro.data.pipeline import VectorStream, VectorStreamConfig
@@ -72,6 +74,7 @@ def test_recall_parity_with_exact_at_full_probe(rng):
     assert recall == 1.0
 
 
+@pytest.mark.slow
 def test_train_launcher_checkpoint_restart(tmp_path):
     """Elastic restart: kill after N steps, resume, final state identical
     to an uninterrupted run (deterministic data + restored step)."""
