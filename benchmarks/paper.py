@@ -488,21 +488,21 @@ def tab4_non_ivf_indexes():
     return rows
 
 
-def streaming_churn():
-    """Streaming-session benchmark through the `sivf.Index` handle (ISSUE 2).
+def _streaming_churn_impl(deferred: bool, flush_every: int = 8):
+    """Shared body for the eager / deferred streaming-churn variants.
 
-    A sliding-window churn with *ragged* batch sizes: per-op p50/p99 wall
-    latency for add / remove / search, plus the observed jit-executable
-    counts — the handle's power-of-two bucketing must keep them bounded by
-    the number of bucket shapes, not the number of distinct batch sizes.
+    Returns ``(rows, summary)`` where ``summary`` is the JSON-friendly
+    record (p50/p99 per op + compile counts) that ``benchmarks/run.py
+    streaming_churn --deferred`` persists to ``BENCH_streaming_churn.json``.
     """
     from repro.data.pipeline import VectorStream, VectorStreamConfig
     rng = np.random.default_rng(7)
     stream = VectorStream(VectorStreamConfig(dim=D, n_clusters=NL))
     cfg, _, cents = build_sivf(D, NL, 40_000, capacity=64, max_chain=48,
                                train_vecs=stream.batch(0, 4096))
-    idx = sivf.Index(cfg, cents, min_bucket=64)
+    idx = sivf.Index(cfg, cents, min_bucket=64, deferred=deferred)
     window, max_b = 8_192, 1_024
+    tag = "streaming_churn.deferred" if deferred else "streaming_churn"
 
     next_id = 0
     step = 0
@@ -512,8 +512,9 @@ def streaming_churn():
                 np.arange(next_id, next_id + s, dtype=np.int32))
         next_id += s
         step += 1
+    idx.flush()
 
-    lat = {"add": [], "remove": [], "search": []}
+    lat = {"add": [], "remove": [], "search": [], "flush": []}
     sizes_seen = set()
     for step in range(60):
         s = int(rng.integers(1, max_b))
@@ -523,7 +524,8 @@ def streaming_churn():
         t0 = time.perf_counter()
         rep = idx.add(vecs_b, ids_b)
         lat["add"].append(time.perf_counter() - t0)
-        assert rep.ok, rep
+        if not deferred:
+            assert rep.ok, rep                    # deferred: checked at flush
         next_id += s
         evict = np.arange(next_id - window - s, next_id - window,
                           dtype=np.int32)
@@ -536,18 +538,66 @@ def streaming_churn():
         res = idx.search(qs, 10, 8)
         jax.block_until_ready(res.distances)
         lat["search"].append(time.perf_counter() - t0)
+        if deferred and step % flush_every == flush_every - 1:
+            t0 = time.perf_counter()
+            reports = idx.flush()                 # one sync, flush_every*2 reports
+            lat["flush"].append(time.perf_counter() - t0)
+            assert all(r.ok for r in reports), reports
+    if deferred:
+        for r in idx.flush():
+            assert r.ok, r
 
     rows = []
-    for op in ("add", "remove", "search"):
+    summary = {"mode": "deferred" if deferred else "eager",
+               "n_ragged_sizes": len(sizes_seen), "p50_us": {}, "p99_us": {}}
+    if deferred:
+        summary["flush_every"] = flush_every
+    ops = ("add", "remove", "search") + (("flush",) if deferred else ())
+    for op in ops:
         a = np.asarray(lat[op])
-        rows.append(Row(f"streaming_churn.{op}.p50",
-                        float(np.percentile(a, 50)),
-                        f"p99={np.percentile(a, 99) * 1e6:.0f}us"))
+        p50, p99 = float(np.percentile(a, 50)), float(np.percentile(a, 99))
+        summary["p50_us"][op] = round(p50 * 1e6, 1)
+        summary["p99_us"][op] = round(p99 * 1e6, 1)
+        rows.append(Row(f"{tag}.{op}.p50", p50, f"p99={p99 * 1e6:.0f}us"))
     comp = idx.compile_stats()
     n_buckets = len(idx.bucket_shapes(max_b))
+    summary["jit_compiles"] = comp
+    summary["bucket_bound"] = n_buckets
     rows.append(Row(
-        "streaming_churn.jit_compiles", 0.0,
+        f"{tag}.jit_compiles", 0.0,
         f"add={comp['add']} remove={comp['remove']} "
         f"search={comp['search']} over {len(sizes_seen)} ragged sizes "
         f"(bucket bound {n_buckets})"))
+    return rows, summary
+
+
+def streaming_churn():
+    """Streaming-session benchmark through the `sivf.Index` handle (ISSUE 2).
+
+    A sliding-window churn with *ragged* batch sizes: per-op p50/p99 wall
+    latency for add / remove / search, plus the observed jit-executable
+    counts — the handle's power-of-two bucketing must keep them bounded by
+    the number of bucket shapes, not the number of distinct batch sizes.
+    """
+    rows, _ = _streaming_churn_impl(deferred=False)
     return rows
+
+
+def streaming_churn_deferred():
+    """Deferred-report variant (ISSUE 3): add/remove submit without a host
+    sync and MutationReports resolve in batches at ``Index.flush()`` — the
+    per-op numbers show the per-batch sync tax deferral removes, ``flush``
+    shows where it went (amortized over ``flush_every`` steps)."""
+    rows, _ = _streaming_churn_impl(deferred=True)
+    return rows
+
+
+def streaming_churn_compare():
+    """Eager + deferred back-to-back on shared executables, for
+    ``benchmarks/run.py streaming_churn --deferred``. The deferred run must
+    add zero jit executables (same cfg -> same op set)."""
+    eager_rows, eager = _streaming_churn_impl(deferred=False)
+    deferred_rows, deferred = _streaming_churn_impl(deferred=True)
+    assert deferred["jit_compiles"] == eager["jit_compiles"], (
+        "deferred mode compiled new executables", eager, deferred)
+    return eager_rows + deferred_rows, {"eager": eager, "deferred": deferred}

@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes
 experiments/bench_results.json. Run: PYTHONPATH=src python -m benchmarks.run
-[--only fig1a,...] [--skip-dist]
+[names ...] [--only fig1a,...] [--skip-dist] [--deferred]
+
+``streaming_churn --deferred`` runs the eager AND deferred churn variants
+back-to-back and records p50/p99 latencies + jit compile counts to
+``BENCH_streaming_churn.json`` (the slow CI job's perf data point).
 """
 from __future__ import annotations
 
@@ -25,6 +29,7 @@ ARTIFACTS = [
     ("fig9", paper.fig9_recall_pareto),
     ("fused", paper.fused_search_sweep),
     ("streaming_churn", paper.streaming_churn),
+    ("streaming_churn_deferred", paper.streaming_churn_deferred),
     ("fig10", paper.fig10_zipfian_skew),
     ("fig11", paper.fig11_sliding_window),
     ("tab1", paper.tab1_tail_latency),
@@ -36,14 +41,41 @@ ARTIFACTS = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*", default=[],
+                    help="artifact names to run (same as --only)")
     ap.add_argument("--only", default="")
     ap.add_argument("--skip-dist", action="store_true")
+    ap.add_argument("--deferred", action="store_true",
+                    help="run streaming_churn in eager+deferred comparison "
+                         "mode and write BENCH_streaming_churn.json")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+    only = set(args.only.split(",")) if args.only else set()
+    only |= set(args.names)
+    only = only or None
 
     print("name,us_per_call,derived")
     results = {}
-    for name, fn in ARTIFACTS:
+    artifacts = list(ARTIFACTS)
+    if args.deferred and (only is None or "streaming_churn" in only):
+        artifacts = [(n, f) for n, f in artifacts
+                     if n not in ("streaming_churn",
+                                  "streaming_churn_deferred")]
+        try:
+            rows, summary = paper.streaming_churn_compare()
+            for r in rows:
+                print(r.csv(), flush=True)
+            results["streaming_churn"] = [
+                {"name": r.name, "us": r.us, "derived": r.derived}
+                for r in rows]
+            bench_out = Path("BENCH_streaming_churn.json")
+            bench_out.write_text(json.dumps(summary, indent=1))
+            print(f"# wrote {bench_out}")
+        except Exception as e:  # keep the harness going
+            print(f"streaming_churn.ERROR,0,{type(e).__name__}: {e}",
+                  flush=True)
+            results["streaming_churn"] = {
+                "error": traceback.format_exc()[-1500:]}
+    for name, fn in artifacts:
         if only and name not in only:
             continue
         t0 = time.time()

@@ -63,3 +63,16 @@ for step in range(5):
     next_id += 1000
 print("after sliding window:", index.stats())
 print("jit executables this session:", index.compile_stats())
+
+# 7. deferred reports: submit the whole stream without a host sync, then
+#    resolve every MutationReport with one flush (same executables as eager)
+with sivf.Index(cfg, centroids, deferred=True) as dindex:
+    futures = []
+    for lo in range(0, 4096, 1024):
+        futures.append(dindex.add(
+            vecs[lo:lo + 1024], np.arange(lo, lo + 1024, dtype=np.int32)))
+    assert not futures[0].done                      # nothing synced yet
+    reports = dindex.flush()
+assert all(r.ok for r in reports) and futures[-1].done
+print(f"deferred: {len(reports)} reports resolved in one flush, "
+      f"n_live={dindex.n_live}")

@@ -25,5 +25,6 @@ from repro.core.api import (  # noqa: F401
     IndexProtocol,
     MutationRejected,
     MutationReport,
+    PendingReport,
     SearchResult,
 )

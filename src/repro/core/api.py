@@ -12,7 +12,11 @@ baselines' ad-hoc signatures) into a single stateful session object:
     report = index.remove(ids)
     index.save(path); index = Index.load(path)
 
-Design points (ISSUE 2):
+    with Index(cfg, centroids, deferred=True) as index:
+        futs = [index.add(v, i) for v, i in stream]    # -> PendingReport
+        reports = index.flush()                        # one sync, N reports
+
+Design points (ISSUE 2, atomicity + deferral reworked in ISSUE 3):
 
   * **One code path over backends.** ``backend="single"`` wraps the
     batched kernels of ``core.index``; ``backend=<jax Mesh>`` wraps the
@@ -25,7 +29,22 @@ Design points (ISSUE 2):
     disjoint ``accepted`` / ``overwritten`` / ``rejected`` counts, then
     clears the handled bits so each report describes exactly one batch.
     ``strict=True`` (per handle or per call) raises
-    :class:`MutationRejected` instead.
+    :class:`MutationRejected` instead. Failed insert batches are
+    *atomic*: ``POOL_EXHAUSTED`` / ``CHAIN_OVERFLOW`` leaves every
+    previously-live id searchable with its old payload (the mesh backend
+    applies this per shard, and the counts stay truthful under partial
+    per-shard failure).
+  * **Deferred reports.** ``Index(..., deferred=True)`` turns ``add`` /
+    ``remove`` into fire-and-forget submits returning
+    :class:`PendingReport` futures backed by on-device aux scalars; no
+    host sync happens until :meth:`Index.flush` (or context-manager
+    exit, or touching a future), so the device queue stays full between
+    syncs. Eager and deferred modes run the *same* jitted executables —
+    deferral adds zero compilations.
+  * **Device-side padding.** Batches that arrive as ``jax.Array``s are
+    padded to their bucket with ``jnp`` ops on the device; only host
+    (numpy / list) inputs take the numpy padding path. Device-resident
+    streams therefore never pay a device->host->device round trip per op.
   * **Bounded jit compilations under ragged streaming.** Live clients send
     arbitrary batch sizes; every batch is padded to the next power-of-two
     bucket (floor ``min_bucket``), so a stream whose batches span sizes
@@ -93,17 +112,20 @@ class MutationReport:
 
       * ``accepted``    — distinct new ids now live in the index;
       * ``overwritten`` — distinct ids that existed before the batch and
-        whose payload was replaced (delete-then-insert semantics);
+        whose payload was actually replaced (delete-then-insert
+        semantics). Ids whose shard aborted are *not* counted here: a
+        pool-exhausted / chain-overflow batch is atomic, so their old
+        payload survives untouched;
       * ``rejected``    — everything else: rows superseded by a later
-        duplicate in the same batch, ids outside ``[0, n_max)``, and rows
-        dropped by a pool-exhausted / chain-overflow failure. On a failed
-        batch, ids that were *being* overwritten are also counted here —
-        the core linearizes overwrite as delete-then-insert, so their old
-        payload is gone (visible as a drop in ``n_live``).
+        duplicate in the same batch, ids outside ``[0, n_max)``, and all
+        rows of an aborted (pool-exhausted / chain-overflow) batch —
+        including ids that *would have been* overwritten, since the
+        atomic abort left their old payloads live.
 
     All counts are measured from device state (live totals and address-
     table presence before/after), not inferred, so they stay truthful under
-    partial per-shard failures on the mesh backend.
+    partial per-shard failures on the mesh backend; ``shard_errors`` then
+    carries each shard's own bits (``None`` on the single-device backend).
     """
 
     op: str                 # "add" | "remove"
@@ -114,6 +136,7 @@ class MutationReport:
     errors: ErrorCode       # this batch's error bits (already cleared)
     n_live: int             # total live vectors after the batch
     padded_to: int          # bucket shape the batch was padded to
+    shard_errors: tuple[ErrorCode, ...] | None = None  # mesh: per-shard bits
 
     @property
     def ok(self) -> bool:
@@ -121,7 +144,12 @@ class MutationReport:
 
 
 class MutationRejected(RuntimeError):
-    """Raised in strict mode when a batch reports any error bit."""
+    """Raised in strict mode when a batch reports any error bit.
+
+    In deferred mode the raise happens at :meth:`Index.flush` (or context
+    exit) — the whole pending queue still resolves first, so every
+    :class:`PendingReport` is usable afterwards.
+    """
 
     def __init__(self, report: MutationReport):
         super().__init__(
@@ -129,6 +157,48 @@ class MutationRejected(RuntimeError):
             f"accepted={report.accepted} overwritten={report.overwritten} "
             f"rejected={report.rejected} of requested={report.requested}")
         self.report = report
+
+
+class PendingReport:
+    """Future for a deferred :class:`MutationReport`.
+
+    Returned by ``add`` / ``remove`` on a handle constructed with
+    ``deferred=True``. The batch's counts live in on-device aux scalars
+    until the owning :class:`Index` flushes; submitting costs no host
+    sync. ``result()`` — or reading any :class:`MutationReport` attribute
+    straight off the future — forces a flush of the *whole* pending queue
+    (one sync resolves every outstanding future, oldest first).
+    """
+
+    __slots__ = ("_index", "_resolved")
+
+    def __init__(self, index: "Index"):
+        self._index = index
+        self._resolved: MutationReport | None = None
+
+    @property
+    def done(self) -> bool:
+        """True once the owning handle has flushed past this batch."""
+        return self._resolved is not None
+
+    def result(self) -> MutationReport:
+        if self._resolved is None:
+            self._index.flush()
+        if self._resolved is None:      # pragma: no cover - defensive
+            raise RuntimeError(
+                "PendingReport still unresolved after flush() — its batch "
+                "is no longer in the owning Index's pending queue")
+        return self._resolved
+
+    def __getattr__(self, name: str):
+        # proxy MutationReport attributes (forces resolution)
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self.result(), name)
+
+    def __repr__(self) -> str:
+        return (f"PendingReport({self._resolved!r})" if self.done
+                else "PendingReport(<unresolved>)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,12 +254,21 @@ def report_from_counts(op: str, requested: int, accepted: int,
 # Traced accounting helpers (run inside the jitted mutation wrappers)
 # ---------------------------------------------------------------------------
 
+_ABORT_BITS = ERR_POOL_EXHAUSTED | ERR_CHAIN_OVERFLOW   # batch-atomic aborts
+
+
 def _count_unique(ids: jax.Array, mask: jax.Array) -> jax.Array:
-    """Number of distinct ids where ``mask`` holds (traced)."""
-    key = jnp.where(mask, ids, _I32_MAX)
-    s = jnp.sort(key)
-    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
-    return jnp.sum((first & (s != _I32_MAX)).astype(jnp.int32))
+    """Number of distinct ids where ``mask`` holds (traced).
+
+    Sorts on ``(~mask, id)`` — the mask is a second sort key, not a magic
+    value — so a genuine id equal to ``INT32_MAX`` is still counted (the
+    old sentinel encoding silently collapsed it into the masked-out run).
+    """
+    order = jnp.lexsort((ids, ~mask))       # masked-in rows first, id-sorted
+    sm = mask[order]
+    si = ids[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
+    return jnp.sum((first & sm).astype(jnp.int32))
 
 
 def _or_bits(err: jax.Array) -> jax.Array:
@@ -208,16 +287,24 @@ def _or_bits(err: jax.Array) -> jax.Array:
 @lru_cache(maxsize=None)
 def _single_ops(cfg: SIVFConfig, impl: str, block_q: int,
                 use_tables: bool | None) -> SimpleNamespace:
-    """Jitted single-device insert/delete/search with report accounting."""
+    """Jitted single-device insert/delete/search with report accounting.
+
+    The aux dict returned next to the new state holds *device* scalars
+    only — nothing syncs until the handle resolves a report (immediately
+    in eager mode, at ``flush()`` in deferred mode).
+    """
 
     def _presence(state, ids, valid):
-        return valid & (state.att_slab[jnp.clip(ids, 0, cfg.n_max - 1)] >= 0)
+        # mask before indexing: an out-of-range id must never read another
+        # slot's occupancy (clipping used to alias it onto slot n_max-1,
+        # misreporting it as an overwrite instead of a rejection)
+        safe = jnp.where(valid, ids, 0)
+        return valid & (state.att_slab[safe] >= 0)
 
     def _pre(state, ids):
         valid = (ids >= 0) & (ids < cfg.n_max)
         pb = _presence(state, ids, valid)
-        aux = {"n_valid": _count_unique(ids, valid),
-               "n_present": _count_unique(ids, pb),
+        aux = {"n_requested": jnp.sum((ids >= 0).astype(jnp.int32)),
                "n_live_before": state.n_live}
         return valid, pb, aux
 
@@ -229,8 +316,10 @@ def _single_ops(cfg: SIVFConfig, impl: str, block_q: int,
         st = ix._insert_impl(cfg, _clear_error(state), vecs, ids, lists)
         aux["errors"] = _or_bits(st.error)
         aux["n_live_after"] = st.n_live
-        aux["n_overwritten"] = _count_unique(
-            ids, pb & _presence(st, ids, valid))
+        # overwritten == present-before AND the batch committed; on an
+        # atomic abort the old payload survives, so nothing is overwritten
+        failed = (st.error & _ABORT_BITS) != 0
+        aux["n_overwritten"] = _count_unique(ids, pb & ~failed)
         return _clear_error(st), aux
 
     @partial(jax.jit, donate_argnums=(0,))
@@ -254,7 +343,14 @@ def _single_ops(cfg: SIVFConfig, impl: str, block_q: int,
 @lru_cache(maxsize=None)
 def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
               block_q: int, use_tables: bool | None) -> SimpleNamespace:
-    """Jitted shard_map insert/delete/search over a stacked sharded state."""
+    """Jitted shard_map insert/delete/search over a stacked sharded state.
+
+    Same aux contract as :func:`_single_ops` (device scalars, deferred-
+    friendly) plus ``shard_errors``: the per-shard error vector, so a
+    report can say *which* shard aborted. Inserts are atomic per shard —
+    ids owned by an aborting shard keep their old payloads and are counted
+    rejected, ids on committing shards proceed normally.
+    """
     from repro.core import distributed as dist
     n = mesh.shape[axis]
     raw_insert = dist.sharded_insert(cfg, mesh, axis)
@@ -264,15 +360,15 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
 
     def _presence(state, ids, valid):
         # an id lives only on its owner shard: gather that shard's ATT row
-        owner = jnp.where(ids >= 0, ids % n, 0)
-        slot = state.att_slab[owner, jnp.clip(ids, 0, cfg.n_max - 1)]
-        return valid & (slot >= 0)
+        # (mask before indexing — see the single-backend note)
+        safe = jnp.where(valid, ids, 0)
+        owner = jnp.where(valid, ids % n, 0)
+        return valid & (state.att_slab[owner, safe] >= 0)
 
     def _pre(state, ids):
         valid = (ids >= 0) & (ids < cfg.n_max)
         pb = _presence(state, ids, valid)
-        aux = {"n_valid": _count_unique(ids, valid),
-               "n_present": _count_unique(ids, pb),
+        aux = {"n_requested": jnp.sum((ids >= 0).astype(jnp.int32)),
                "n_live_before": jnp.sum(state.n_live)}
         return valid, pb, aux
 
@@ -281,9 +377,13 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
         valid, pb, aux = _pre(state, ids)
         st = raw_insert(_clear_error(state), vecs, ids)
         aux["errors"] = _or_bits(st.error)
+        aux["shard_errors"] = st.error                       # [S] bits
         aux["n_live_after"] = jnp.sum(st.n_live)
-        aux["n_overwritten"] = _count_unique(
-            ids, pb & _presence(st, ids, valid))
+        # partial per-shard failure: only ids on committing shards count
+        # as overwritten — an aborting shard restored its old payloads
+        shard_failed = (st.error & _ABORT_BITS) != 0         # [S]
+        failed = shard_failed[jnp.where(valid, ids % n, 0)]
+        aux["n_overwritten"] = _count_unique(ids, pb & ~failed)
         return _clear_error(st), aux
 
     @partial(jax.jit, donate_argnums=(0,))
@@ -291,6 +391,7 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
         _, _, aux = _pre(state, ids)
         st = raw_delete(_clear_error(state), ids)
         aux["errors"] = _or_bits(st.error)
+        aux["shard_errors"] = st.error
         aux["n_live_after"] = jnp.sum(st.n_live)
         aux["n_overwritten"] = jnp.zeros((), jnp.int32)
         return _clear_error(st), aux
@@ -319,21 +420,31 @@ class Index:
     impl:       scan->top-k backend: "xla" | "pallas" | "pallas_interpret".
     block_q:    fused kernel query-tile height.
     use_tables: dense-table vs pointer-walk slab lookup (None = cfg default).
-    strict:     raise :class:`MutationRejected` on any per-batch error bit.
+    strict:     raise :class:`MutationRejected` on any per-batch error bit
+                (in deferred mode the raise happens at :meth:`flush`).
     min_bucket: smallest padded batch shape; batches are padded to
                 ``max(min_bucket, next_pow2(B))`` so ragged streams trigger
                 a bounded number of jit compilations.
+    deferred:   make ``add`` / ``remove`` return :class:`PendingReport`
+                futures instead of syncing per batch; resolve them all with
+                :meth:`flush` (the handle is a context manager that flushes
+                on clean exit). Uses the same jitted executables as eager
+                mode — deferral never adds compilations.
     """
 
     def __init__(self, cfg: SIVFConfig, centroids, backend="single", *,
                  axis: str = "data", impl: str = "xla", block_q: int = 8,
                  use_tables: bool | None = None, strict: bool = False,
-                 min_bucket: int = 64, _state: SlabPoolState | None = None):
+                 min_bucket: int = 64, deferred: bool = False,
+                 _state: SlabPoolState | None = None):
         if min_bucket < 1:
             raise ValueError("min_bucket must be >= 1")
         self.cfg = cfg
         self.strict = bool(strict)
         self.min_bucket = int(min_bucket)
+        self.deferred = bool(deferred)
+        self._pending: list[tuple[PendingReport, str, dict, int,
+                                  bool | None]] = []
         self._axis = axis
         self._impl = impl
         self._block_q = int(block_q)
@@ -420,76 +531,150 @@ class Index:
             out.append(out[-1] * 2)
         return out
 
-    def _pad_ids(self, ids: np.ndarray, bucket: int) -> jax.Array:
+    def _pad_ids(self, ids, bucket: int) -> jax.Array:
+        if isinstance(ids, jax.Array):       # device fast path: jnp pad, no
+            return jnp.pad(ids.astype(jnp.int32),    # host round trip
+                           (0, bucket - ids.shape[0]), constant_values=-1)
         out = np.full((bucket,), -1, np.int32)
         out[: len(ids)] = ids
         return jnp.asarray(out)
 
-    def _pad_rows(self, rows: np.ndarray, bucket: int) -> jax.Array:
+    def _pad_rows(self, rows, bucket: int) -> jax.Array:
+        if isinstance(rows, jax.Array):
+            return jnp.pad(rows.astype(jnp.float32),
+                           ((0, bucket - rows.shape[0]), (0, 0)))
         out = np.zeros((bucket, self.cfg.dim), np.float32)
         out[: len(rows)] = rows
         return jnp.asarray(out)
 
+    @staticmethod
+    def _as_batch(x, np_dtype, flat: bool = False):
+        """Host inputs -> numpy; ``jax.Array`` inputs stay on device."""
+        if isinstance(x, jax.Array):
+            return x.reshape(-1) if flat else x
+        x = np.asarray(x, np_dtype)
+        return x.reshape(-1) if flat else x
+
     # -- mutation -----------------------------------------------------------
 
-    def add(self, vecs, ids, *, strict: bool | None = None) -> MutationReport:
+    def add(self, vecs, ids, *, strict: bool | None = None
+            ) -> "MutationReport | PendingReport":
         """Ingest a batch. ``vecs [B, D]``, ``ids [B]`` (-1 rows skipped).
 
         Re-adding a live id overwrites its payload (paper delete-then-insert
-        semantics); within-batch duplicate ids keep the last row.
+        semantics); within-batch duplicate ids keep the last row. A batch
+        that hits ``POOL_EXHAUSTED`` / ``CHAIN_OVERFLOW`` is atomic: it
+        inserts nothing and every previously-live id keeps its old payload
+        (per shard on the mesh backend). Inputs that are already
+        ``jax.Array``s are padded device-side. In deferred mode this
+        returns a :class:`PendingReport` without any host sync.
         """
-        vecs = np.asarray(vecs, np.float32)
-        ids_np = np.asarray(ids, np.int32).reshape(-1)
-        if vecs.ndim != 2 or vecs.shape[0] != ids_np.shape[0]:
+        vecs = self._as_batch(vecs, np.float32)
+        ids_a = self._as_batch(ids, np.int32, flat=True)
+        if vecs.ndim != 2 or vecs.shape[0] != ids_a.shape[0]:
             raise ValueError(
-                f"vecs {vecs.shape} / ids {ids_np.shape} mismatch")
+                f"vecs {vecs.shape} / ids {ids_a.shape} mismatch")
         if vecs.shape[1] != self.cfg.dim:
             raise ValueError(f"dim {vecs.shape[1]} != cfg.dim {self.cfg.dim}")
-        bucket = self._bucket(len(ids_np))
+        bucket = self._bucket(ids_a.shape[0])
         self._state, aux = self._ops.insert(
             self._state, self._pad_rows(vecs, bucket),
-            self._pad_ids(ids_np, bucket))
-        return self._report("add", int((ids_np >= 0).sum()), aux, bucket,
-                            strict)
+            self._pad_ids(ids_a, bucket))
+        return self._emit("add", aux, bucket, strict)
 
-    def remove(self, ids, *, strict: bool | None = None) -> MutationReport:
+    def remove(self, ids, *, strict: bool | None = None
+               ) -> "MutationReport | PendingReport":
         """Evict a batch of ids in O(1); absent ids count as ``rejected``."""
-        ids_np = np.asarray(ids, np.int32).reshape(-1)
-        bucket = self._bucket(len(ids_np))
+        ids_a = self._as_batch(ids, np.int32, flat=True)
+        bucket = self._bucket(ids_a.shape[0])
         self._state, aux = self._ops.delete(self._state,
-                                            self._pad_ids(ids_np, bucket))
-        return self._report("remove", int((ids_np >= 0).sum()), aux, bucket,
-                            strict)
+                                            self._pad_ids(ids_a, bucket))
+        return self._emit("remove", aux, bucket, strict)
 
-    def _report(self, op: str, requested: int, aux: dict, bucket: int,
-                strict: bool | None) -> MutationReport:
+    def _emit(self, op: str, aux: dict, bucket: int, strict: bool | None):
+        if self.deferred:
+            fut = PendingReport(self)
+            self._pending.append((fut, op, aux, bucket, strict))
+            return fut
+        return self._finalize(op, aux, bucket,
+                              self.strict if strict is None else strict)
+
+    def _finalize(self, op: str, aux: dict, bucket: int, strict: bool
+                  ) -> MutationReport:
+        """Host-sync an aux dict into a report (the only sync point)."""
+        requested = int(aux["n_requested"])
         n0 = int(aux["n_live_before"])
         n1 = int(aux["n_live_after"])
         errors = ErrorCode(int(aux["errors"]))
         if op == "add":
+            # overwrites are live-count-neutral and aborted shards restore
+            # their state, so the net live delta is exactly the new ids
             overwritten = int(aux["n_overwritten"])
-            # every pre-present id was deleted first, so the live delta is
-            # (new adds) + (overwrites re-inserted) - (pre-present deleted)
-            accepted = max(n1 - n0 + int(aux["n_present"]) - overwritten, 0)
+            accepted = max(n1 - n0, 0)
         else:
             overwritten = 0
             accepted = max(n0 - n1, 0)
+        se = aux.get("shard_errors")
         report = MutationReport(
             op=op, requested=requested, accepted=accepted,
             overwritten=overwritten,
             rejected=max(requested - accepted - overwritten, 0),
-            errors=errors, n_live=n1, padded_to=bucket)
-        strict = self.strict if strict is None else strict
+            errors=errors, n_live=n1, padded_to=bucket,
+            shard_errors=None if se is None else tuple(
+                ErrorCode(int(e)) for e in np.asarray(se)))
         if strict and not report.ok:
             raise MutationRejected(report)
         return report
+
+    def flush(self) -> list[MutationReport]:
+        """Resolve every outstanding :class:`PendingReport`, oldest first.
+
+        One host sync for the whole queue. In strict mode the first failed
+        report raises :class:`MutationRejected` — after the entire queue
+        has resolved, so no future is left dangling. No-op (``[]``) when
+        nothing is pending.
+        """
+        pending, self._pending = self._pending, []
+        reports: list[MutationReport] = []
+        first_err: MutationRejected | None = None
+        k = 0
+        try:
+            for k, (fut, op, aux, bucket, strict) in enumerate(pending):
+                strict = self.strict if strict is None else strict
+                try:
+                    rep = self._finalize(op, aux, bucket, strict)
+                except MutationRejected as e:
+                    rep = e.report
+                    if first_err is None:
+                        first_err = e
+                fut._resolved = rep
+                reports.append(rep)
+        except BaseException:
+            # an unexpected error (device failure, interrupt) mid-queue:
+            # re-queue the unresolved tail so no future is orphaned
+            self._pending = pending[k:] + self._pending
+            raise
+        if first_err is not None:
+            raise first_err
+        return reports
+
+    def __enter__(self) -> "Index":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.flush()
+        return False
 
     # -- search -------------------------------------------------------------
 
     def search(self, queries, k: int, nprobe: int | None = None
                ) -> SearchResult:
-        """Top-k search; ``nprobe=None`` probes every list (exact recall)."""
-        queries = np.asarray(queries, np.float32)
+        """Top-k search; ``nprobe=None`` probes every list (exact recall).
+
+        ``jax.Array`` queries are padded device-side (no host round trip).
+        """
+        queries = self._as_batch(queries, np.float32)
         if queries.ndim == 1:
             queries = queries[None]
         if queries.shape[1] != self.cfg.dim:
@@ -524,6 +709,7 @@ class Index:
             "use_tables": self._use_tables,
             "strict": self.strict,
             "min_bucket": self.min_bucket,
+            "deferred": self.deferred,
             "cfg": cfg,
         })
         mgr.save(0, self._state)
@@ -545,7 +731,8 @@ class Index:
         cfg = SIVFConfig(**cfg_d)
         kw = {"axis": meta["axis"], "impl": meta["impl"],
               "block_q": meta["block_q"], "use_tables": meta["use_tables"],
-              "strict": meta["strict"], "min_bucket": meta["min_bucket"]}
+              "strict": meta["strict"], "min_bucket": meta["min_bucket"],
+              "deferred": meta.get("deferred", False)}
         kw.update(overrides)
         if meta["backend"] == "mesh":
             if not isinstance(backend, Mesh):

@@ -15,11 +15,19 @@ mesh axis:
     MPI_Gather / tree reduction).
   * **Deletion** — broadcast; ids live on exactly one shard, others no-op
     (paper: "the target ID exists on at most one worker").
+  * **Per-shard atomicity** — each shard runs the all-or-nothing insert of
+    ``core.index``: a shard that hits POOL_EXHAUSTED / CHAIN_OVERFLOW
+    keeps its previously-live ids (old payloads included) and raises only
+    its own ``error`` bits, while sibling shards commit normally. The
+    stacked ``state.error`` vector is therefore the per-shard truth that
+    ``sivf.Index`` surfaces as ``MutationReport.shard_errors`` — eagerly
+    or deferred, the accounting never has to guess which rows survived.
 
 The ``sharded_*`` builders return the raw shard-mapped callables; they are
 the single code path behind both the legacy ``dist_*`` free functions and
 the ``sivf.Index`` mesh backend (``core/api.py``), which wraps them in jit
-with buffer donation and shape-bucketed batches.
+with buffer donation, shape-bucketed batches, and (in deferred mode)
+device-resident report aux that only syncs at ``Index.flush()``.
 """
 from __future__ import annotations
 
@@ -60,7 +68,9 @@ def sharded_insert(cfg: SIVFConfig, mesh: Mesh, axis: str = "data"):
 
     Returns ``run(state, vecs, ext_ids) -> state``. Building the shard_map
     wrapper happens at trace time, so callers that jit ``run`` pay it once
-    per shape bucket.
+    per shape bucket. Failure is per-shard atomic: an exhausted shard's
+    slice of the stacked output equals its input (plus error bits), so a
+    partially-failing batch never drops payloads anywhere.
     """
     n = mesh.shape[axis]
 

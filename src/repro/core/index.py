@@ -7,7 +7,11 @@ protocols (Algorithms 1, 2, 4) become *bulk-synchronous batched plans*:
             (slab, slot) coordinate for every element of the batch, then
             scatters apply payloads, bitmap bits, ATT entries and chain
             links in one shot. O(B log B) per batch of B, independent of
-            index size N (the paper's O(1)-per-element claim).
+            index size N (the paper's O(1)-per-element claim). The batch is
+            *all-or-nothing*: overwrite-deletes are staged and commit only
+            after the allocation plan succeeds, so a POOL_EXHAUSTED /
+            CHAIN_OVERFLOW batch leaves the index byte-identical (error
+            bits aside) — previously-live ids keep their old payloads.
   delete  — ATT lookup + vectorized bitmap clear (the paper's atomicAnd
             linearization point becomes the functional state swap), then a
             bounded sequential pass reclaims slabs that dropped to zero
@@ -71,6 +75,21 @@ def _dedupe_keep_last(ext_ids: jax.Array, valid: jax.Array) -> jax.Array:
 
 def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
                  ext_ids: jax.Array, lists: jax.Array) -> SlabPoolState:
+    """All-or-nothing batched insert.
+
+    Overwrites keep the paper's delete-then-insert linearization, but the
+    whole batch is *staged*: the overwrite-deletes run on a functional copy
+    (``staged``) of the pre-batch state while the pristine input value stays
+    live, and the allocation plan — computed exactly, on the post-delete
+    pool — picks which value survives the single ``lax.cond`` commit point.
+    A batch that hits ``POOL_EXHAUSTED`` / ``CHAIN_OVERFLOW`` therefore
+    returns the input state untouched except for its error bits: every
+    previously-live id stays searchable with its old payload. The payload
+    planes (``data`` / ``ids`` / ``norms``) pass through the staged delete
+    unmodified, so keeping both values alive until the commit point costs
+    one transient copy of the small metadata arrays only, never of the
+    vector pool itself.
+    """
     b = vecs.shape[0]
     c = cfg.capacity
     ns, nl, nm = cfg.n_slabs, cfg.n_lists, cfg.n_max
@@ -81,10 +100,10 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
     valid0 = in_range
     valid0 = _dedupe_keep_last(ext_ids, valid0)
 
-    # -- delete-then-insert for already-present ids (paper §3 Data Model) --
+    # -- stage delete-then-insert for already-present ids (§3 Data Model) --
     eid0 = jnp.where(valid0, ext_ids, 0)
     present = valid0 & (state.att_slab[eid0] >= 0)
-    state = _delete_impl(cfg, state, jnp.where(present, ext_ids, -1))
+    staged = _delete_impl(cfg, state, jnp.where(present, ext_ids, -1))
 
     # -- sort batch by target list; rank within list -----------------------
     lists_key = jnp.where(valid0, lists.astype(jnp.int32), nl)
@@ -98,16 +117,19 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
     counts = jnp.bincount(lists_key, length=nl + 1)[:nl].astype(jnp.int32)
 
     # -- per-list capacity plan (segmented prefix sums) --------------------
-    heads = state.heads
-    cur_l = jnp.where(heads >= 0, state.cursor[jnp.clip(heads, 0)], c)
+    # Exact: planned on the staged post-delete pool, so slabs drained by
+    # this batch's own overwrites are already back on the free stack (a
+    # full-pool overwrite of a full index still commits).
+    heads = staged.heads
+    cur_l = jnp.where(heads >= 0, staged.cursor[jnp.clip(heads, 0)], c)
     space_l = (c - cur_l).astype(jnp.int32)                   # head free slots
     overflow_l = jnp.maximum(counts - space_l, 0)
     n_new_l = ceil_div(overflow_l, c).astype(jnp.int32)       # new slabs/list
     offs_l = exclusive_cumsum(n_new_l).astype(jnp.int32)
     total_new = jnp.sum(n_new_l)
 
-    pool_ok = total_new <= state.free_top                     # fail-fast (§3.2)
-    chain_ok = jnp.all(state.table_len + n_new_l <= cfg.max_chain)
+    pool_ok = total_new <= staged.free_top                    # fail-fast (§3.2)
+    chain_ok = jnp.all(staged.table_len + n_new_l <= cfg.max_chain)
     ok = pool_ok & chain_ok
 
     # -- per-item coordinates ----------------------------------------------
@@ -119,17 +141,18 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
     new_ord = jnp.where(svalid & ~in_head, over // c, 0)
     new_slot = jnp.where(svalid & ~in_head, over % c, 0)
     alloc_idx = offs_l[sl_c] + new_ord                        # global new-slab ordinal
-    stack_pos = state.free_top - 1 - alloc_idx
-    new_slab_for_item = state.free_stack[jnp.clip(stack_pos, 0, ns - 1)]
+    stack_pos = staged.free_top - 1 - alloc_idx
+    new_slab_for_item = staged.free_stack[jnp.clip(stack_pos, 0, ns - 1)]
     item_slab = jnp.where(in_head, h_item, new_slab_for_item)
     item_slot = jnp.where(in_head, c - space_item + rank, new_slot)
 
     # -- per-new-slab metadata (g = global allocation ordinal) -------------
     g = jnp.arange(b, dtype=jnp.int32)
     gmask = g < total_new
-    slab_of_g = state.free_stack[jnp.clip(state.free_top - 1 - g, 0, ns - 1)]
-    slab_prev_g = state.free_stack[jnp.clip(state.free_top - g, 0, ns - 1)]
-    slab_next_g = state.free_stack[jnp.clip(state.free_top - 2 - g, 0, ns - 1)]
+    slab_of_g = staged.free_stack[jnp.clip(staged.free_top - 1 - g, 0, ns - 1)]
+    slab_prev_g = staged.free_stack[jnp.clip(staged.free_top - g, 0, ns - 1)]
+    slab_next_g = staged.free_stack[jnp.clip(staged.free_top - 2 - g, 0,
+                                             ns - 1)]
     # ordinal/list of each new slab, scattered from the slot-0 item
     first_of_slab = svalid & (~in_head) & (new_slot == 0)
     g_tgt = jnp.where(first_of_slab, alloc_idx, b)
@@ -142,14 +165,15 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
     is_last_of_list = ord_of_g == (n_new_l[jnp.clip(list_of_g, 0, nl - 1)] - 1)
     prv_of_g = jnp.where(is_last_of_list, -1, slab_next_g)
 
-    def apply(state: SlabPoolState) -> SlabPoolState:
+    def apply(operand) -> SlabPoolState:
+        staged, _ = operand                          # commit the staged batch
         drop_g = jnp.where(gmask, slab_of_g, ns)
-        nxt = state.nxt.at[drop_g].set(nxt_of_g, mode="drop")
-        prv = state.prv.at[drop_g].set(prv_of_g, mode="drop")
-        owner = state.owner.at[drop_g].set(list_of_g, mode="drop")
-        cursor = state.cursor.at[drop_g].set(0, mode="drop")
-        live = state.live.at[drop_g].set(0, mode="drop")
-        bitmap = state.bitmap.at[drop_g].set(jnp.uint32(0), mode="drop")
+        nxt = staged.nxt.at[drop_g].set(nxt_of_g, mode="drop")
+        prv = staged.prv.at[drop_g].set(prv_of_g, mode="drop")
+        owner = staged.owner.at[drop_g].set(list_of_g, mode="drop")
+        cursor = staged.cursor.at[drop_g].set(0, mode="drop")
+        live = staged.live.at[drop_g].set(0, mode="drop")
+        bitmap = staged.bitmap.at[drop_g].set(jnp.uint32(0), mode="drop")
         # per-list head relink
         has_new = n_new_l > 0
         first_new_l = slab_of_g[jnp.clip(offs_l, 0, b - 1)]
@@ -158,49 +182,51 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
         prv = prv.at[old_head_tgt].set(first_new_l, mode="drop")
         new_heads = jnp.where(has_new, last_new_l, heads)
         # dense chain tables (beyond-paper; maintained incrementally)
-        tl_g = state.table_len[jnp.clip(list_of_g, 0, nl - 1)]
+        tl_g = staged.table_len[jnp.clip(list_of_g, 0, nl - 1)]
         tab_l = jnp.where(gmask, list_of_g, nl)
-        tables = state.tables.at[tab_l, jnp.clip(tl_g + ord_of_g, 0,
-                                                 cfg.max_chain - 1)
-                                 ].set(slab_of_g, mode="drop")
-        table_pos = state.table_pos.at[drop_g].set(tl_g + ord_of_g, mode="drop")
-        table_len = state.table_len + n_new_l
+        tables = staged.tables.at[tab_l, jnp.clip(tl_g + ord_of_g, 0,
+                                                  cfg.max_chain - 1)
+                                  ].set(slab_of_g, mode="drop")
+        table_pos = staged.table_pos.at[drop_g].set(tl_g + ord_of_g,
+                                                    mode="drop")
+        table_len = staged.table_len + n_new_l
         # payload writes + publication (bitmap bits are distinct per word, so
         # a scatter-add is an OR; see DESIGN.md §2 on the fence analogue)
         drop_i = jnp.where(svalid, item_slab, ns)
-        data = state.data.at[drop_i, item_slot].set(
+        data = staged.data.at[drop_i, item_slot].set(
             sv.astype(cfg.dtype), mode="drop")
-        ids = state.ids.at[drop_i, item_slot].set(sids, mode="drop")
-        norms = state.norms.at[drop_i, item_slot].set(
+        ids = staged.ids.at[drop_i, item_slot].set(sids, mode="drop")
+        norms = staged.norms.at[drop_i, item_slot].set(
             jnp.sum(sv.astype(jnp.float32) ** 2, axis=-1), mode="drop")
         word, bit = bm.slot_word_bit(item_slot)
         bitmap = bitmap.at[drop_i, word].add(bit, mode="drop")
         cursor = cursor.at[drop_i].add(1, mode="drop")
         live = live.at[drop_i].add(1, mode="drop")
         att_tgt = jnp.where(svalid, sids, nm)
-        att_slab = state.att_slab.at[att_tgt].set(item_slab, mode="drop")
-        att_slot = state.att_slot.at[att_tgt].set(item_slot, mode="drop")
+        att_slab = staged.att_slab.at[att_tgt].set(item_slab, mode="drop")
+        att_slot = staged.att_slot.at[att_tgt].set(item_slot, mode="drop")
         return SlabPoolState(
             data=data, ids=ids, norms=norms, bitmap=bitmap, nxt=nxt, prv=prv,
             owner=owner, cursor=cursor, live=live, heads=new_heads,
-            free_stack=state.free_stack, free_top=state.free_top - total_new,
+            free_stack=staged.free_stack, free_top=staged.free_top - total_new,
             att_slab=att_slab, att_slot=att_slot,
-            n_live=state.n_live + jnp.sum(svalid),
-            error=state.error | jnp.where(err_range, ERR_ID_RANGE, 0),
-            centroids=state.centroids, tables=tables, table_len=table_len,
+            n_live=staged.n_live + jnp.sum(svalid),
+            error=staged.error | jnp.where(err_range, ERR_ID_RANGE, 0),
+            centroids=staged.centroids, tables=tables, table_len=table_len,
             table_pos=table_pos)
 
-    def fail(state: SlabPoolState) -> SlabPoolState:
+    def fail(operand) -> SlabPoolState:
+        _, pristine = operand                 # drop the staged deletes whole
         err = jnp.where(~pool_ok, ERR_POOL_EXHAUSTED, 0) \
             | jnp.where(~chain_ok, ERR_CHAIN_OVERFLOW, 0) \
             | jnp.where(err_range, ERR_ID_RANGE, 0)
         return SlabPoolState(
-            **{f.name: getattr(state, f.name)
-               for f in state.__dataclass_fields__.values()
+            **{f.name: getattr(pristine, f.name)
+               for f in pristine.__dataclass_fields__.values()
                if f.name != "error"},
-            error=state.error | err)
+            error=pristine.error | err)
 
-    return jax.lax.cond(ok, apply, fail, state)
+    return jax.lax.cond(ok, apply, fail, (staged, state))
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))

@@ -20,6 +20,7 @@ from repro.core.api import (  # noqa: F401
     IndexProtocol,
     MutationRejected,
     MutationReport,
+    PendingReport,
     SearchResult,
 )
 from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
@@ -27,6 +28,6 @@ from repro.core.quantizer import train_kmeans  # noqa: F401
 
 __all__ = [
     "ErrorCode", "Index", "IndexProtocol", "MutationRejected",
-    "MutationReport", "SearchResult", "SIVFConfig", "init_state",
-    "memory_report", "train_kmeans",
+    "MutationReport", "PendingReport", "SearchResult", "SIVFConfig",
+    "init_state", "memory_report", "train_kmeans",
 ]

@@ -118,6 +118,64 @@ def test_report_pool_exhaustion_and_strict_raise(rng):
     assert not rep.ok
 
 
+def test_failed_overwrite_batch_is_atomic(rng):
+    """ISSUE-3 tentpole: a POOL_EXHAUSTED batch that was overwriting live
+    ids must leave them searchable with their *old* payloads (the seed
+    behavior dropped them)."""
+    idx, _ = make(rng, n_slabs=10, max_chain=4)
+    base = rng.normal(size=(30, D)).astype(np.float32)
+    assert idx.add(base, np.arange(30)).ok
+    n = 10 * 32 + 40
+    ids = np.concatenate([np.arange(10),
+                          np.arange(100, 100 + n - 10)]).astype(np.int32)
+    rep = idx.add(rng.normal(size=(n, D)).astype(np.float32), ids)
+    assert rep.errors & sivf.ErrorCode.POOL_EXHAUSTED
+    # nothing accepted, nothing overwritten: the would-be overwrites kept
+    # their old payloads, so they land in `rejected` with the rest
+    assert (rep.accepted, rep.overwritten, rep.rejected) == (0, 0, n)
+    assert idx.n_live == 30
+    res = idx.search(base[:10], 1)
+    assert (np.asarray(res.labels)[:, 0] == np.arange(10)).all()
+    np.testing.assert_allclose(np.asarray(res.distances)[:, 0], 0, atol=1e-4)
+    # the handle keeps streaming normally after the atomic reject
+    assert idx.add(base[:5], np.arange(200, 205)).ok
+
+
+def test_count_unique_counts_int32_max_id():
+    """Regression (ISSUE 3): the old sentinel encoding collapsed a genuine
+    id equal to INT32_MAX into the masked-out run and undercounted."""
+    from repro.core.api import _count_unique
+    m = np.iinfo(np.int32).max
+    ids = jnp.asarray([m, 3, m, 3, -1], jnp.int32)
+    mask = jnp.asarray([True, True, True, True, False])
+    assert int(_count_unique(ids, mask)) == 2
+    # masked-out duplicates of a live id don't double count; masked-out
+    # ids alone don't count at all
+    assert int(_count_unique(jnp.asarray([5, 5, 9], jnp.int32),
+                             jnp.asarray([True, False, False]))) == 1
+    assert int(_count_unique(jnp.asarray([m], jnp.int32),
+                             jnp.asarray([False]))) == 0
+
+
+def test_out_of_range_id_not_misreported_as_overwrite(rng):
+    """Regression (ISSUE 3): clipping made an ID_RANGE-rejected id read
+    slot n_max-1's occupancy, so it could be reported as `overwritten`
+    when that boundary slot happened to be live."""
+    cfg = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=64, capacity=32,
+                          n_max=64, max_chain=16)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    idx = sivf.Index(cfg, cents, min_bucket=8)
+    vecs = rng.normal(size=(4, D)).astype(np.float32)
+    assert idx.add(vecs[:1], np.asarray([63], np.int32)).ok  # n_max-1 live
+    rep = idx.add(vecs[1:2], np.asarray([64], np.int32))     # out of range
+    assert rep.errors == sivf.ErrorCode.ID_RANGE
+    assert (rep.accepted, rep.overwritten, rep.rejected) == (0, 0, 1)
+    # mixed batch: the real boundary id overwrites, the phantom rejects
+    rep = idx.add(vecs[2:4], np.asarray([63, 64], np.int32))
+    assert (rep.accepted, rep.overwritten, rep.rejected) == (0, 1, 1)
+    assert idx.n_live == 1
+
+
 def test_remove_missing_ids_counted_rejected(rng):
     idx, _ = make(rng)
     vecs = rng.normal(size=(10, D)).astype(np.float32)
@@ -350,8 +408,43 @@ comp = idx.compile_stats()
 assert 1 <= comp["add"] <= len(buckets), (comp, buckets)
 assert 1 <= comp["remove"] <= len(buckets), (comp, buckets)
 
+# ---- partial per-shard failure stays truthful under deferral (ISSUE 3) ----
+# shard 0 gets overloaded past its own pool; shards 1-3 commit. The report
+# must count shard-0 rows rejected (its overwrites kept old payloads) and
+# the other shards' rows accepted, with per-shard bits naming the culprit.
+tiny = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=4, capacity=32,
+                      n_max=4096, max_chain=2)
+tidx = sivf.Index(tiny, cents, backend=mesh, min_bucket=8, deferred=True)
+base_ids = np.asarray([0, 4, 8, 1, 2, 3], np.int32)      # 3 on shard 0
+base = rng.normal(size=(len(base_ids), D)).astype(np.float32)
+f0 = tidx.add(base, base_ids)
+over = np.arange(0, 4 * 4 * 32 + 4, 4, dtype=np.int32)   # all shard 0, > pool
+n0 = len(over)
+others = np.asarray([5, 6, 7], np.int32)                 # shards 1-3 commit
+batch_ids = np.concatenate([over, others])
+bv = rng.normal(size=(len(batch_ids), D)).astype(np.float32)
+f1 = tidx.add(bv, batch_ids)
+reps = tidx.flush()
+assert reps == [f0.result(), f1.result()]
+assert f0.result().ok and f0.result().accepted == len(base_ids)
+rep = f1.result()
+POOL = sivf.ErrorCode.POOL_EXHAUSTED
+assert rep.errors & POOL, rep
+assert rep.shard_errors is not None and (rep.shard_errors[0] & POOL)
+assert not any(e & POOL for e in rep.shard_errors[1:]), rep.shard_errors
+assert rep.accepted == len(others), rep
+assert rep.overwritten == 0, rep                          # shard 0 aborted
+assert rep.rejected == n0, rep
+assert tidx.n_live == len(base_ids) + len(others)
+# shard 0's previously-live ids keep their *old* payloads
+sq = np.stack([base[0], base[1], base[2]])                # ids 0, 4, 8
+d, l = tidx.search(sq, 1, NL)
+assert (np.asarray(l)[:, 0] == np.asarray([0, 4, 8])).all(), np.asarray(l)
+np.testing.assert_allclose(np.asarray(d)[:, 0], 0, atol=1e-4)
+
 print(json.dumps({"ok": True, "live": idx.n_live,
-                  "per_shard": st["per_shard_live"], "compiles": comp}))
+                  "per_shard": st["per_shard_live"], "compiles": comp,
+                  "partial_shard_errors": [int(e) for e in rep.shard_errors]}))
 """
 
 
@@ -365,9 +458,12 @@ def _run(script, *args):
 
 
 def test_sharded_index_handle_churn():
-    """ISSUE-2 acceptance: the same handle semantics on a 4-shard mesh."""
+    """ISSUE-2 acceptance: the same handle semantics on a 4-shard mesh,
+    plus the ISSUE-3 partial per-shard failure truthfulness under
+    deferral (shard 0 aborts atomically, shards 1-3 commit)."""
     r = _run(_MESH_SCRIPT)
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     assert out["ok"]
     assert sum(out["per_shard"]) == out["live"]
+    assert out["partial_shard_errors"][0] & int(sivf.ErrorCode.POOL_EXHAUSTED)

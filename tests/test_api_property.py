@@ -39,18 +39,24 @@ def _backend(name):
     return _MESH
 
 
+_ABORT = sivf.ErrorCode.POOL_EXHAUSTED | sivf.ErrorCode.CHAIN_OVERFLOW
+
+
 def _oracle_add(ref, vecs, ids, rep, cfg):
-    """Dict-model update honouring the documented failure semantics: a
-    batch rejected by POOL_EXHAUSTED / CHAIN_OVERFLOW inserts nothing, but
-    ids it was overwriting lose their old payload (delete-then-insert)."""
-    if rep.errors & (sivf.ErrorCode.POOL_EXHAUSTED
-                     | sivf.ErrorCode.CHAIN_OVERFLOW):
-        for i in ids:
-            ref.store.pop(int(i), None)
-    else:
-        for v, i in zip(vecs, ids):
-            if 0 <= int(i) < cfg.n_max:
-                ref.store[int(i)] = v.copy()
+    """Dict-model update for *atomic* insert semantics: a shard rejected by
+    POOL_EXHAUSTED / CHAIN_OVERFLOW changes nothing — its previously-live
+    ids keep their old payloads (neither dropped nor overwritten). Uses
+    ``rep.shard_errors`` so the model stays exact per shard if the mesh
+    fixture ever grows beyond one shard."""
+    se = rep.shard_errors
+    for v, i in zip(vecs, ids):
+        i = int(i)
+        if not (0 <= i < cfg.n_max):
+            continue
+        bits = rep.errors if se is None else se[i % len(se)]
+        if bits & _ABORT:
+            continue                     # owning shard aborted atomically
+        ref.store[i] = v.copy()
 
 
 def _check_search(idx, ref, rng, q=3, k=4):
@@ -70,17 +76,38 @@ ops_strategy = st.lists(
 )
 
 
+def _assert_failed_batch_atomic(idx, before):
+    """Exhaustion-atomicity oracle: after a POOL_EXHAUSTED / CHAIN_OVERFLOW
+    batch, every previously-live id is still returned by ``search`` with
+    its *old* vector (self-query -> distance 0)."""
+    assert idx.n_live == len(before)
+    if not before:
+        return
+    pids = np.fromiter(before.keys(), np.int32)
+    qs = np.stack([before[int(i)] for i in pids])
+    d, l = idx.search(qs, 1, NL)
+    assert (np.asarray(l)[:, 0] == pids).all()
+    np.testing.assert_allclose(np.asarray(d)[:, 0], 0, atol=1e-4)
+
+
 def _drive(idx, ref, cfg, ops, seed):
     rng = np.random.default_rng(seed)
     for kind, ids in ops:
         ids = np.asarray(ids, np.int32)
         if kind == "add":
             vecs = rng.normal(size=(len(ids), D)).astype(np.float32)
+            before = {i: v.copy() for i, v in ref.store.items()}
             rep = idx.add(vecs, ids)
             _oracle_add(ref, vecs, ids, rep, cfg)
             # the disjoint counts always account for the whole batch
             assert rep.accepted + rep.overwritten + rep.rejected \
                 == rep.requested == len(ids)
+            if rep.errors & _ABORT and (
+                    rep.shard_errors is None
+                    or all(e & _ABORT for e in rep.shard_errors)):
+                # every shard aborted -> the whole batch was a no-op
+                assert rep.accepted == 0 and rep.overwritten == 0
+                _assert_failed_batch_atomic(idx, before)
         elif kind == "remove":
             before = len(set(ids.tolist()) & set(ref.store))
             rep = idx.remove(ids)
@@ -113,9 +140,42 @@ def test_handle_churn_matches_reference(backend_name, ops, seed):
 @given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
 def test_handle_churn_under_pool_exhaustion(backend_name, ops, seed):
     """Same sequences on a pool small enough that batches routinely fail:
-    reports must stay truthful and the oracle must track the documented
-    reject-atomically-but-drop-overwrites semantics."""
+    reports must stay truthful and every failed batch must be atomic —
+    previously-live ids stay searchable with their old payloads (checked
+    by the self-query oracle in ``_drive``)."""
     idx = sivf.Index(CFG_TINY, _CENTS, backend=_backend(backend_name),
                      min_bucket=8)
     ref = core.ReferenceIndex(_CENTS)
     _drive(idx, ref, CFG_TINY, ops, seed)
+
+
+@pytest.mark.parametrize("backend_name", ["single", "mesh"])
+@settings(max_examples=10, deadline=None)
+@given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
+def test_deferred_churn_matches_eager_reports(backend_name, ops, seed):
+    """Deferred mode must emit byte-identical reports to eager mode for the
+    same op sequence (including failed batches on the tiny pool), with the
+    state evolving identically."""
+    eager = sivf.Index(CFG_TINY, _CENTS, backend=_backend(backend_name),
+                       min_bucket=8)
+    deferred = sivf.Index(CFG_TINY, _CENTS, backend=_backend(backend_name),
+                          min_bucket=8, deferred=True)
+    rng = np.random.default_rng(seed)
+    eager_reps, futs = [], []
+    for kind, ids in ops:
+        ids = np.asarray(ids, np.int32)
+        if kind == "search":
+            continue
+        if kind == "add":
+            vecs = rng.normal(size=(len(ids), D)).astype(np.float32)
+            eager_reps.append(eager.add(vecs, ids))
+            futs.append(deferred.add(vecs, ids))
+        else:
+            eager_reps.append(eager.remove(ids))
+            futs.append(deferred.remove(ids))
+        assert not futs[-1].done
+    deferred_reps = deferred.flush()
+    assert deferred_reps == [f.result() for f in futs]
+    for er, dr in zip(eager_reps, deferred_reps):
+        assert er == dr, (er, dr)
+    assert eager.n_live == deferred.n_live

@@ -1,0 +1,222 @@
+"""Deferred MutationReports + device-side padding (ISSUE 3).
+
+The acceptance criterion lives here: over the same 58-size ragged churn
+stream, deferred mode must report *identical* accepted / overwritten /
+rejected counts to eager mode while adding **zero** jit executables beyond
+the power-of-two bucket bound (deferral reuses the eager executables —
+the aux counts already lived on device; eager mode merely synced them
+per batch).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import sivf
+
+D, NL = 16, 8
+
+
+def make(rng, *, n_slabs=96, capacity=32, n_max=8192, max_chain=24,
+         min_bucket=8, **kw):
+    cfg = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=n_slabs,
+                          capacity=capacity, n_max=n_max, max_chain=max_chain)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    return cfg, cents, sivf.Index(cfg, cents, min_bucket=min_bucket, **kw)
+
+
+# ---------------------------------------------------------------------------
+# PendingReport futures + flush
+# ---------------------------------------------------------------------------
+
+def test_deferred_returns_pending_and_flush_resolves(rng):
+    _, _, idx = make(rng, deferred=True)
+    vecs = rng.normal(size=(20, D)).astype(np.float32)
+    f1 = idx.add(vecs, np.arange(20))
+    f2 = idx.add(vecs[:6], np.arange(15, 21))       # 5 overwrites + 1 new
+    f3 = idx.remove(np.arange(0, 10))
+    assert isinstance(f1, sivf.PendingReport)
+    assert not (f1.done or f2.done or f3.done)
+    reports = idx.flush()
+    assert [f1.done, f2.done, f3.done] == [True] * 3
+    assert reports == [f1.result(), f2.result(), f3.result()]
+    assert f1.result().accepted == 20 and f1.result().ok
+    assert (f2.result().accepted, f2.result().overwritten) == (1, 5)
+    assert f3.result().accepted == 10
+    assert idx.flush() == []                         # empty queue is a no-op
+
+
+def test_future_attribute_access_forces_flush(rng):
+    _, _, idx = make(rng, deferred=True)
+    vecs = rng.normal(size=(8, D)).astype(np.float32)
+    fut = idx.add(vecs, np.arange(8))
+    assert fut.accepted == 8                         # proxies through result()
+    assert fut.done and not idx._pending
+
+
+def test_context_exit_flushes(rng):
+    cfg, cents, _ = make(rng)
+    with sivf.Index(cfg, cents, min_bucket=8, deferred=True) as idx:
+        fut = idx.add(rng.normal(size=(5, D)).astype(np.float32),
+                      np.arange(5))
+        assert not fut.done
+    assert fut.done and fut.result().accepted == 5
+
+
+def test_strict_deferred_raises_at_flush_queue_still_resolves(rng):
+    cfg, cents, _ = make(rng)
+    idx = sivf.Index(cfg, cents, min_bucket=8, deferred=True, strict=True)
+    vecs = rng.normal(size=(4, D)).astype(np.float32)
+    bad = idx.add(vecs[:2], np.asarray([1, cfg.n_max + 7], np.int32))
+    good = idx.add(vecs[:3], np.arange(10, 13))
+    with pytest.raises(sivf.MutationRejected) as ei:
+        idx.flush()
+    assert ei.value.report.errors & sivf.ErrorCode.ID_RANGE
+    # the whole queue resolved before the raise — no dangling futures
+    assert bad.done and good.done and good.result().ok
+    assert not idx._pending
+
+
+def test_deferred_failed_batch_is_atomic(rng):
+    """Exhaustion under deferral: the future's report shows the atomic
+    reject and the old payloads stay searchable."""
+    cfg, cents, idx = make(rng, n_slabs=10, max_chain=4, deferred=True)
+    base = rng.normal(size=(30, D)).astype(np.float32)
+    ok = idx.add(base, np.arange(30))
+    n = 10 * 32 + 40
+    ids = np.concatenate([np.arange(10),
+                          np.arange(100, 100 + n - 10)]).astype(np.int32)
+    failed = idx.add(rng.normal(size=(n, D)).astype(np.float32), ids)
+    idx.flush()
+    assert ok.result().ok and ok.result().accepted == 30
+    rep = failed.result()
+    assert rep.errors & sivf.ErrorCode.POOL_EXHAUSTED
+    assert (rep.accepted, rep.overwritten, rep.rejected) == (0, 0, n)
+    assert idx.n_live == 30
+    res = idx.search(base[:10], 1)
+    assert (np.asarray(res.labels)[:, 0] == np.arange(10)).all()
+    np.testing.assert_allclose(np.asarray(res.distances)[:, 0], 0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance criterion: 58 ragged sizes, identical counts, bounded compiles
+# ---------------------------------------------------------------------------
+
+def test_deferred_matches_eager_over_58_ragged_sizes(rng):
+    # fresh cfg so this test owns the (shared-by-config) jit counters
+    cfg = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=257, capacity=32,
+                          n_max=1 << 14, max_chain=65)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    eager = sivf.Index(cfg, cents, min_bucket=8)
+    deferred = sivf.Index(cfg, cents, min_bucket=8, deferred=True)
+
+    sizes = list(range(1, 59))                       # 58 distinct ragged sizes
+    rng.shuffle(sizes)
+    buckets = {eager._bucket(s) for s in sizes}
+    next_id, step = 0, 0
+    eager_reps, futs = [], []
+    for s in sizes:
+        vecs = rng.normal(size=(s, D)).astype(np.float32)
+        if step % 3 == 2 and next_id > s:            # overwrite slice
+            ids = np.arange(next_id - s, next_id, dtype=np.int32)
+        else:
+            ids = np.arange(next_id, next_id + s, dtype=np.int32)
+            next_id += s
+        eager_reps.append(eager.add(vecs, ids))
+        futs.append(deferred.add(vecs, ids))
+        if step % 4 == 3:                            # interleaved eviction
+            evict = np.arange(step, next_id, 7, dtype=np.int32)[:s]
+            eager_reps.append(eager.remove(evict))
+            futs.append(deferred.remove(evict))
+        step += 1
+    deferred_reps = deferred.flush()
+
+    assert deferred_reps == [f.result() for f in futs]
+    for er, dr in zip(eager_reps, deferred_reps):
+        assert (er.accepted, er.overwritten, er.rejected, er.errors) \
+            == (dr.accepted, dr.overwritten, dr.rejected, dr.errors), (er, dr)
+    assert eager.n_live == deferred.n_live
+
+    # both handles share one op set: deferral added zero executables, and
+    # the total stays within the bucket bound for 58 distinct sizes
+    compiles = eager.compile_stats()
+    assert compiles == deferred.compile_stats()
+    assert 1 <= compiles["add"] <= len(buckets), (compiles, buckets)
+    assert 1 <= compiles["remove"] <= len(buckets), (compiles, buckets)
+
+
+# ---------------------------------------------------------------------------
+# Device-side padding
+# ---------------------------------------------------------------------------
+
+def test_device_inputs_pad_device_side_and_match_host_path(rng):
+    _, _, idx = make(rng)
+    vecs = rng.normal(size=(12, D)).astype(np.float32)
+    ids = np.arange(12, dtype=np.int32)
+    dv, di = jnp.asarray(vecs), jnp.asarray(ids)
+    # the padding helpers must not round-trip jax inputs through numpy
+    padded = idx._pad_rows(dv, 16)
+    assert isinstance(padded, jax.Array) and padded.shape == (16, D)
+    assert float(jnp.sum(jnp.abs(padded[12:]))) == 0.0
+    pids = idx._pad_ids(di, 16)
+    assert isinstance(pids, jax.Array)
+    assert (np.asarray(pids[12:]) == -1).all()
+
+    rep = idx.add(dv, di)
+    assert rep.ok and rep.accepted == 12
+    res = idx.search(dv, 1)                          # device queries too
+    assert (np.asarray(res.labels)[:, 0] == ids).all()
+
+    _, _, host_idx = make(rng)
+    rep_h = host_idx.add(vecs, ids)
+    assert (rep_h.accepted, rep_h.overwritten, rep_h.rejected) \
+        == (rep.accepted, rep.overwritten, rep.rejected)
+    qs = rng.normal(size=(5, D)).astype(np.float32)
+    d_dev, l_dev = idx.search(jnp.asarray(qs), 4)
+    d_host, l_host = host_idx.search(qs, 4)
+    np.testing.assert_allclose(np.asarray(d_dev), np.asarray(d_host),
+                               rtol=1e-6)
+    assert (np.asarray(l_dev) == np.asarray(l_host)).all()
+
+
+def test_device_inputs_in_deferred_mode(rng):
+    _, _, idx = make(rng, deferred=True)
+    dv = jnp.asarray(rng.normal(size=(9, D)).astype(np.float32))
+    fut = idx.add(dv, jnp.arange(9, dtype=jnp.int32))
+    fut2 = idx.remove(jnp.arange(3, dtype=jnp.int32))
+    reports = idx.flush()
+    assert reports[0].accepted == 9 and reports[1].accepted == 3
+    assert fut.done and fut2.done
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend deferral (single-shard in-process; 4-shard partial-failure
+# case rides in test_api.py's subprocess script)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def test_mesh_deferred_matches_eager(rng, mesh1):
+    cfg, cents, _ = make(rng)
+    eager = sivf.Index(cfg, cents, backend=mesh1, min_bucket=8)
+    deferred = sivf.Index(cfg, cents, backend=mesh1, min_bucket=8,
+                          deferred=True)
+    vecs = rng.normal(size=(40, D)).astype(np.float32)
+    er1 = eager.add(vecs, np.arange(40))
+    er2 = eager.add(vecs[:10], np.arange(35, 45))
+    er3 = eager.remove(np.arange(0, 20))
+    f1 = deferred.add(vecs, np.arange(40))
+    f2 = deferred.add(vecs[:10], np.arange(35, 45))
+    f3 = deferred.remove(np.arange(0, 20))
+    deferred.flush()
+    for er, fut in [(er1, f1), (er2, f2), (er3, f3)]:
+        dr = fut.result()
+        assert (er.accepted, er.overwritten, er.rejected) \
+            == (dr.accepted, dr.overwritten, dr.rejected)
+    # mesh reports carry per-shard error bits
+    assert er1.shard_errors == (sivf.ErrorCode.NONE,)
+    assert f1.result().shard_errors == (sivf.ErrorCode.NONE,)
+    assert eager.n_live == deferred.n_live

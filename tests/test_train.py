@@ -1,11 +1,14 @@
 """Training substrate: loss goes down, accumulation equivalence,
-optimizer math, grad compression, data determinism."""
+optimizer math, grad compression, data determinism.
+
+Tier-1 since ISSUE 3: every case here is cheap on CPU (the whole module
+measures ~10s; the reduced llama config compiles fast), so the old
+module-wide `slow` mark only hid coverage.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-pytestmark = pytest.mark.slow  # compile-heavy; CI runs these in the main-branch `slow` job
 
 from repro.configs import ARCHS
 from repro.data.pipeline import DataConfig, TokenStream
