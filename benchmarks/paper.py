@@ -366,6 +366,122 @@ def fused_search_sweep():
     return rows
 
 
+def pq_sweep_summary():
+    """PQ-compressed search vs uncompressed: (rows, summary) for run.py's
+    ``BENCH_pq.json`` artifact.
+
+    For Q in {16, 64, 256}: QPS and the peak temp bytes XLA's
+    ``memory_analysis`` reports for the scan — the uncompressed scan
+    gathers a ``[Q, C, D]`` fp32 slab tile per table column while the ADC
+    scan gathers ``[Q, C, m]`` uint8 codes against a loop-invariant
+    ``[Q, m, ksub]`` table, which is where the >=4x slab-DMA cut comes
+    from. Also records recall@10 of ADC vs exact fp32 search on the same
+    clustered data, and an interpreter-mode parity witness for the fused
+    PQ Pallas kernel. Run via ``benchmarks/run.py pq_sweep``.
+    """
+    return _pq_sweep_impl()
+
+
+def _pq_sweep_impl():
+    import sivf
+    from repro.core import pq as pqmod
+    from repro.kernels.sivf_scan.pq_fused import sivf_pq_fused_search_pallas
+
+    rows = []
+    dim, k, nprobe = 128, 10, 8
+    m, nbits = 8, 6          # 8 B/vector; nbits=6 keeps the ADC table small
+    # planted neighbor groups (recall@10 is well-defined: each query's true
+    # top-10 is its group) — same construction as tests/test_pq.py's oracle
+    grng = np.random.default_rng(31)
+    gcent = grng.normal(size=(800, dim)).astype(np.float32) * 2.0
+    vecs = (np.repeat(gcent, 10, axis=0)
+            + 0.4 * grng.normal(size=(8_000, dim))).astype(np.float32)
+    n = len(vecs)
+    ids = np.arange(n, dtype=np.int32)
+    qvecs = (gcent[grng.integers(0, 800, size=64)]
+             + 0.4 * grng.normal(size=(64, dim))).astype(np.float32)
+
+    def build(pq_cfg):
+        import dataclasses
+        cfg, state, cents = build_sivf(dim, NL, n, capacity=64,
+                                       max_chain=128, train_vecs=vecs[:4096])
+        if pq_cfg is not None:
+            cfg = dataclasses.replace(cfg, pq=pq_cfg)
+            cb = pqmod.train_pq(jax.random.key(5), jnp.asarray(vecs[:4096]),
+                                m, nbits)
+            state = core.init_state(cfg, jnp.asarray(cents), cb)
+        for lo in range(0, n, 4096):
+            state = core.insert(cfg, state, jnp.asarray(vecs[lo:lo + 4096]),
+                                jnp.asarray(ids[lo:lo + 4096]))
+        assert int(state.error) == 0
+        return cfg, state
+
+    cfg_raw, st_raw = build(None)
+    cfg_pq, st_pq = build(sivf.PQConfig(m=m, nbits=nbits))
+
+    def raw_scan(qs, table):
+        return core.scan_slabs_topk(cfg_raw, st_raw, qs, table, k)
+
+    def pq_scan(qs, table):
+        return core.scan_slabs_topk_pq(cfg_pq, st_pq, qs, table, k)
+
+    summary = {"dim": dim, "n": n, "m": m, "nbits": nbits,
+               "bytes_per_vector": {"raw": dim * 4, "pq": m},
+               "temp_bytes": {}, "reduction": {}, "qps": {}}
+    for qn in (16, 64, 256):
+        qs = jnp.asarray(np.random.default_rng(77)
+                         .normal(size=(qn, dim)).astype(np.float32))
+        peaks = {}
+        for name, cfg_, st_, fn in (("raw", cfg_raw, st_raw, raw_scan),
+                                    ("pq", cfg_pq, st_pq, pq_scan)):
+            lists = core.probe(st_.centroids, qs, nprobe)
+            table = core.gather_tables(cfg_, st_, lists)
+            compiled = jax.jit(fn).lower(qs, table).compile()
+            t, _ = timeit(compiled, qs, table, warmup=1, iters=3)
+            mem = compiled.memory_analysis()
+            peak = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+            peaks[name] = peak
+            summary["temp_bytes"].setdefault(name, {})[str(qn)] = peak
+            summary["qps"].setdefault(name, {})[str(qn)] = round(qn / t, 1)
+            rows.append(Row(f"pq_sweep.{name}@Q={qn}", t,
+                            f"qps={qn / t:.0f} temp_mb={peak / 2 ** 20:.2f}"))
+        if peaks["raw"] == 0:
+            rows.append(Row(f"pq_sweep.memcheck@Q={qn}", 0.0,
+                            "memory_analysis unavailable; check skipped"))
+            continue
+        red = peaks["raw"] / max(peaks["pq"], 1)
+        summary["reduction"][str(qn)] = round(red, 2)
+        assert red >= 4.0, \
+            f"PQ slab temp reduction {red:.1f}x < 4x at Q={qn}"
+        rows.append(Row(f"pq_sweep.reduction@Q={qn}", 0.0,
+                        f"temp_bytes_reduction={red:.1f}x"))
+
+    # recall@10 of ADC vs exact fp32 (full probe isolates the PQ loss)
+    d, labels = core.search(cfg_pq, st_pq, jnp.asarray(qvecs), k, NL)
+    true = exact_topk(vecs, qvecs, k)
+    rec = recall_at_k(np.asarray(labels), true)
+    summary["recall_at_10"] = round(rec, 4)
+    assert rec >= 0.8, f"PQ recall@10 {rec:.3f} < 0.8"
+    rows.append(Row("pq_sweep.recall", 0.0, f"recall@10={rec:.3f}"))
+
+    # fused PQ Pallas kernel, interpreter-emulated: bit-exact parity witness
+    qn = 8
+    qs = jnp.asarray(qvecs[:qn])
+    lists = core.probe(st_pq.centroids, qs, 2)
+    table = core.gather_tables(cfg_pq, st_pq, lists)
+    adc = pqmod.adc_tables(st_pq.pq_codebooks, qs, cfg_pq.metric)
+    t, (dp, lp) = timeit(sivf_pq_fused_search_pallas, adc, table, st_pq.codes,
+                         st_pq.ids, st_pq.bitmap, k, interpret=True,
+                         warmup=0, iters=1)
+    dr, lr = core.scan_slabs_topk_pq(cfg_pq, st_pq, qs, table, k, adc=adc)
+    assert (np.asarray(dp) == np.asarray(dr)).all(), "pq kernel parity"
+    assert (np.asarray(lp) == np.asarray(lr)).all(), "pq label parity"
+    summary["pallas_interpret_parity"] = "bit-exact"
+    rows.append(Row(f"pq_sweep.pallas_interpret@Q={qn}", t,
+                    "parity=bit-exact (interpreter wall; not TPU perf)"))
+    return rows, summary
+
+
 def tab1_tail_latency():
     """Table 1: deletion latency avg/p99/max over many streaming steps."""
     rows = []

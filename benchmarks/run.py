@@ -6,7 +6,9 @@ experiments/bench_results.json. Run: PYTHONPATH=src python -m benchmarks.run
 
 ``streaming_churn --deferred`` runs the eager AND deferred churn variants
 back-to-back and records p50/p99 latencies + jit compile counts to
-``BENCH_streaming_churn.json`` (the slow CI job's perf data point).
+``BENCH_streaming_churn.json``; ``pq_sweep`` always records its summary
+(QPS, recall@10, measured slab temp bytes at Q=16/64/256) to
+``BENCH_pq.json`` (the slow CI job's perf data points).
 """
 from __future__ import annotations
 
@@ -28,6 +30,8 @@ ARTIFACTS = [
     ("fig6_7_8", paper.fig6_7_8_real_datasets),
     ("fig9", paper.fig9_recall_pareto),
     ("fused", paper.fused_search_sweep),
+    # pq_sweep is dispatched by name in main() (its summary-writing variant
+    # records BENCH_pq.json), not through this table
     ("streaming_churn", paper.streaming_churn),
     ("streaming_churn_deferred", paper.streaming_churn_deferred),
     ("fig10", paper.fig10_zipfian_skew),
@@ -37,6 +41,29 @@ ARTIFACTS = [
     ("tab3", paper.tab3_time_breakdown),
     ("tab4", paper.tab4_non_ivf_indexes),
 ]
+
+
+def run_summary_artifact(name: str, fn, bench_path: str, results: dict
+                         ) -> None:
+    """Run a (rows, summary) benchmark, print rows, record results, and
+    write the summary JSON next to the repo root (the slow CI job uploads
+    it). Errors are swallowed like the generic loop — CI must check for
+    the ``<name>.ERROR`` row / a fresh artifact, not the exit code."""
+    t0 = time.time()
+    try:
+        rows, summary = fn()
+        for r in rows:
+            print(r.csv(), flush=True)
+        results[name] = [
+            {"name": r.name, "us": r.us, "derived": r.derived}
+            for r in rows]
+        bench_out = Path(bench_path)
+        bench_out.write_text(json.dumps(summary, indent=1))
+        print(f"# wrote {bench_out}")
+    except Exception as e:  # keep the harness going
+        print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
+        results[name] = {"error": traceback.format_exc()[-1500:]}
+    results.setdefault("_timing", {})[name] = round(time.time() - t0, 1)
 
 
 def main() -> None:
@@ -60,21 +87,13 @@ def main() -> None:
         artifacts = [(n, f) for n, f in artifacts
                      if n not in ("streaming_churn",
                                   "streaming_churn_deferred")]
-        try:
-            rows, summary = paper.streaming_churn_compare()
-            for r in rows:
-                print(r.csv(), flush=True)
-            results["streaming_churn"] = [
-                {"name": r.name, "us": r.us, "derived": r.derived}
-                for r in rows]
-            bench_out = Path("BENCH_streaming_churn.json")
-            bench_out.write_text(json.dumps(summary, indent=1))
-            print(f"# wrote {bench_out}")
-        except Exception as e:  # keep the harness going
-            print(f"streaming_churn.ERROR,0,{type(e).__name__}: {e}",
-                  flush=True)
-            results["streaming_churn"] = {
-                "error": traceback.format_exc()[-1500:]}
+        run_summary_artifact("streaming_churn", paper.streaming_churn_compare,
+                             "BENCH_streaming_churn.json", results)
+    if only is None or "pq_sweep" in only:
+        # pq_sweep always runs through its summary variant so the slab-DMA /
+        # recall data point lands in BENCH_pq.json next to the churn artifact
+        run_summary_artifact("pq_sweep", paper.pq_sweep_summary,
+                             "BENCH_pq.json", results)
     for name, fn in artifacts:
         if only and name not in only:
             continue

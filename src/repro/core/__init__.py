@@ -13,9 +13,17 @@ from repro.core.index import (  # noqa: F401
     gather_tables,
     insert,
     scan_slabs_topk,
+    scan_slabs_topk_pq,
     search,
     stats,
     walk_chains,
+)
+from repro.core.pq import (  # noqa: F401
+    PQConfig,
+    adc_tables,
+    decode as pq_decode,
+    encode as pq_encode,
+    train_pq,
 )
 from repro.core.quantizer import assign, probe, train_kmeans  # noqa: F401
 from repro.core.reference import ReferenceIndex  # noqa: F401

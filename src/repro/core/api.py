@@ -77,7 +77,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import index as ix
+from repro.core import pq as pqmod
 from repro.core import quantizer
+from repro.core.pq import PQConfig
 from repro.core.state import (
     ERR_CHAIN_OVERFLOW,
     ERR_ID_RANGE,
@@ -279,6 +281,43 @@ def _or_bits(err: jax.Array) -> jax.Array:
     return acc
 
 
+_AUX_SCALARS = ("n_requested", "n_live_before", "errors", "n_live_after",
+                "n_overwritten")
+
+
+def _resolve_aux(auxes: list[dict]) -> list[dict]:
+    """Sync a queue of device aux dicts in ONE device->host transfer.
+
+    Every aux value is int32 (five scalars per batch, plus the mesh
+    backend's per-shard error vector), so the whole queue packs into one
+    flat device array: a single concatenate + a single explicit
+    ``jax.device_get``, however long the queue. ``Index.flush`` resolving
+    N deferred reports therefore costs one transfer, not 5N — and eager
+    mode reuses the same path with a one-element queue.
+    """
+    if not auxes:
+        return []
+    chunks, spans, off = [], [], 0
+    for a in auxes:
+        se = a.get("shard_errors")
+        n_se = 0 if se is None else int(se.shape[0])
+        chunks.append(jnp.stack([a[k] for k in _AUX_SCALARS]))
+        if se is not None:
+            chunks.append(se.astype(jnp.int32).reshape(-1))
+        spans.append((off, n_se))
+        off += len(_AUX_SCALARS) + n_se
+    flat = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+    host = np.asarray(jax.device_get(flat))
+    out = []
+    for off, n_se in spans:
+        vals = host[off:off + len(_AUX_SCALARS) + n_se]
+        d = dict(zip(_AUX_SCALARS, vals[:len(_AUX_SCALARS)].tolist()))
+        if n_se:
+            d["shard_errors"] = vals[len(_AUX_SCALARS):]
+        out.append(d)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Backend op factories (cached so handles with equal configs share jit
 # caches — this is what keeps compile counts bounded across sessions)
@@ -430,15 +469,22 @@ class Index:
                 :meth:`flush` (the handle is a context manager that flushes
                 on clean exit). Uses the same jitted executables as eager
                 mode — deferral never adds compilations.
+    pq_codebooks: pre-trained ``[m, ksub, dim//m]`` PQ codebooks (only with
+                ``cfg.pq``); otherwise call :meth:`train` before the first
+                ``add``. With PQ enabled, ingest encodes batches to uint8
+                codes and search runs ADC over the compressed slabs.
     """
 
     def __init__(self, cfg: SIVFConfig, centroids, backend="single", *,
                  axis: str = "data", impl: str = "xla", block_q: int = 8,
                  use_tables: bool | None = None, strict: bool = False,
                  min_bucket: int = 64, deferred: bool = False,
-                 _state: SlabPoolState | None = None):
+                 pq_codebooks=None, _state: SlabPoolState | None = None,
+                 _pq_trained: bool | None = None):
         if min_bucket < 1:
             raise ValueError("min_bucket must be >= 1")
+        if pq_codebooks is not None and cfg.pq is None:
+            raise ValueError("pq_codebooks given but cfg.pq is None")
         self.cfg = cfg
         self.strict = bool(strict)
         self.min_bucket = int(min_bucket)
@@ -449,12 +495,15 @@ class Index:
         self._impl = impl
         self._block_q = int(block_q)
         self._use_tables = use_tables
+        if pq_codebooks is not None:
+            pq_codebooks = jnp.asarray(pq_codebooks, jnp.float32)
         if isinstance(backend, str) and backend == "single":
             self._backend_kind = "single"
             self._mesh = None
             self._ops = _single_ops(cfg, impl, self._block_q, use_tables)
             if _state is None:
-                _state = init_state(cfg, jnp.asarray(centroids))
+                _state = init_state(cfg, jnp.asarray(centroids),
+                                    pq_codebooks)
         elif isinstance(backend, Mesh):
             from repro.core import distributed as dist
             self._backend_kind = "mesh"
@@ -463,11 +512,15 @@ class Index:
                                   use_tables)
             if _state is None:
                 _state = dist.init_sharded_state(
-                    cfg, jnp.asarray(centroids), backend, axis)
+                    cfg, jnp.asarray(centroids), backend, axis,
+                    pq_codebooks)
         else:
             raise TypeError(
                 f"backend must be 'single' or a jax Mesh, got {backend!r}")
         self._state = _state
+        if _pq_trained is None:
+            _pq_trained = cfg.pq is None or pq_codebooks is not None
+        self._pq_trained = bool(_pq_trained)
 
     # -- introspection ------------------------------------------------------
 
@@ -555,7 +608,43 @@ class Index:
         x = np.asarray(x, np_dtype)
         return x.reshape(-1) if flat else x
 
+    # -- PQ training --------------------------------------------------------
+
+    def train(self, xs, *, key=None, iters: int = 16) -> "Index":
+        """Train the PQ codebooks from a sample (``cfg.pq`` required).
+
+        Runs per-subspace k-means (``core.pq.train_pq``) and installs the
+        codebooks into the device state (replicated to every shard on the
+        mesh backend). Must happen on an *empty* index — stored codes
+        would go stale under new codebooks — and before the first ``add``;
+        alternatively pass pre-trained ``pq_codebooks=`` at construction.
+        Returns ``self`` for chaining.
+        """
+        if self.cfg.pq is None:
+            raise RuntimeError("train() needs SIVFConfig(pq=PQConfig(...))")
+        if self.n_live:
+            raise RuntimeError(
+                "train() on a non-empty index: stored codes would go stale "
+                "under new codebooks — train before the first add()")
+        key = jax.random.key(0) if key is None else key
+        cb = pqmod.train_pq(key, jnp.asarray(xs, jnp.float32),
+                            self.cfg.pq.m, self.cfg.pq.nbits, iters=iters)
+        if self._backend_kind == "mesh":
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            stacked = jnp.broadcast_to(cb, (self.n_shards,) + cb.shape)
+            cb = jax.device_put(
+                stacked, NamedSharding(self._mesh, P(self._axis)))
+        self._state = dataclasses.replace(self._state, pq_codebooks=cb)
+        self._pq_trained = True
+        return self
+
     # -- mutation -----------------------------------------------------------
+
+    def _require_trained(self) -> None:
+        if not self._pq_trained:
+            raise RuntimeError(
+                "PQ codebooks are untrained: call Index.train(sample) or "
+                "construct with pq_codebooks= before adding vectors")
 
     def add(self, vecs, ids, *, strict: bool | None = None
             ) -> "MutationReport | PendingReport":
@@ -569,6 +658,7 @@ class Index:
         ``jax.Array``s are padded device-side. In deferred mode this
         returns a :class:`PendingReport` without any host sync.
         """
+        self._require_trained()
         vecs = self._as_batch(vecs, np.float32)
         ids_a = self._as_batch(ids, np.int32, flat=True)
         if vecs.ndim != 2 or vecs.shape[0] != ids_a.shape[0]:
@@ -596,12 +686,13 @@ class Index:
             fut = PendingReport(self)
             self._pending.append((fut, op, aux, bucket, strict))
             return fut
-        return self._finalize(op, aux, bucket,
+        return self._finalize(op, _resolve_aux([aux])[0], bucket,
                               self.strict if strict is None else strict)
 
     def _finalize(self, op: str, aux: dict, bucket: int, strict: bool
                   ) -> MutationReport:
-        """Host-sync an aux dict into a report (the only sync point)."""
+        """Build a report from an already-host-synced aux dict
+        (``_resolve_aux`` is the only sync point)."""
         requested = int(aux["n_requested"])
         n0 = int(aux["n_live_before"])
         n1 = int(aux["n_live_after"])
@@ -629,20 +720,24 @@ class Index:
     def flush(self) -> list[MutationReport]:
         """Resolve every outstanding :class:`PendingReport`, oldest first.
 
-        One host sync for the whole queue. In strict mode the first failed
-        report raises :class:`MutationRejected` — after the entire queue
-        has resolved, so no future is left dangling. No-op (``[]``) when
-        nothing is pending.
+        One host sync for the whole queue: every batch's aux scalars (and
+        the mesh backend's per-shard error vectors) stack into a single
+        flat int32 array and cross device->host in one ``jax.device_get``
+        (``_resolve_aux``), however long the queue. In strict mode the
+        first failed report raises :class:`MutationRejected` — after the
+        entire queue has resolved, so no future is left dangling. No-op
+        (``[]``) when nothing is pending.
         """
         pending, self._pending = self._pending, []
         reports: list[MutationReport] = []
         first_err: MutationRejected | None = None
         k = 0
         try:
-            for k, (fut, op, aux, bucket, strict) in enumerate(pending):
+            host_auxes = _resolve_aux([a for _, _, a, _, _ in pending])
+            for k, (fut, op, _, bucket, strict) in enumerate(pending):
                 strict = self.strict if strict is None else strict
                 try:
-                    rep = self._finalize(op, aux, bucket, strict)
+                    rep = self._finalize(op, host_auxes[k], bucket, strict)
                 except MutationRejected as e:
                     rep = e.report
                     if first_err is None:
@@ -697,10 +792,11 @@ class Index:
         """Persist the index (atomic + checksummed via CheckpointManager)."""
         from repro.checkpoint.manager import CheckpointManager
         mgr = CheckpointManager(path, keep_last=1)
-        cfg = dataclasses.asdict(self.cfg)
+        cfg = dataclasses.asdict(self.cfg)   # nested PQConfig -> plain dict
         cfg["dtype"] = np.dtype(self.cfg.dtype).name
         mgr.save_metadata(self._META, {
-            "format": 1,
+            "format": 2,
+            "pq_trained": self._pq_trained,
             "backend": self._backend_kind,
             "n_shards": self.n_shards,
             "axis": self._axis,
@@ -728,6 +824,8 @@ class Index:
         meta = mgr.load_metadata(cls._META)
         cfg_d = dict(meta["cfg"])
         cfg_d["dtype"] = jnp.dtype(cfg_d["dtype"])
+        if cfg_d.get("pq") is not None:
+            cfg_d["pq"] = PQConfig(**cfg_d["pq"])
         cfg = SIVFConfig(**cfg_d)
         kw = {"axis": meta["axis"], "impl": meta["impl"],
               "block_q": meta["block_q"], "use_tables": meta["use_tables"],
@@ -754,14 +852,29 @@ class Index:
         # throwaway zero pool is ever allocated next to the restored one
         example = jax.eval_shape(lambda: init_state(
             cfg, jnp.zeros((cfg.n_lists, cfg.dim), cfg.dtype)))
-        sharding_tree = None
+        shard = None
         if meta["backend"] == "mesh":
             from jax.sharding import NamedSharding, PartitionSpec as P
             n = meta["n_shards"]
             example = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct((n,) + x.shape, x.dtype),
                 example)
-            sharding_tree = jax.tree.map(
-                lambda _: NamedSharding(backend, P(kw["axis"])), example)
-        state = mgr.restore(step, example, sharding_tree=sharding_tree)
-        return cls(cfg, None, backend=backend, _state=state, **kw)
+            shard = NamedSharding(backend, P(kw["axis"]))
+        leaves, treedef = jax.tree.flatten(example)
+        # format-1 checkpoints predate the PQ planes; ``codes`` and
+        # ``pq_codebooks`` are the LAST two registered data fields, so a
+        # legacy manifest restores into the leaf prefix and the (zero-width,
+        # since format 1 implies cfg.pq=None) planes are filled fresh
+        legacy = int(meta.get("format", 1)) < 2
+        want = leaves[:-2] if legacy else leaves
+        out = list(mgr.restore(
+            step, want,
+            sharding_tree=None if shard is None else [shard] * len(want)))
+        if legacy:
+            fill = [jnp.zeros(x.shape, x.dtype) for x in leaves[-2:]]
+            if shard is not None:
+                fill = [jax.device_put(f, shard) for f in fill]
+            out += fill
+        state = jax.tree.unflatten(treedef, out)
+        return cls(cfg, None, backend=backend, _state=state,
+                   _pq_trained=meta.get("pq_trained", True), **kw)

@@ -46,10 +46,16 @@ def shard_of(ids: jax.Array, n_shards: int) -> jax.Array:
 
 
 def init_sharded_state(cfg: SIVFConfig, centroids: jax.Array, mesh: Mesh,
-                       axis: str = "data") -> SlabPoolState:
-    """Per-shard empty states stacked on a leading sharded axis."""
+                       axis: str = "data",
+                       pq_codebooks: jax.Array | None = None
+                       ) -> SlabPoolState:
+    """Per-shard empty states stacked on a leading sharded axis.
+
+    ``pq_codebooks`` (when ``cfg.pq`` is set) replicates to every shard,
+    like the coarse centroids — shards encode and ADC-score locally.
+    """
     n = mesh.shape[axis]
-    one = init_state(cfg, centroids)
+    one = init_state(cfg, centroids, pq_codebooks)
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
     sharding = NamedSharding(mesh, P(axis))
     return jax.tree.map(lambda x: jax.device_put(x, sharding), stacked)

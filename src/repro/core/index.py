@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitmap as bm
+from repro.core import pq as pqmod
 from repro.core import quantizer
 from repro.core.state import (
     ERR_CHAIN_OVERFLOW,
@@ -165,6 +166,12 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
     is_last_of_list = ord_of_g == (n_new_l[jnp.clip(list_of_g, 0, nl - 1)] - 1)
     prv_of_g = jnp.where(is_last_of_list, -1, slab_next_g)
 
+    # PQ ingest path: encode once per batch (the codebooks are identical in
+    # the staged and pristine values; an aborted batch discards the codes
+    # with the rest of the staged scatter, so atomicity is untouched)
+    if cfg.pq is not None:
+        new_codes = pqmod.encode(state.pq_codebooks, sv.astype(jnp.float32))
+
     def apply(operand) -> SlabPoolState:
         staged, _ = operand                          # commit the staged batch
         drop_g = jnp.where(gmask, slab_of_g, ns)
@@ -194,7 +201,12 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
         # a scatter-add is an OR; see DESIGN.md §2 on the fence analogue)
         drop_i = jnp.where(svalid, item_slab, ns)
         data = staged.data.at[drop_i, item_slot].set(
-            sv.astype(cfg.dtype), mode="drop")
+            sv[:, :cfg.payload_dim].astype(cfg.dtype), mode="drop")
+        if cfg.pq is not None:
+            codes = staged.codes.at[drop_i, item_slot].set(
+                new_codes, mode="drop")
+        else:
+            codes = staged.codes
         ids = staged.ids.at[drop_i, item_slot].set(sids, mode="drop")
         norms = staged.norms.at[drop_i, item_slot].set(
             jnp.sum(sv.astype(jnp.float32) ** 2, axis=-1), mode="drop")
@@ -213,7 +225,8 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
             n_live=staged.n_live + jnp.sum(svalid),
             error=staged.error | jnp.where(err_range, ERR_ID_RANGE, 0),
             centroids=staged.centroids, tables=tables, table_len=table_len,
-            table_pos=table_pos)
+            table_pos=table_pos, codes=codes,
+            pq_codebooks=staged.pq_codebooks)
 
     def fail(operand) -> SlabPoolState:
         _, pristine = operand                 # drop the staged deletes whole
@@ -325,7 +338,8 @@ def _delete_impl(cfg: SIVFConfig, state: SlabPoolState, ext_ids: jax.Array
         free_stack=free_stack, free_top=free_top, att_slab=att_slab,
         att_slot=state.att_slot, n_live=n_live, error=state.error,
         centroids=state.centroids, tables=tables, table_len=table_len,
-        table_pos=table_pos)
+        table_pos=table_pos, codes=state.codes,
+        pq_codebooks=state.pq_codebooks)
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
@@ -406,6 +420,59 @@ def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
     return d, l
 
 
+def scan_slabs_topk_pq(cfg: SIVFConfig, state: SlabPoolState,
+                       queries: jax.Array, table: jax.Array, k: int,
+                       adc: jax.Array | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """ADC scan + streaming top-k over PQ-compressed slabs (XLA path).
+
+    Mirrors :func:`scan_slabs_topk` column-by-column, but scores candidates
+    by summing per-subspace ADC table lookups instead of touching fp32
+    payloads — only the uint8 code plane is gathered per slab. The ``m``
+    partial distances accumulate in ascending-subspace order; the fused
+    Pallas kernel (kernels/sivf_scan/pq_fused.py) uses the same summation
+    order and — fed the *same materialized* ``adc`` array, as
+    ``_scan_dispatch`` does (the table is built once per query batch and
+    shared across backends; compiler fusion of the table build itself may
+    differ at the ULP level otherwise) — matches this reference
+    bit-for-bit, ties included.
+    """
+    qn = queries.shape[0]
+    m = cfg.pq.m
+    if adc is None:
+        adc = pqmod.adc_tables(state.pq_codebooks,
+                               queries.astype(jnp.float32),
+                               cfg.metric)                    # [Q, m, K]
+
+    def step(carry, slab_col):                                # slab_col [Q]
+        bd, bl = carry
+        sc = jnp.clip(slab_col, 0)
+        codes = state.codes[sc]                               # [Q, C, m] u8
+        # per-subspace table gathers, accumulated left-to-right: the peak
+        # live set stays O(Q*C) per column (vs O(Q*C*m) for a fused
+        # [..., m] gather) and the fixed add order is what the Pallas
+        # kernel reproduces for bit-exact parity
+        d = None
+        for s in range(m):
+            t_s = jnp.take_along_axis(
+                adc[:, s, :], codes[..., s].astype(jnp.int32), axis=1)
+            d = t_s if d is None else d + t_s                 # [Q, C]
+        vb = bm.unpack_batch(state.bitmap[sc], cfg.capacity)  # [Q, C]
+        ok = vb & (slab_col >= 0)[:, None]
+        d = jnp.where(ok, d, jnp.inf)
+        lab = jnp.where(ok, state.ids[sc], -1)
+        alld = jnp.concatenate([bd, d], axis=1)               # [Q, k+C]
+        alll = jnp.concatenate([bl, lab], axis=1)
+        nd, idx = jax.lax.top_k(-alld, k)
+        nl = jnp.take_along_axis(alll, idx, axis=1)
+        return (-nd, nl), None
+
+    init = (jnp.full((qn, k), jnp.inf, jnp.float32),
+            jnp.full((qn, k), -1, jnp.int32))
+    (d, l), _ = jax.lax.scan(step, init, table.T)
+    return d, l
+
+
 SEARCH_IMPLS = ("xla", "pallas", "pallas_interpret")
 
 
@@ -418,7 +485,24 @@ def _scan_dispatch(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
       "xla"              — jnp column scan (CPU, dry-run, shard_map bodies);
       "pallas"           — the fused TPU kernel (kernels/sivf_scan/fused.py);
       "pallas_interpret" — same kernel, Pallas interpreter (CPU emulation).
+
+    With ``cfg.pq`` set every backend scores compressed slabs by ADC
+    (``scan_slabs_topk_pq`` / kernels/sivf_scan/pq_fused.py): the uint8
+    code plane replaces the fp32 payload DMA and distances are table-lookup
+    sums against per-query ADC tables held in VMEM.
     """
+    if cfg.pq is not None and impl in SEARCH_IMPLS:
+        # one ADC table build serves whichever backend scores with it
+        adc = pqmod.adc_tables(state.pq_codebooks,
+                               queries.astype(jnp.float32), cfg.metric)
+        if impl == "xla":
+            return scan_slabs_topk_pq(cfg, state, queries, table, k, adc=adc)
+        from repro.kernels.sivf_scan.pq_fused import (
+            sivf_pq_fused_search_pallas,
+        )
+        return sivf_pq_fused_search_pallas(
+            adc, table, state.codes, state.ids, state.bitmap, k,
+            block_q=block_q, interpret=impl == "pallas_interpret")
     if impl == "xla":
         return scan_slabs_topk(cfg, state, queries, table, k)
     if impl in ("pallas", "pallas_interpret"):
@@ -464,6 +548,23 @@ def search(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
 # Introspection
 # ---------------------------------------------------------------------------
 
+def _memory_stats(cfg: SIVFConfig, n_shards: int = 1) -> dict:
+    """Pool memory footprint, aggregated across shards like ``total_live``.
+
+    Delegates the byte math to ``state.memory_report`` (one source of
+    truth) and scales the per-pool planes by the shard count;
+    ``compression_ratio`` (shard-count invariant) surfaces only when PQ is
+    enabled.
+    """
+    from repro.core.state import memory_report
+    mr = memory_report(cfg)
+    out = {"payload_bytes": mr["payload_bytes"] * n_shards,
+           "code_bytes": mr["code_bytes"] * n_shards}
+    if cfg.pq is not None:
+        out["compression_ratio"] = mr["compression_ratio"]
+    return out
+
+
 def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
     """Occupancy / fragmentation report (paper §5.6.2).
 
@@ -471,6 +572,8 @@ def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
     per-shard state produced by ``distributed.init_sharded_state`` (leaves
     carry a leading shard axis): shard occupancy is aggregated, the live
     count folds ``distributed.total_live``, and error bits are OR-reduced.
+    Includes the pool memory footprint (``_memory_stats``) so sessions can
+    observe the PQ compression ratio.
     """
     import numpy as np
     free_top = np.asarray(state.free_top)
@@ -494,6 +597,7 @@ def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
             "n_shards": int(free_top.shape[0]),
             "per_shard_live": np.asarray(state.n_live).astype(int).tolist(),
             "per_shard_slabs_used": used_per.tolist(),
+            **_memory_stats(cfg, int(free_top.shape[0])),
         }
     used = int(cfg.n_slabs - state.free_top)
     live = int(state.n_live)
@@ -507,4 +611,5 @@ def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
         "error": int(state.error),
         "max_chain_len": int(jnp.max(state.table_len)),
         "mean_chain_len": float(jnp.mean(state.table_len)),
+        **_memory_stats(cfg),
     }

@@ -1,0 +1,125 @@
+"""Product-quantization codec: trainable per-subspace codebooks + ADC.
+
+SIVF's fused search is bandwidth-bound on raw fp32 slab DMA; PQ cuts the
+bytes a slab scan moves by ~8-16x by storing each vector as ``m`` one-byte
+codewords (one per ``dim/m``-dimensional subspace) instead of ``dim`` fp32
+components. Search never decompresses: per query, an *asymmetric distance
+computation* (ADC) table ``T[s, j] = d(q_s, codebook[s, j])`` is built
+once, and a candidate's distance is the sum of ``m`` table lookups — the
+quantity the fused kernel (``kernels/sivf_scan/pq_fused.py``) and the XLA
+reference (``core.index.scan_slabs_topk_pq``) both compute, bit-for-bit
+identically.
+
+This module is deliberately state-free: codebooks are plain arrays that
+live inside ``SlabPoolState.pq_codebooks`` (so they checkpoint and shard
+with the rest of the index) and every function here is jit-safe.
+
+Conventions:
+  * ``codebooks``: ``[m, ksub, dsub]`` f32 with ``ksub = 2**nbits`` and
+    ``dsub = dim // m``;
+  * ``codes``: ``[..., m]`` uint8 (one byte per subspace even for
+    ``nbits < 8`` — sub-byte packing is a recorded follow-up);
+  * codeword assignment is always the L2-nearest centroid per subspace
+    (standard PQ, metric-independent); the *metric* only changes the ADC
+    table contents (squared-L2 partials vs negated inner products).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer
+
+
+@dataclasses.dataclass(frozen=True)
+class PQConfig:
+    """Static PQ configuration (hashable; nests inside ``SIVFConfig.pq``).
+
+    ``m``        — number of subspaces (must divide ``dim``); stored bytes
+                   per vector = ``m`` (one uint8 codeword per subspace).
+    ``nbits``    — bits per codeword; codebook size ``ksub = 2**nbits``.
+    ``store_raw``— keep the fp32 payload plane next to the codes (for
+                   reranking / debugging). Default False: codes *replace*
+                   the payload, which is where the memory win comes from.
+    """
+
+    m: int
+    nbits: int = 8
+    store_raw: bool = False
+
+    def __post_init__(self):
+        if self.m < 1:
+            raise ValueError(f"pq.m must be >= 1, got {self.m}")
+        if not 1 <= self.nbits <= 8:
+            raise ValueError(f"pq.nbits must be in [1, 8], got {self.nbits}")
+
+    @property
+    def ksub(self) -> int:
+        return 1 << self.nbits
+
+    def code_bytes(self) -> int:
+        """Stored bytes per vector (one uint8 per subspace)."""
+        return self.m
+
+
+def subspaces(xs: jax.Array, m: int) -> jax.Array:
+    """``[..., dim]`` -> ``[..., m, dim//m]`` subspace view."""
+    return xs.reshape(*xs.shape[:-1], m, xs.shape[-1] // m)
+
+
+@partial(jax.jit, static_argnames=("m", "nbits", "iters"))
+def train_pq(key: jax.Array, xs: jax.Array, m: int, nbits: int = 8,
+             iters: int = 16) -> jax.Array:
+    """K-means per subspace. ``xs [N, dim]`` -> codebooks ``[m, ksub, dsub]``.
+
+    Each subspace trains independently (vmapped Lloyd's iterations over the
+    same sample), mirroring Faiss ``ProductQuantizer::train``.
+    """
+    if xs.shape[-1] % m:
+        raise ValueError(f"dim {xs.shape[-1]} not divisible by m={m}")
+    sub = jnp.moveaxis(subspaces(xs.astype(jnp.float32), m), -2, 0)  # [m,N,ds]
+    keys = jax.random.split(key, m)
+    train = lambda k, x: quantizer.train_kmeans(k, x, 1 << nbits, iters=iters)
+    return jax.vmap(train)(keys, sub)
+
+
+def encode(codebooks: jax.Array, xs: jax.Array) -> jax.Array:
+    """Nearest codeword per subspace. ``xs [B, dim]`` -> ``[B, m]`` uint8."""
+    m, _, dsub = codebooks.shape
+    sub = subspaces(xs.astype(jnp.float32), m)                    # [B, m, ds]
+    d = (jnp.sum(sub * sub, axis=-1, keepdims=True)
+         - 2.0 * jnp.einsum("bmd,mkd->bmk", sub, codebooks)
+         + jnp.sum(codebooks * codebooks, axis=-1)[None])         # [B, m, K]
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def decode(codebooks: jax.Array, codes: jax.Array) -> jax.Array:
+    """Reconstruct. ``codes [B, m]`` uint8 -> ``[B, dim]`` f32."""
+    m = codebooks.shape[0]
+    sel = codebooks[jnp.arange(m)[None, :], codes.astype(jnp.int32)]
+    return sel.reshape(codes.shape[0], -1)
+
+
+def adc_tables(codebooks: jax.Array, queries: jax.Array,
+               metric: str = "l2") -> jax.Array:
+    """Per-query ADC lookup tables. ``queries [Q, dim]`` -> ``[Q, m, ksub]``.
+
+    ``l2``: ``T[q, s, j] = ||q_s - codebook[s, j]||^2`` so a candidate's
+    ADC distance is ``sum_s T[q, s, code_s]`` (the squared-L2 surrogate the
+    rest of the search stack already ranks by). ``ip``: negated partial
+    inner products, summing to ``-<q, decode(code)>``.
+
+    Both the fused kernel and the XLA reference consume *this* table, so
+    scoring parity only depends on matching the m-wise summation order —
+    which both sides fix to ascending ``s``.
+    """
+    m = codebooks.shape[0]
+    q = subspaces(queries.astype(jnp.float32), m)                 # [Q, m, ds]
+    dot = jnp.einsum("qmd,mkd->qmk", q, codebooks)
+    if metric == "ip":
+        return -dot
+    return (jnp.sum(q * q, axis=-1, keepdims=True) - 2.0 * dot
+            + jnp.sum(codebooks * codebooks, axis=-1)[None])

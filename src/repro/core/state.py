@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitmap as bm
+from repro.core.pq import PQConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +39,15 @@ class SIVFConfig:
     max_chain: int = 64            # bound on slabs walked per list (Alg. 3 traversal bound)
     track_tables: bool = True      # beyond-paper: dense list->slab tables (DESIGN.md §2)
     dtype: jnp.dtype = jnp.float32
+    pq: PQConfig | None = None     # product-quantized slab payloads (core/pq.py)
 
     def __post_init__(self):
         bm.n_words(self.capacity)  # validates capacity
         if self.metric not in ("l2", "ip"):
             raise ValueError(f"unknown metric {self.metric}")
+        if self.pq is not None and self.dim % self.pq.m:
+            raise ValueError(
+                f"dim {self.dim} not divisible by pq.m {self.pq.m}")
 
     @property
     def words(self) -> int:
@@ -52,6 +57,17 @@ class SIVFConfig:
     def pool_vectors(self) -> int:
         return self.n_slabs * self.capacity
 
+    @property
+    def payload_dim(self) -> int:
+        """Width of the fp32 ``data`` plane: 0 when PQ codes replace it."""
+        return 0 if (self.pq is not None and not self.pq.store_raw) \
+            else self.dim
+
+    @property
+    def code_m(self) -> int:
+        """Width of the uint8 ``codes`` plane (0 when PQ is disabled)."""
+        return self.pq.m if self.pq is not None else 0
+
 
 @partial(
     jax.tree_util.register_dataclass,
@@ -59,6 +75,7 @@ class SIVFConfig:
         "data", "ids", "norms", "bitmap", "nxt", "prv", "owner", "cursor",
         "live", "heads", "free_stack", "free_top", "att_slab", "att_slot",
         "n_live", "error", "centroids", "tables", "table_len", "table_pos",
+        "codes", "pq_codebooks",
     ],
     meta_fields=[],
 )
@@ -67,7 +84,8 @@ class SlabPoolState:
     """Device-resident SIVF index state. All shapes static."""
 
     # slab payloads + per-slot metadata
-    data: jax.Array        # [n_slabs, C, D] vector payloads
+    data: jax.Array        # [n_slabs, C, payload_dim] fp payloads (width 0
+    #                        when PQ codes replace them; cfg.payload_dim)
     ids: jax.Array         # [n_slabs, C] int32 external ids
     norms: jax.Array       # [n_slabs, C] f32 cached ||x||^2 (beyond-paper)
     # slab headers M = <next, b_valid, cnt> (paper §3.1) + divergence fields
@@ -94,6 +112,9 @@ class SlabPoolState:
     tables: jax.Array      # [n_lists, max_chain] int32 slab ids (-1 pad)
     table_len: jax.Array   # [n_lists] int32 chain length
     table_pos: jax.Array   # [n_slabs] int32 position of slab in its table
+    # product-quantization planes (core/pq.py; zero-width when cfg.pq=None)
+    codes: jax.Array       # [n_slabs, C, code_m] uint8 PQ codewords
+    pq_codebooks: jax.Array  # [m, ksub, dim//m] f32 trained codebooks
 
 
 ERR_POOL_EXHAUSTED = 1
@@ -112,14 +133,32 @@ def clear_error(state: SlabPoolState) -> SlabPoolState:
     return dataclasses.replace(state, error=jnp.zeros_like(state.error))
 
 
-def init_state(cfg: SIVFConfig, centroids: jax.Array) -> SlabPoolState:
-    """Fresh empty pool. ``centroids`` [n_lists, D] from the coarse quantizer."""
+def init_state(cfg: SIVFConfig, centroids: jax.Array,
+               pq_codebooks: jax.Array | None = None) -> SlabPoolState:
+    """Fresh empty pool. ``centroids`` [n_lists, D] from the coarse quantizer.
+
+    With ``cfg.pq`` set, ``pq_codebooks`` ``[m, ksub, dim//m]`` carries the
+    trained subspace codebooks (``core.pq.train_pq``); omitted, the plane
+    initializes to zeros and must be trained before ingest
+    (``Index.train``) — every vector would otherwise encode to codeword 0.
+    """
     if centroids.shape != (cfg.n_lists, cfg.dim):
         raise ValueError(
             f"centroids shape {centroids.shape} != {(cfg.n_lists, cfg.dim)}")
-    ns, c, d, w = cfg.n_slabs, cfg.capacity, cfg.dim, cfg.words
+    ns, c, w = cfg.n_slabs, cfg.capacity, cfg.words
+    if cfg.pq is not None:
+        cb_shape = (cfg.pq.m, cfg.pq.ksub, cfg.dim // cfg.pq.m)
+    else:
+        cb_shape = (0, 0, 0)
+    if pq_codebooks is None:
+        cb = jnp.zeros(cb_shape, jnp.float32)
+    else:
+        if pq_codebooks.shape != cb_shape:
+            raise ValueError(
+                f"pq_codebooks shape {pq_codebooks.shape} != {cb_shape}")
+        cb = jnp.array(pq_codebooks, dtype=jnp.float32)   # copy (donation)
     return SlabPoolState(
-        data=jnp.zeros((ns, c, d), cfg.dtype),
+        data=jnp.zeros((ns, c, cfg.payload_dim), cfg.dtype),
         ids=jnp.full((ns, c), -1, jnp.int32),
         norms=jnp.zeros((ns, c), jnp.float32),
         bitmap=jnp.zeros((ns, w), jnp.uint32),
@@ -141,24 +180,42 @@ def init_state(cfg: SIVFConfig, centroids: jax.Array) -> SlabPoolState:
         tables=jnp.full((cfg.n_lists, cfg.max_chain), -1, jnp.int32),
         table_len=jnp.zeros((cfg.n_lists,), jnp.int32),
         table_pos=jnp.full((ns,), -1, jnp.int32),
+        codes=jnp.zeros((ns, c, cfg.code_m), jnp.uint8),
+        pq_codebooks=cb,
     )
 
 
 def memory_report(cfg: SIVFConfig) -> dict:
-    """Structural-overhead accounting mirroring paper §5.6.2 / Fig. 12."""
-    payload = cfg.n_slabs * cfg.capacity * cfg.dim * jnp.dtype(cfg.dtype).itemsize
-    ids = cfg.n_slabs * cfg.capacity * 4
-    norms = cfg.n_slabs * cfg.capacity * 4
+    """Structural-overhead accounting mirroring paper §5.6.2 / Fig. 12.
+
+    With ``cfg.pq`` set, the per-vector payload is the uint8 code plane
+    (plus the raw plane only when ``store_raw``); ``compression_ratio``
+    reports pool payload bytes at fp32 over the stored payload+code bytes.
+    """
+    slots = cfg.n_slabs * cfg.capacity
+    payload = slots * cfg.payload_dim * jnp.dtype(cfg.dtype).itemsize
+    codes = slots * cfg.code_m
+    raw_equiv = slots * cfg.dim * jnp.dtype(cfg.dtype).itemsize
+    codebooks = 0
+    if cfg.pq is not None:
+        codebooks = cfg.pq.m * cfg.pq.ksub * (cfg.dim // cfg.pq.m) * 4
+    ids = slots * 4
+    norms = slots * 4
     headers = cfg.n_slabs * (cfg.words * 4 + 4 * 6)  # bitmap + 6 int32 fields
     att = cfg.n_max * 8
     heads = cfg.n_lists * 4
     stack = cfg.n_slabs * 4
     tables = (cfg.n_lists * cfg.max_chain + cfg.n_lists + cfg.n_slabs) * 4 \
         if cfg.track_tables else 0
-    total = payload + ids + norms + headers + att + heads + stack + tables
+    stored = payload + codes
+    total = stored + codebooks + ids + norms + headers + att + heads + stack \
+        + tables
     return {
         "payload_bytes": int(payload),
-        "metadata_bytes": int(total - payload),
+        "code_bytes": int(codes),
+        "codebook_bytes": int(codebooks),
+        "compression_ratio": float(raw_equiv / stored) if stored else 1.0,
+        "metadata_bytes": int(total - stored),
         "total_bytes": int(total),
-        "overhead_frac_vs_payload": float((total - payload) / payload),
+        "overhead_frac_vs_payload": float((total - stored) / max(stored, 1)),
     }

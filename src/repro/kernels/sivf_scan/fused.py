@@ -58,6 +58,39 @@ def _unpack_bitmap(words: jax.Array, capacity: int) -> jax.Array:
     return (jnp.right_shift(wsel, bit_ix) & jnp.uint32(1)) != 0
 
 
+def fold_topk(outd_ref, outl_ref, qj, d, lab, *, capacity: int, k: int
+              ) -> None:
+    """Fold a ``[1, C]`` candidate row into the running ``[1, k]`` top-k.
+
+    Merge row layout = [running k | C candidates]; identical to the
+    reference's concatenate order, so first-index tie-breaking matches.
+    Shared by the raw fused kernel (here) and the PQ ADC kernel
+    (``pq_fused.py``) — candidates that score bit-identically therefore
+    select bit-identically.
+    """
+    run_d = outd_ref[pl.ds(qj, 1), :]                   # [1, k]
+    run_l = outl_ref[pl.ds(qj, 1), :]
+    cd = jnp.concatenate([run_d, d], axis=1)            # [1, k+C]
+    cl = jnp.concatenate([run_l, lab], axis=1)
+    m = k + capacity
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+
+    def body(j, cur):
+        lo = jnp.min(cur, axis=1, keepdims=True)        # [1, 1]
+        ix = jnp.min(jnp.where(cur == lo, col, m), axis=1, keepdims=True)
+        oh = col == ix
+        lj = jnp.max(jnp.where(oh, cl, _NEG), axis=1, keepdims=True)
+        # masking an extracted slot to +inf makes it re-selectable once the
+        # true min is +inf; every genuinely-inf slot carries label -1
+        # (dead / pad / init), so force -1 there instead of the stale label
+        lj = jnp.where(jnp.isinf(lo), -1, lj)
+        pl.store(outd_ref, (pl.dslice(qj, 1), pl.dslice(j, 1)), lo)
+        pl.store(outl_ref, (pl.dslice(qj, 1), pl.dslice(j, 1)), lj)
+        return jnp.where(oh, jnp.inf, cur)
+
+    jax.lax.fori_loop(0, k, body, cd)
+
+
 def _kernel(table_ref, q_ref, data_ref, ids_ref, norms_ref, bitmap_ref,
             outd_ref, outl_ref, *, capacity: int, k: int, metric: str):
     qj = pl.program_id(1)                               # query within tile
@@ -91,29 +124,7 @@ def _kernel(table_ref, q_ref, data_ref, ids_ref, norms_ref, bitmap_ref,
     lab = jnp.where(valid, ids_ref[...], -1)
 
     # -- fold candidates into the running [1, k] row -----------------------
-    # Merge row layout = [running k | C candidates]; identical to the
-    # reference's concatenate order, so first-index tie-breaking matches.
-    run_d = outd_ref[pl.ds(qj, 1), :]                   # [1, k]
-    run_l = outl_ref[pl.ds(qj, 1), :]
-    cd = jnp.concatenate([run_d, d], axis=1)            # [1, k+C]
-    cl = jnp.concatenate([run_l, lab], axis=1)
-    m = k + capacity
-    col = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
-
-    def body(j, cur):
-        lo = jnp.min(cur, axis=1, keepdims=True)        # [1, 1]
-        ix = jnp.min(jnp.where(cur == lo, col, m), axis=1, keepdims=True)
-        oh = col == ix
-        lj = jnp.max(jnp.where(oh, cl, _NEG), axis=1, keepdims=True)
-        # masking an extracted slot to +inf makes it re-selectable once the
-        # true min is +inf; every genuinely-inf slot carries label -1
-        # (dead / pad / init), so force -1 there instead of the stale label
-        lj = jnp.where(jnp.isinf(lo), -1, lj)
-        pl.store(outd_ref, (pl.dslice(qj, 1), pl.dslice(j, 1)), lo)
-        pl.store(outl_ref, (pl.dslice(qj, 1), pl.dslice(j, 1)), lj)
-        return jnp.where(oh, jnp.inf, cur)
-
-    jax.lax.fori_loop(0, k, body, cd)
+    fold_topk(outd_ref, outl_ref, qj, d, lab, capacity=capacity, k=k)
 
 
 def sivf_fused_search_pallas(queries: jax.Array, table: jax.Array,

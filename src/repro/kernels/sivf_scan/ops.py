@@ -52,3 +52,11 @@ def sivf_fused_search(queries, table, data, ids, norms, bitmap, k: int,
     return sivf_fused_search_pallas(queries, table, data, ids, norms, bitmap,
                                     k, metric=metric, block_q=block_q,
                                     interpret=interpret)
+
+
+# The PQ ADC kernel has no queries+codebooks wrapper here on purpose: the
+# ADC table must be built ONCE per query batch and shared with whatever it
+# is compared against (compiler fusion makes independent builds differ at
+# the ULP level). Go through ``core.search`` / ``core._scan_dispatch``, or
+# call ``pq_fused.sivf_pq_fused_search_pallas`` with an explicit table from
+# ``core.pq.adc_tables``.

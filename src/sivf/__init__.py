@@ -24,10 +24,11 @@ from repro.core.api import (  # noqa: F401
     SearchResult,
 )
 from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
+from repro.core.pq import PQConfig, train_pq  # noqa: F401
 from repro.core.quantizer import train_kmeans  # noqa: F401
 
 __all__ = [
     "ErrorCode", "Index", "IndexProtocol", "MutationRejected",
-    "MutationReport", "PendingReport", "SearchResult", "SIVFConfig",
-    "init_state", "memory_report", "train_kmeans",
+    "MutationReport", "PendingReport", "PQConfig", "SearchResult",
+    "SIVFConfig", "init_state", "memory_report", "train_kmeans", "train_pq",
 ]

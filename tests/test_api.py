@@ -312,6 +312,35 @@ def test_save_load_roundtrip(tmp_path, rng):
     assert loaded.add(vecs[:4], np.arange(200, 204)).ok
 
 
+def test_load_format1_checkpoint(tmp_path, rng):
+    """Pre-PQ (format-1) checkpoints lack the ``codes`` / ``pq_codebooks``
+    leaves; ``Index.load`` must restore them into the leaf prefix and fill
+    the (zero-width, since format 1 implies ``pq=None``) planes fresh."""
+    from repro.checkpoint.manager import CheckpointManager
+    idx, _ = make(rng)
+    vecs = rng.normal(size=(60, D)).astype(np.float32)
+    idx.add(vecs, np.arange(60))
+    idx.save(tmp_path / "ckpt")
+    # rewrite the checkpoint as a format-1 save: drop the two PQ leaves
+    # (last two registered data fields) and the pq metadata keys
+    mgr = CheckpointManager(tmp_path / "ckpt", keep_last=1)
+    meta = mgr.load_metadata("index")
+    meta["format"] = 1
+    meta.pop("pq_trained")
+    meta["cfg"].pop("pq")
+    mgr.save_metadata("index", meta)
+    leaves, _ = jax.tree.flatten(idx.state)
+    mgr.save(0, leaves[:-2])
+    loaded = sivf.Index.load(tmp_path / "ckpt")
+    assert loaded.n_live == 60
+    qs = rng.normal(size=(4, D)).astype(np.float32)
+    d0, l0 = idx.search(qs, 5, NL)
+    d1, l1 = loaded.search(qs, 5, NL)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1))
+    assert (np.asarray(l0) == np.asarray(l1)).all()
+    assert loaded.add(vecs[:4], np.arange(200, 204)).ok
+
+
 def test_save_load_mesh_roundtrip(tmp_path, rng, mesh1):
     idx, _ = make(rng, backend=mesh1)
     idx.add(rng.normal(size=(50, D)).astype(np.float32), np.arange(50))

@@ -149,6 +149,102 @@ def test_handle_churn_under_pool_exhaustion(backend_name, ops, seed):
     _drive(idx, ref, CFG_TINY, ops, seed)
 
 
+# ---------------------------------------------------------------------------
+# PQ-compressed churn (ISSUE 4): codes must track ids exactly
+# ---------------------------------------------------------------------------
+
+CFG_PQ = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=48, capacity=32,
+                         n_max=256, max_chain=12,
+                         pq=sivf.PQConfig(m=4, nbits=4))
+# tiny PQ pool: batches routinely abort, exercising code-plane atomicity
+CFG_PQ_TINY = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=3, capacity=32,
+                              n_max=256, max_chain=2,
+                              pq=sivf.PQConfig(m=4, nbits=4))
+_PQ_CB = sivf.train_pq(
+    jax.random.key(11),
+    jnp.asarray(np.random.default_rng(7).normal(size=(512, D)),
+                jnp.float32), 4, 4, iters=8)
+
+
+def _assert_codes_consistent(idx, store):
+    """Every live id's stored code row equals encode(codebooks, its
+    current vector) — the PQ analogue of the payload oracle. Covers
+    inserts, overwrites, and failed batches (whose old codes must
+    survive untouched)."""
+    from repro.core import pq
+    st = idx.state
+    assert idx.n_live == len(store)
+    if not store:
+        return
+    ids = np.fromiter(store.keys(), np.int32)
+    vecs = np.stack([store[int(i)] for i in ids])
+    att_slab = np.asarray(st.att_slab)
+    att_slot = np.asarray(st.att_slot)
+    codes = np.asarray(st.codes)
+    cb = np.asarray(st.pq_codebooks)
+    if att_slab.ndim == 2:                    # stacked sharded state
+        n_sh = att_slab.shape[0]
+        sh = ids % n_sh
+        slab, slot = att_slab[sh, ids], att_slot[sh, ids]
+        assert (slab >= 0).all()
+        got = codes[sh, slab, slot]
+        cb = cb[0]                            # replicated per shard
+    else:
+        slab, slot = att_slab[ids], att_slot[ids]
+        assert (slab >= 0).all()
+        got = codes[slab, slot]
+    want = np.asarray(pq.encode(jnp.asarray(cb), jnp.asarray(vecs)))
+    assert (got == want).all()
+
+
+def _assert_live_set_searchable(idx, store):
+    """Full-probe search with k >= n_live returns exactly the live ids
+    (ADC distances are approximate; the *set* of reachable ids is not)."""
+    if not store:
+        return
+    k = max(len(store), 1)
+    qs = np.stack([v for v in store.values()][:2])
+    _, labels = idx.search(qs, k, NL)
+    got = set(np.asarray(labels).ravel().tolist()) - {-1}
+    assert got == set(int(i) for i in store)
+
+
+@pytest.mark.parametrize("backend_name", ["single", "mesh"])
+@pytest.mark.parametrize("cfg", [CFG_PQ, CFG_PQ_TINY],
+                         ids=["pq", "pq_tiny"])
+@settings(max_examples=15, deadline=None)
+@given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
+def test_pq_churn_codes_consistent(backend_name, cfg, ops, seed):
+    """Hypothesis churn with PQ enabled on both backends: insert / delete /
+    overwrite keep the uint8 code plane consistent with the id set, failed
+    batches leave the old codes searchable, and reports stay disjoint."""
+    idx = sivf.Index(cfg, _CENTS, backend=_backend(backend_name),
+                     min_bucket=8, pq_codebooks=_PQ_CB)
+    rng = np.random.default_rng(seed)
+    store: dict[int, np.ndarray] = {}
+    for kind, ids in ops:
+        ids = np.asarray(ids, np.int32)
+        if kind == "add":
+            vecs = rng.normal(size=(len(ids), D)).astype(np.float32)
+            rep = idx.add(vecs, ids)
+            assert rep.accepted + rep.overwritten + rep.rejected \
+                == rep.requested == len(ids)
+            se = rep.shard_errors
+            last = {int(i): v for i, v in zip(ids, vecs)}   # batch: last wins
+            for i, v in last.items():
+                bits = rep.errors if se is None else se[i % len(se)]
+                if not bits & _ABORT:
+                    store[i] = v.copy()
+        elif kind == "remove":
+            rep = idx.remove(ids)
+            for i in set(ids.tolist()):
+                store.pop(int(i), None)
+        else:
+            _assert_live_set_searchable(idx, store)
+        _assert_codes_consistent(idx, store)
+    _assert_live_set_searchable(idx, store)
+
+
 @pytest.mark.parametrize("backend_name", ["single", "mesh"])
 @settings(max_examples=10, deadline=None)
 @given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))

@@ -98,6 +98,46 @@ def test_deferred_failed_batch_is_atomic(rng):
     np.testing.assert_allclose(np.asarray(res.distances)[:, 0], 0, atol=1e-4)
 
 
+def test_flush_is_one_device_transfer(rng, monkeypatch):
+    """ISSUE 4 satellite: ``flush()`` packs the whole queue's aux scalars
+    into ONE stacked device->host transfer — a single explicit
+    ``jax.device_get`` on one concatenated int32 array, with zero implicit
+    transfers (enforced by the transfer guard: "disallow" rejects any
+    implicit device->host sync while letting the one device_get through).
+    """
+    _, _, idx = make(rng, deferred=True)
+    futs = []
+    for step in range(7):
+        vecs = rng.normal(size=(6, D)).astype(np.float32)
+        futs.append(idx.add(vecs, np.arange(step * 6, step * 6 + 6)))
+        if step % 3 == 2:
+            futs.append(idx.remove(np.arange(step, step + 2)))
+    jax.block_until_ready(idx.state.n_live)      # settle queued computation
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(
+        jax, "device_get", lambda x: (calls.append(1), real(x))[1])
+    with jax.transfer_guard("disallow"):
+        reports = idx.flush()
+    assert len(calls) == 1, f"flush used {len(calls)} transfers"
+    assert len(reports) == len(futs) and all(f.done for f in futs)
+    assert sum(r.accepted for r in reports if r.op == "add") == 42
+
+
+def test_eager_report_is_one_device_transfer(rng, monkeypatch):
+    """Eager mode rides the same path with a one-element queue."""
+    _, _, idx = make(rng)
+    vecs = rng.normal(size=(10, D)).astype(np.float32)
+    idx.add(vecs, np.arange(10))                 # warm executables
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(
+        jax, "device_get", lambda x: (calls.append(1), real(x))[1])
+    rep = idx.add(vecs, np.arange(10, 20))
+    assert rep.accepted == 10
+    assert len(calls) == 1
+
+
 # ---------------------------------------------------------------------------
 # Acceptance criterion: 58 ragged sizes, identical counts, bounded compiles
 # ---------------------------------------------------------------------------
