@@ -717,3 +717,81 @@ def streaming_churn_compare():
     assert deferred["jit_compiles"] == eager["jit_compiles"], (
         "deferred mode compiled new executables", eager, deferred)
     return eager_rows + deferred_rows, {"eager": eager, "deferred": deferred}
+
+
+def reshard_sweep_summary():
+    """Elastic resharding sweep (ISSUE 5): (rows, summary) for run.py's
+    ``BENCH_reshard.json`` artifact.
+
+    Builds a 100k-vector index (dim=64) and walks the shard chain
+    1 -> 2 -> 4 via the pure ``core.distributed.reshard_state``, PQ off
+    and on, recording per step: wall seconds, live rows, and the bytes
+    the canonical live-row table moves (payload/codes + id + list per
+    row — the quantity a real device-side reshard would put on the
+    interconnect). Search parity vs the pre-reshard index is asserted at
+    the end of each chain (ids AND distances bit-identical), so the slow
+    CI smoke is a correctness witness, not just a timer.
+    """
+    import dataclasses
+    from repro.core import distributed as dist
+    from repro.core import pq as pqmod
+
+    n, dim, n_lists = 100_000, 64, 32
+    m, nbits = 8, 8
+    rng = np.random.default_rng(13)
+    vecs = dataset(dim, n)
+    ids = np.arange(n, dtype=np.int32)
+    qs = jnp.asarray(rng.normal(size=(16, dim)).astype(np.float32))
+    rows: list[Row] = []
+    summary = {"n": n, "dim": dim, "chain": [1, 2, 4], "variants": {}}
+
+    for tag in ("raw", "pq"):
+        cfg, state, cents = build_sivf(dim, n_lists, n, capacity=64,
+                                       max_chain=256,
+                                       train_vecs=vecs[:4096])
+        if tag == "pq":
+            cfg = dataclasses.replace(cfg, pq=sivf.PQConfig(m=m, nbits=nbits))
+            cb = pqmod.train_pq(jax.random.key(5), jnp.asarray(vecs[:4096]),
+                                m, nbits)
+            state = core.init_state(cfg, jnp.asarray(cents), cb)
+        t0 = time.perf_counter()
+        for lo in range(0, n, 4096):
+            state = core.insert(cfg, state, jnp.asarray(vecs[lo:lo + 4096]),
+                                jnp.asarray(ids[lo:lo + 4096]))
+        jax.block_until_ready(state.n_live)
+        assert int(state.error) == 0
+        build_s = time.perf_counter() - t0
+        d0, l0 = core.search(cfg, state, qs, 10, 8)
+        d0, l0 = np.asarray(d0), np.asarray(l0)
+
+        # bytes one live row moves through the canonical table
+        row_bytes = (cfg.payload_dim * jnp.dtype(cfg.dtype).itemsize
+                     + cfg.code_m + 4 + 4)             # + id + list
+        steps, n_from = [], 1
+        for n_to in (2, 4):
+            t0 = time.perf_counter()
+            state = dist.reshard_state(cfg, state, n_from, n_to)
+            jax.block_until_ready(state.n_live)
+            secs = time.perf_counter() - t0
+            live = int(np.asarray(state.n_live).sum())
+            moved = live * row_bytes
+            steps.append({"from": n_from, "to": n_to, "seconds":
+                          round(secs, 3), "rows": live,
+                          "bytes_moved": moved,
+                          "mb_per_s": round(moved / 2**20 / secs, 1)})
+            rows.append(Row(f"reshard_sweep.{tag}@{n_from}->{n_to}", secs,
+                            f"rows={live} moved_mb={moved / 2**20:.1f} "
+                            f"mbps={moved / 2**20 / secs:.0f}"))
+            n_from = n_to
+        d1, l1 = dist.search_stacked(cfg, state, qs, 10, 8)
+        assert np.array_equal(d0, d1) and np.array_equal(l0, l1), \
+            f"reshard changed search results ({tag})"
+        rows.append(Row(f"reshard_sweep.{tag}.parity", 0.0,
+                        "search=bit-identical after 1->2->4"))
+        summary["variants"][tag] = {
+            "build_seconds": round(build_s, 2),
+            "row_bytes": int(row_bytes),
+            "steps": steps,
+            "search_parity": "bit-identical",
+        }
+    return rows, summary

@@ -8,7 +8,9 @@ experiments/bench_results.json. Run: PYTHONPATH=src python -m benchmarks.run
 back-to-back and records p50/p99 latencies + jit compile counts to
 ``BENCH_streaming_churn.json``; ``pq_sweep`` always records its summary
 (QPS, recall@10, measured slab temp bytes at Q=16/64/256) to
-``BENCH_pq.json`` (the slow CI job's perf data points).
+``BENCH_pq.json``; ``reshard_sweep`` records elastic-reshard wall-clock +
+bytes moved for 1->2->4 shards at 100k vectors (PQ on/off, search-parity
+asserted) to ``BENCH_reshard.json`` (the slow CI job's perf data points).
 """
 from __future__ import annotations
 
@@ -94,6 +96,9 @@ def main() -> None:
         # recall data point lands in BENCH_pq.json next to the churn artifact
         run_summary_artifact("pq_sweep", paper.pq_sweep_summary,
                              "BENCH_pq.json", results)
+    if only is None or "reshard_sweep" in only:
+        run_summary_artifact("reshard_sweep", paper.reshard_sweep_summary,
+                             "BENCH_reshard.json", results)
     for name, fn in artifacts:
         if only and name not in only:
             continue

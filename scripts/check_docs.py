@@ -1,0 +1,124 @@
+"""Docs checker: executable examples + intra-repo link integrity.
+
+Two guarantees, enforced by the CI ``docs`` job (and mirrored in tier-1
+by ``tests/test_docs.py``):
+
+  1. **Every fenced ``python`` block in ``docs/*.md`` runs.** Blocks in
+     one document execute top-to-bottom as a single script (so later
+     blocks may build on earlier ones), under ``PYTHONPATH=src`` from the
+     repo root — exactly what the docs tell a reader to do. A fence
+     tagged anything other than exactly ``python`` (``text``, ``json``,
+     ``bash``, ``python-norun``...) is not executed.
+  2. **Intra-repo markdown links resolve.** Every ``[text](target)`` in
+     ``docs/*.md`` and ``README.md`` whose target is not an external URL
+     or a pure anchor must point at an existing file or directory
+     (fragments are stripped before the check).
+
+Run: ``PYTHONPATH=src python scripts/check_docs.py [files...]``
+(defaults to ``docs/*.md`` + ``README.md``). Exits non-zero with one
+line per failure.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+_LINK = re.compile(r"\[[^\]]*\]\(([^()\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def extract_python_blocks(text: str) -> list[tuple[int, str]]:
+    """Fenced ``python`` blocks as (start line number, source) pairs."""
+    blocks, cur, start = [], None, 0
+    for ln, line in enumerate(text.splitlines(), 1):
+        fence = line.startswith("```")
+        if cur is None and fence and line.strip() == "```python":
+            cur, start = [], ln + 1
+        elif cur is not None and fence:
+            blocks.append((start, "\n".join(cur)))
+            cur = None
+        elif cur is not None:
+            cur.append(line)
+    return blocks
+
+
+def iter_links(text: str):
+    """Link targets of ``[text](target)``, fenced code excluded."""
+    in_fence = False
+    for line in text.splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield from _LINK.findall(line)
+
+
+def check_links(md: Path) -> list[str]:
+    errors = []
+    for target in iter_links(md.read_text()):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def run_blocks(md: Path) -> list[str]:
+    blocks = extract_python_blocks(md.read_text())
+    if not blocks:
+        return []
+    # one script per document: blocks share state top-to-bottom, with
+    # line markers so a traceback names the offending block
+    src = "\n\n".join(f"# --- {md.name}: block at line {ln} ---\n{code}"
+                      for ln, code in blocks)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    with tempfile.NamedTemporaryFile("w", suffix=f"_{md.stem}.py",
+                                     delete=False) as f:
+        f.write(src)
+        script = f.name
+    try:
+        r = subprocess.run([sys.executable, script], cwd=REPO, env=env,
+                           capture_output=True, text=True, timeout=600)
+    finally:
+        os.unlink(script)
+    if r.returncode != 0:
+        return [f"{md}: python blocks failed "
+                f"(exit {r.returncode}):\n{r.stdout[-1000:]}"
+                f"{r.stderr[-3000:]}"]
+    return []
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: missing")
+            continue
+        errors += check_links(md)
+        if md.parent.name == "docs":        # README blocks are illustrative
+            errors += run_blocks(md)
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        names = ", ".join(m.name for m in files)
+        print(f"docs OK: {names} (links + executable python blocks)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

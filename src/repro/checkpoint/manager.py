@@ -8,9 +8,14 @@ Design for 1000+ nodes (DESIGN.md §6):
     writes on a background thread so the train loop overlaps I/O.
   * **elastic restart** — arrays are stored unsharded (np.save per leaf);
     ``restore(..., sharding_tree=...)`` re-places them onto *any* mesh, so
-    a job can resume on a different topology after node loss. (At real
-    scale the np.save backend swaps for a per-host sharded writer; the
-    manager API is the contract.)
+    a job can resume on a different topology after node loss, and
+    ``restore_arrays(step)`` loads a step's raw leaves straight from its
+    manifest with no example tree at all — the self-describing path
+    elastic *resharding* uses, where the caller re-routes rows across a
+    different shard count instead of merely re-placing leaves
+    (``core.distributed.reshard_state``; docs/checkpoint-format.md). (At
+    real scale the np.save backend swaps for a per-host sharded writer;
+    the manager API is the contract.)
   * **retention** — keep_last prunes old steps; a ``latest`` symlink gives
     O(1) discovery on restart.
 """
@@ -118,24 +123,44 @@ class CheckpointManager:
         steps = self.all_steps()
         return max(steps) if steps else None
 
-    def restore(self, step: int, example_tree, sharding_tree=None,
-                verify: bool = True):
-        """Load ``step`` into the structure of ``example_tree``; optionally
-        re-place each leaf with the given shardings (elastic re-mesh)."""
+    def restore_arrays(self, step: int, verify: bool = True
+                       ) -> list[np.ndarray]:
+        """Load a step's raw leaves straight from its manifest.
+
+        Self-describing restore: shapes/dtypes come from the manifest, so
+        no example tree is needed. This is the entry point for elastic
+        resharding (``core.distributed.reshard_state``), which re-routes
+        the restored rows across a *different* shard count — an example
+        tree shaped like the target topology would be a lie there.
+        """
         d = self.dir / f"step_{step:08d}"
         with open(d / "manifest.json") as f:
             manifest = json.load(f)
-        leaves, treedef = _flatten(example_tree)
-        assert len(leaves) == len(manifest["arrays"]), \
-            "checkpoint/model structure mismatch"
         out = []
-        for i, meta in enumerate(manifest["arrays"]):
+        for meta in manifest["arrays"]:
             arr = np.load(d / meta["file"])
             if verify:
                 digest = hashlib.sha256(arr.tobytes()).hexdigest()
                 if digest != meta["sha256"]:
                     raise IOError(f"checksum mismatch in {meta['file']}")
             out.append(arr)
+        return out
+
+    def restore(self, step: int, example_tree, sharding_tree=None,
+                verify: bool = True):
+        """Load ``step`` into the structure of ``example_tree``; optionally
+        re-place each leaf with the given shardings (elastic re-mesh)."""
+        leaves, treedef = _flatten(example_tree)
+        # count check against the manifest alone (one small JSON read)
+        # before touching any array file: a structure mismatch on a huge
+        # checkpoint must not cost a full load-and-hash pass first
+        with open(self.dir / f"step_{step:08d}" / "manifest.json") as f:
+            stored = len(json.load(f)["arrays"])
+        if len(leaves) != stored:
+            raise ValueError(
+                f"checkpoint/model structure mismatch: example tree has "
+                f"{len(leaves)} leaves, step {step} stored {stored}")
+        out = self.restore_arrays(step, verify=verify)
         tree = jax.tree.unflatten(treedef, out)
         if sharding_tree is not None:
             tree = jax.tree.map(jax.device_put, tree, sharding_tree)

@@ -39,7 +39,10 @@ Design points (ISSUE 2, atomicity + deferral reworked in ISSUE 3):
     :class:`PendingReport` futures backed by on-device aux scalars; no
     host sync happens until :meth:`Index.flush` (or context-manager
     exit, or touching a future), so the device queue stays full between
-    syncs. Eager and deferred modes run the *same* jitted executables —
+    syncs. Resolution is one *packed* transfer per queue — every batch's
+    scalars (and per-shard error vectors) concatenate into a single
+    int32 array crossing in one ``jax.device_get`` — never one sync per
+    future. Eager and deferred modes run the *same* jitted executables —
     deferral adds zero compilations.
   * **Device-side padding.** Batches that arrive as ``jax.Array``s are
     padded to their bucket with ``jnp`` ops on the device; only host
@@ -53,8 +56,15 @@ Design points (ISSUE 2, atomicity + deferral reworked in ISSUE 3):
     :meth:`Index.compile_stats` exposes the jit cache sizes and the tests
     assert the bound over 8+ distinct ragged sizes.
   * **Persistence** goes through ``checkpoint/manager.py`` (atomic,
-    checksummed) plus a JSON sidecar holding the config and backend
-    topology, so :meth:`Index.load` can rebuild the handle.
+    checksummed) plus a JSON sidecar holding the config, backend
+    topology, and shard-routing rule, so :meth:`Index.load` can rebuild
+    the handle.
+  * **Elastic resharding** (ISSUE 5). A checkpoint saved on S shards
+    loads onto *any* backend — S' shards or ``"single"`` — via
+    ``core.distributed.reshard_state`` (rows re-route by
+    ``id % n_shards'``; search results stay bit-identical), and
+    :meth:`Index.reshard` does the same to a live handle in place. See
+    docs/architecture.md and docs/checkpoint-format.md.
   * :class:`IndexProtocol` is the structural interface the baselines
     (``baselines/contiguous_ivf.py``, ``baselines/lsh.py``, ...) also
     implement, so benchmarks and examples drive every engine identically.
@@ -447,6 +457,26 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
 # The handle
 # ---------------------------------------------------------------------------
 
+def _resolve_backend(backend, axis: str) -> tuple[str, int]:
+    """Validate a backend spec -> (``"single"`` | ``"mesh"``, shard count).
+
+    The single point of truth for what a backend argument may be
+    (:class:`Index` construction, :meth:`Index.load`,
+    :meth:`Index.reshard` all accept the same forms) — a mesh must carry
+    the index's data axis, anything else must be the literal ``"single"``.
+    """
+    if isinstance(backend, Mesh):
+        if axis not in backend.shape:
+            raise ValueError(
+                f"target mesh has no {axis!r} axis (axes: "
+                f"{tuple(backend.shape)}); pass axis= or a mesh with the "
+                f"index's data axis")
+        return "mesh", int(backend.shape[axis])
+    if isinstance(backend, str) and backend == "single":
+        return "single", 1
+    raise TypeError(
+        f"backend must be 'single' or a jax Mesh, got {backend!r}")
+
 class Index:
     """Stateful SIVF session handle; see module docstring for the contract.
 
@@ -497,16 +527,15 @@ class Index:
         self._use_tables = use_tables
         if pq_codebooks is not None:
             pq_codebooks = jnp.asarray(pq_codebooks, jnp.float32)
-        if isinstance(backend, str) and backend == "single":
-            self._backend_kind = "single"
+        self._backend_kind, _ = _resolve_backend(backend, axis)
+        if self._backend_kind == "single":
             self._mesh = None
             self._ops = _single_ops(cfg, impl, self._block_q, use_tables)
             if _state is None:
                 _state = init_state(cfg, jnp.asarray(centroids),
                                     pq_codebooks)
-        elif isinstance(backend, Mesh):
+        else:
             from repro.core import distributed as dist
-            self._backend_kind = "mesh"
             self._mesh = backend
             self._ops = _mesh_ops(cfg, backend, axis, impl, self._block_q,
                                   use_tables)
@@ -514,9 +543,6 @@ class Index:
                 _state = dist.init_sharded_state(
                     cfg, jnp.asarray(centroids), backend, axis,
                     pq_codebooks)
-        else:
-            raise TypeError(
-                f"backend must be 'single' or a jax Mesh, got {backend!r}")
         self._state = _state
         if _pq_trained is None:
             _pq_trained = cfg.pq is None or pq_codebooks is not None
@@ -799,6 +825,11 @@ class Index:
             "pq_trained": self._pq_trained,
             "backend": self._backend_kind,
             "n_shards": self.n_shards,
+            # self-describing shard routing: any loader (this class, or a
+            # future external tool) can re-route rows onto a different
+            # shard count knowing only the sidecar
+            "routing": {"rule": "mod", "n_shards": self.n_shards,
+                        "axis": self._axis},
             "axis": self._axis,
             "impl": self._impl,
             "block_q": self._block_q,
@@ -812,14 +843,25 @@ class Index:
 
     @classmethod
     def load(cls, path, backend=None, **overrides) -> "Index":
-        """Rebuild a handle from :meth:`save` output.
+        """Rebuild a handle from :meth:`save` output — onto *any* backend.
 
-        Single-device checkpoints load with no arguments. Sharded
-        checkpoints need the target ``backend=<Mesh>`` (same shard count —
-        elastic resharding of the slab pool is future work); keyword
-        ``overrides`` replace any saved handle option (impl, strict, ...).
+        Loading is **elastic**: a checkpoint saved on S shards loads onto
+        S' shards (grow, shrink, mesh->single, single->mesh). When the
+        target topology matches the checkpoint, leaves restore directly
+        onto their devices; otherwise the slab pools are flattened to the
+        canonical live-row table and re-routed by ``id % n_shards'``
+        (``core.distributed.reshard_state``) — searches return identical
+        ids and distances either way, and later inserts land on the owning
+        shard.
+
+        ``backend`` is a ``jax.sharding.Mesh`` or ``"single"``. Defaults:
+        a single-device checkpoint loads as ``"single"``; a sharded
+        checkpoint requires an explicit target (pass ``"single"`` to
+        collapse the shards onto one device). Keyword ``overrides``
+        replace any saved handle option (impl, strict, ...).
         """
         from repro.checkpoint.manager import CheckpointManager
+        from repro.core import distributed as dist
         mgr = CheckpointManager(path)
         meta = mgr.load_metadata(cls._META)
         cfg_d = dict(meta["cfg"])
@@ -832,19 +874,21 @@ class Index:
               "strict": meta["strict"], "min_bucket": meta["min_bucket"],
               "deferred": meta.get("deferred", False)}
         kw.update(overrides)
-        if meta["backend"] == "mesh":
-            if not isinstance(backend, Mesh):
+        src_kind = meta["backend"]
+        src_shards = int(meta["n_shards"])
+        # pre-routing checkpoints (PR 2-4) used the same implicit mod rule
+        rule = meta.get("routing", {}).get("rule", "mod")
+        if rule != "mod":
+            raise ValueError(
+                f"checkpoint uses unknown shard-routing rule {rule!r}; "
+                f"this build can only re-route 'mod' checkpoints")
+        if backend is None:
+            if src_kind == "mesh":
                 raise ValueError(
-                    "sharded checkpoint: pass the target mesh as backend=")
-            if backend.shape[kw["axis"]] != meta["n_shards"]:
-                raise ValueError(
-                    f"checkpoint has {meta['n_shards']} shards but mesh axis "
-                    f"{kw['axis']!r} has {backend.shape[kw['axis']]}")
-        else:
-            backend = "single" if backend is None else backend
-            if backend != "single":
-                raise ValueError("single-device checkpoint: backend must be "
-                                 "'single' (resharding unsupported)")
+                    "sharded checkpoint: pass backend= — the target mesh, "
+                    "or 'single' to collapse the shards onto one device")
+            backend = "single"
+        tgt_kind, n_to = _resolve_backend(backend, kw["axis"])
         step = mgr.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint steps under {path}")
@@ -852,29 +896,81 @@ class Index:
         # throwaway zero pool is ever allocated next to the restored one
         example = jax.eval_shape(lambda: init_state(
             cfg, jnp.zeros((cfg.n_lists, cfg.dim), cfg.dtype)))
-        shard = None
-        if meta["backend"] == "mesh":
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            n = meta["n_shards"]
+        if src_kind == "mesh":
             example = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct((n,) + x.shape, x.dtype),
-                example)
-            shard = NamedSharding(backend, P(kw["axis"]))
+                lambda x: jax.ShapeDtypeStruct((src_shards,) + x.shape,
+                                               x.dtype), example)
         leaves, treedef = jax.tree.flatten(example)
         # format-1 checkpoints predate the PQ planes; ``codes`` and
         # ``pq_codebooks`` are the LAST two registered data fields, so a
         # legacy manifest restores into the leaf prefix and the (zero-width,
         # since format 1 implies cfg.pq=None) planes are filled fresh
         legacy = int(meta.get("format", 1)) < 2
-        want = leaves[:-2] if legacy else leaves
-        out = list(mgr.restore(
-            step, want,
-            sharding_tree=None if shard is None else [shard] * len(want)))
-        if legacy:
-            fill = [jnp.zeros(x.shape, x.dtype) for x in leaves[-2:]]
-            if shard is not None:
-                fill = [jax.device_put(f, shard) for f in fill]
-            out += fill
-        state = jax.tree.unflatten(treedef, out)
+        if tgt_kind == src_kind and n_to == src_shards:
+            # topology match: restore leaves straight onto their devices
+            shard = None
+            if tgt_kind == "mesh":
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                shard = NamedSharding(backend, P(kw["axis"]))
+            want = leaves[:-2] if legacy else leaves
+            out = list(mgr.restore(
+                step, want,
+                sharding_tree=None if shard is None else [shard] * len(want)))
+            if legacy:
+                fill = [jnp.zeros(x.shape, x.dtype) for x in leaves[-2:]]
+                if shard is not None:
+                    fill = [jax.device_put(f, shard) for f in fill]
+                out += fill
+            state = jax.tree.unflatten(treedef, out)
+        else:
+            # elastic reshard: manifest-described host restore, pure
+            # re-route, then placement onto the target backend
+            out = mgr.restore_arrays(step)
+            if legacy:
+                out = out + [np.zeros(x.shape, x.dtype)
+                             for x in leaves[-2:]]
+            if len(out) != len(leaves):
+                raise ValueError(
+                    f"checkpoint stored {len(out)} leaves but the "
+                    f"{src_shards}-shard state needs {len(leaves)}")
+            host_state = jax.tree.unflatten(treedef, out)
+            state = dist.reshard_state(cfg, host_state, src_shards, n_to,
+                                       stack=tgt_kind == "mesh")
+            if tgt_kind == "mesh":
+                state = dist.place_sharded(state, backend, kw["axis"])
         return cls(cfg, None, backend=backend, _state=state,
                    _pq_trained=meta.get("pq_trained", True), **kw)
+
+    def reshard(self, backend="single", *, axis: str | None = None
+                ) -> "Index":
+        """Elastically remap this *live* handle onto a new backend in place.
+
+        ``backend`` is a ``jax.sharding.Mesh`` (any shard count) or
+        ``"single"``. Pending deferred reports are flushed first (their
+        counts reference the pre-reshard shard topology), then the slab
+        pools flatten to the canonical live-row table, re-route by
+        ``id % n_shards'`` and rebuild on the target — the same pure
+        ``core.distributed.reshard_state`` path :meth:`load` uses, so
+        search results are identical before and after and subsequent
+        mutations land on the owning shard. Returns ``self``.
+        """
+        from repro.core import distributed as dist
+        self.flush()
+        axis = self._axis if axis is None else axis
+        tgt_kind, n_to = _resolve_backend(backend, axis)
+        host = jax.tree.map(np.asarray, self._state)   # device -> host
+        state = dist.reshard_state(self.cfg, host, self.n_shards, n_to,
+                                   stack=tgt_kind == "mesh")
+        if tgt_kind == "mesh":
+            state = dist.place_sharded(state, backend, axis)
+            self._ops = _mesh_ops(self.cfg, backend, axis, self._impl,
+                                  self._block_q, self._use_tables)
+            self._mesh = backend
+        else:
+            self._ops = _single_ops(self.cfg, self._impl, self._block_q,
+                                    self._use_tables)
+            self._mesh = None
+        self._backend_kind = tgt_kind
+        self._axis = axis
+        self._state = state
+        return self

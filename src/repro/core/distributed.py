@@ -23,6 +23,16 @@ mesh axis:
     ``sivf.Index`` surfaces as ``MutationReport.shard_errors`` — eagerly
     or deferred, the accounting never has to guess which rows survived.
 
+  * **Elastic resharding** — :func:`reshard_state` remaps an index saved
+    on S shards onto S' shards (grow, shrink, mesh<->single) *without a
+    rebuild from raw data*: the per-shard slab pools flatten to one
+    canonical id-sorted table of live rows, rows re-route by the same
+    ``id % n_shards'`` rule ``sharded_insert`` uses (so post-reshard
+    inserts land on the owning shard), and each target shard's chains /
+    bitmaps / ATT / centroid replicas are rebuilt through the existing
+    ``init_state`` + insert path. Searches before vs. after resharding
+    return identical ids and distances (docs/architecture.md §Resharding).
+
 The ``sharded_*`` builders return the raw shard-mapped callables; they are
 the single code path behind both the legacy ``dist_*`` free functions and
 the ``sivf.Index`` mesh backend (``core/api.py``), which wraps them in jit
@@ -33,10 +43,17 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import index as ix
-from repro.core.state import SIVFConfig, SlabPoolState, init_state
+from repro.core import pq as pqmod
+from repro.core.state import (
+    SIVFConfig,
+    SlabPoolState,
+    host_live_mask,
+    init_state,
+)
 from repro.utils import shard_map_compat
 
 
@@ -155,6 +172,244 @@ def sharded_search(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
         return f(state, queries)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Elastic resharding (pure host-side; Index.load / Index.reshard wrap this)
+# ---------------------------------------------------------------------------
+
+def _leading_shards(state: SlabPoolState) -> int:
+    """Shard count of a state value: leading-axis length when stacked, 1
+    for a plain single-device state (``ids`` is [n_slabs, C] vs [S, n_slabs, C])."""
+    ids = np.asarray(state.ids)
+    return int(ids.shape[0]) if ids.ndim == 3 else 1
+
+
+def flatten_live_rows(cfg: SIVFConfig, state: SlabPoolState) -> dict:
+    """Flatten slab pools to the canonical host-side table of live rows.
+
+    Works on a single-device state or the stacked per-shard state (leaves
+    may be device arrays or the numpy leaves of a host-restored
+    checkpoint). Rows are **id-sorted**, which makes the table canonical:
+    two states hold the same logical index iff their tables are equal,
+    regardless of shard count, slab layout, or deletion history. This is
+    the exchange format of :func:`reshard_state` and the byte-accounting
+    basis of the ``reshard_sweep`` benchmark.
+
+    Returns a dict of numpy arrays over the N live rows:
+      ``ids``     [N] int32 external ids (ascending, globally unique);
+      ``lists``   [N] int32 owning IVF list (from the slab's ``owner``);
+      ``data``    [N, payload_dim] stored fp payloads (width 0 when PQ
+                  codes replace them);
+      ``codes``   [N, code_m] uint8 PQ codewords (width 0 without PQ);
+    plus the replicated leaves ``centroids`` [n_lists, D] and
+    ``pq_codebooks`` (shard 0's copy when stacked).
+    """
+    c = cfg.capacity
+    ids = np.asarray(state.ids).reshape(-1, c)                # [S*ns, C]
+    bitmap = np.asarray(state.bitmap).reshape(-1, cfg.words)
+    owner = np.asarray(state.owner).reshape(-1)               # [S*ns]
+    mask = host_live_mask(cfg, bitmap).reshape(-1)            # [S*ns*C]
+    idx = np.flatnonzero(mask)
+    slots = mask.shape[0]            # explicit row count: the payload /
+    #                                  code planes may be zero-width, where
+    #                                  a -1 reshape is ambiguous
+    live_ids = ids.reshape(-1)[idx]
+    live_lists = np.broadcast_to(owner[:, None], (owner.shape[0], c)
+                                 ).reshape(-1)[idx]
+    data = np.asarray(state.data).reshape(slots, cfg.payload_dim)[idx]
+    codes = np.asarray(state.codes).reshape(slots, cfg.code_m)[idx]
+    n_live = int(np.asarray(state.n_live).sum())
+    if len(live_ids) != n_live:
+        raise ValueError(
+            f"corrupt state: bitmap says {len(live_ids)} live rows but "
+            f"n_live says {n_live}")
+    order = np.argsort(live_ids, kind="stable")               # canonical
+    cents = np.asarray(state.centroids)
+    cb = np.asarray(state.pq_codebooks)
+    stacked = np.asarray(state.ids).ndim == 3
+    return {
+        "ids": live_ids[order].astype(np.int32),
+        "lists": live_lists[order].astype(np.int32),
+        "data": data[order],
+        "codes": codes[order],
+        "centroids": cents[0] if stacked else cents,
+        "pq_codebooks": cb[0] if stacked else cb,
+    }
+
+
+def _check_reshard_fit(cfg: SIVFConfig, ids: np.ndarray, lists: np.ndarray,
+                       n_to: int) -> None:
+    """Host-side feasibility: every target shard's rows must fit its pool.
+
+    Shrinking concentrates rows, so a state that fit S shards can overflow
+    the (per-shard, static) ``n_slabs`` pool or a list's ``max_chain``
+    bound on S' < S shards. Failing *before* any device work gives a
+    message that names the limit to raise, instead of a POOL_EXHAUSTED
+    error bit halfway through the rebuild.
+    """
+    shard = ids % n_to
+    key = shard.astype(np.int64) * cfg.n_lists + lists
+    per_list = np.bincount(key, minlength=n_to * cfg.n_lists
+                           ).reshape(n_to, cfg.n_lists)
+    chains = -(-per_list // cfg.capacity)                     # ceil div
+    slabs_needed = chains.sum(axis=1)
+    if (bad := np.flatnonzero(slabs_needed > cfg.n_slabs)).size:
+        s = int(bad[0])
+        raise ValueError(
+            f"reshard to {n_to} shards needs {int(slabs_needed[s])} slabs "
+            f"on shard {s} but cfg.n_slabs={cfg.n_slabs}; raise n_slabs or "
+            f"keep more shards")
+    if (bad := np.argwhere(chains > cfg.max_chain)).size:
+        s, li = (int(x) for x in bad[0])
+        raise ValueError(
+            f"reshard to {n_to} shards needs a {int(chains[s, li])}-slab "
+            f"chain for list {li} on shard {s} but cfg.max_chain="
+            f"{cfg.max_chain}; raise max_chain or keep more shards")
+
+
+def _build_shard(cfg: SIVFConfig, centroids: np.ndarray, cb: np.ndarray,
+                 vecs: np.ndarray, ids: np.ndarray, lists: np.ndarray,
+                 codes: np.ndarray | None) -> SlabPoolState:
+    """One target shard: fresh ``init_state`` + a single pre-routed insert.
+
+    The batch pads to a power-of-two bucket (floor 64) so a sweep over
+    shard counts compiles a bounded number of insert executables, same as
+    the session handle's bucketing. With PQ, the *stored* codes ride
+    along and are scattered as-is, so code planes survive byte-for-byte
+    by construction.
+    """
+    pq_cb = None if cfg.pq is None else jnp.asarray(cb)
+    st = init_state(cfg, jnp.asarray(centroids), pq_cb)
+    n = len(ids)
+    if n == 0:
+        return st
+    b = max(64, 1 << (n - 1).bit_length())
+    vp = np.zeros((b, cfg.dim), np.float32)
+    vp[:n] = vecs
+    ip = np.full((b,), -1, np.int32)
+    ip[:n] = ids
+    lp = np.zeros((b,), np.int32)
+    lp[:n] = lists
+    cp = None
+    if codes is not None:
+        cp = np.zeros((b, cfg.code_m), np.uint8)
+        cp[:n] = codes
+        cp = jnp.asarray(cp)
+    st = ix.insert(cfg, st, jnp.asarray(vp), jnp.asarray(ip),
+                   jnp.asarray(lp), cp)
+    if int(st.error):
+        raise ValueError(
+            f"reshard rebuild failed with error bits {int(st.error)} "
+            f"(n={n} rows; pool n_slabs={cfg.n_slabs} max_chain="
+            f"{cfg.max_chain})")                 # pragma: no cover - guarded
+    return st
+
+
+def reshard_state(cfg: SIVFConfig, state: SlabPoolState, n_from: int,
+                  n_to: int, stack: bool | None = None) -> SlabPoolState:
+    """Remap an S-shard index state onto S' shards. Pure; host-driven.
+
+    ``state`` is a single-device state (``n_from == 1``) or the stacked
+    per-shard state; leaves may live on device or host. The result is a
+    plain single-device state when ``n_to == 1``, else a stacked state on
+    the default device — :func:`place_sharded` places it onto a mesh.
+    ``stack=True`` forces the stacked form even for ``n_to == 1`` (a
+    one-shard *mesh* target still wants the leading shard axis).
+
+    Semantics (the resharding contract, docs/checkpoint-format.md):
+      * rows re-route by ``id % n_to`` — the same rule ``sharded_insert``
+        applies, so inserts after the reshard land on the owning shard;
+      * PQ codebooks and coarse centroids replicate to every target shard;
+      * the rebuilt index is search-identical: same live ids, same
+        distances — stored payloads AND stored PQ codes carry over
+        byte-for-byte by construction (the codes are re-scattered as-is,
+        never round-tripped through decode/encode);
+      * slab layout is NOT preserved — each target shard re-packs its rows
+        densely (a reshard is also a compaction), so only logical state
+        (the :func:`flatten_live_rows` table) round-trips.
+
+    Raises ``ValueError`` when the rows cannot fit ``n_to`` shards under
+    the static per-shard pool geometry (see :func:`_check_reshard_fit`).
+    """
+    if n_to < 1:
+        raise ValueError(f"n_to must be >= 1, got {n_to}")
+    actual = _leading_shards(state)
+    if n_from != actual:
+        raise ValueError(
+            f"state has {actual} shard(s) but n_from={n_from}")
+    rows = flatten_live_rows(cfg, state)
+    ids, lists = rows["ids"], rows["lists"]
+    _check_reshard_fit(cfg, ids, lists, n_to)
+    codes = rows["codes"] if cfg.pq is not None else None
+    if cfg.pq is not None and not cfg.pq.store_raw:
+        # codes are the only payload; the rebuild scatters them verbatim.
+        # Decoded codewords stand in for the raw vectors only where the
+        # insert needs *some* fp rows (the zero-width data plane ignores
+        # them; the cached norms they produce are unused by ADC scoring).
+        vecs = np.asarray(pqmod.decode(jnp.asarray(rows["pq_codebooks"]),
+                                       jnp.asarray(rows["codes"])))
+    else:
+        vecs = np.asarray(rows["data"], np.float32)
+    shard = ids % n_to
+    shards = []
+    for t in range(n_to):
+        sel = shard == t
+        shards.append(_build_shard(cfg, rows["centroids"],
+                                   rows["pq_codebooks"], vecs[sel],
+                                   ids[sel], lists[sel],
+                                   None if codes is None else codes[sel]))
+    if n_to == 1 and not stack:
+        return shards[0]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+
+
+def search_stacked(cfg: SIVFConfig, state: SlabPoolState, queries, k: int,
+                   nprobe: int, impl: str = "xla", block_q: int = 8
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Search a stacked per-shard state *without* a mesh (host-side merge).
+
+    Runs the ordinary single-device search on each shard's slice and
+    merges with the same rule ``sharded_search`` applies on device
+    (concatenate per-shard [Q, k] partials in shard order, stable-sort by
+    distance, keep k) — so results match a real mesh search exactly, ties
+    included. Intended for inspecting host-restored or freshly-resharded
+    stacked states; tests and ``reshard_sweep`` assert parity through it.
+    """
+    q = jnp.asarray(queries)
+    host = jax.tree.map(np.asarray, state)       # ONE device->host snapshot
+    if host.ids.ndim == 2:                       # plain single state
+        d, l = ix.search(cfg, jax.tree.map(jnp.asarray, host), q, k,
+                         nprobe, impl=impl, block_q=block_q)
+        return np.asarray(d), np.asarray(l)
+    ds, ls = [], []
+    for s in range(_leading_shards(host)):
+        sub = jax.tree.map(lambda x: jnp.asarray(x[s]), host)
+        d, l = ix.search(cfg, sub, q, k, nprobe, impl=impl, block_q=block_q)
+        ds.append(np.asarray(d))
+        ls.append(np.asarray(l))
+    dg, lg = np.concatenate(ds, axis=1), np.concatenate(ls, axis=1)
+    order = np.argsort(dg, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(dg, order, 1), np.take_along_axis(lg, order, 1)
+
+
+def place_sharded(state: SlabPoolState, mesh: Mesh, axis: str = "data"
+                  ) -> SlabPoolState:
+    """Place a stacked per-shard state onto a mesh (leading axis sharded).
+
+    Shard ``s`` of the stack lands on device ``s`` of the mesh axis, which
+    is the same order ``jax.lax.axis_index`` sees inside the shard-mapped
+    ops — so the ``id % n_shards`` ownership encoded in the stack matches
+    the routing the ops will apply.
+    """
+    n = mesh.shape[axis]
+    if _leading_shards(state) != n:
+        raise ValueError(
+            f"state has {_leading_shards(state)} shards but mesh axis "
+            f"{axis!r} has {n}")
+    sharding = NamedSharding(mesh, P(axis))
+    return jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), sharding),
+                        state)
 
 
 # ---------------------------------------------------------------------------

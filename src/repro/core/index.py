@@ -21,6 +21,12 @@ protocols (Algorithms 1, 2, 4) become *bulk-synchronous batched plans*:
             (the paper-faithful pointer walk over ``nxt`` and the
             beyond-paper dense list->slab gather) feed one scan->top-k
             dispatch; no backend materializes the [Q, T*C] candidates.
+            With ``cfg.pq`` set, every backend scores PQ-compressed slabs
+            by ADC instead (``scan_slabs_topk_pq`` /
+            kernels/sivf_scan/pq_fused.py): one per-query-batch table of
+            per-subspace partial distances feeds table-lookup sums over
+            the uint8 code plane, bit-exact between the XLA reference and
+            the fused Pallas kernel.
 
 All ops are jit-compiled with state donation: the returned state reuses the
 input buffers (XLA in-place), mirroring "in-place mutation in VRAM".
@@ -28,9 +34,11 @@ input buffers (XLA in-place), mirroring "in-place mutation in VRAM".
 This module is the *functional* surface (explicit cfg/state threading). The
 preferred client entry point is the stateful session handle
 ``sivf.Index`` (``core/api.py``), which owns the state, buckets ragged
-batches, and turns the sticky ``state.error`` bits into per-batch
-``MutationReport``s; these free functions remain supported and the handle
-delegates to the same kernels.
+batches, turns the sticky ``state.error`` bits into per-batch
+``MutationReport``s (eager, or deferred futures resolved in one packed
+transfer at ``Index.flush``), persists/reshards the state across device
+topologies, and delegates to the same kernels here. Design notes with the
+memory-layout and commit-pipeline diagrams: docs/architecture.md.
 """
 from __future__ import annotations
 
@@ -75,8 +83,14 @@ def _dedupe_keep_last(ext_ids: jax.Array, valid: jax.Array) -> jax.Array:
 
 
 def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
-                 ext_ids: jax.Array, lists: jax.Array) -> SlabPoolState:
+                 ext_ids: jax.Array, lists: jax.Array,
+                 codes: jax.Array | None = None) -> SlabPoolState:
     """All-or-nothing batched insert.
+
+    With ``cfg.pq`` set, ``codes`` ``[B, m]`` may carry pre-encoded
+    codewords (elastic resharding re-routes *stored* codes, so the code
+    planes survive byte-for-byte by construction instead of round-tripping
+    through decode/encode); omitted, the batch encodes on ingest.
 
     Overwrites keep the paper's delete-then-insert linearization, but the
     whole batch is *staged*: the overwrite-deletes run on a functional copy
@@ -170,7 +184,11 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
     # the staged and pristine values; an aborted batch discards the codes
     # with the rest of the staged scatter, so atomicity is untouched)
     if cfg.pq is not None:
-        new_codes = pqmod.encode(state.pq_codebooks, sv.astype(jnp.float32))
+        if codes is None:
+            new_codes = pqmod.encode(state.pq_codebooks,
+                                     sv.astype(jnp.float32))
+        else:
+            new_codes = codes[order].astype(jnp.uint8)   # same batch sort
 
     def apply(operand) -> SlabPoolState:
         staged, _ = operand                          # commit the staged batch
@@ -244,17 +262,19 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def insert(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
-           ext_ids: jax.Array, lists: jax.Array | None = None
-           ) -> SlabPoolState:
+           ext_ids: jax.Array, lists: jax.Array | None = None,
+           codes: jax.Array | None = None) -> SlabPoolState:
     """Batched ingest. ``vecs`` [B, D], ``ext_ids`` [B] (-1 rows = padding).
 
     ``lists`` may pre-route vectors (distributed ingestion reuses the
-    router's assignment); otherwise the coarse quantizer assigns.
+    router's assignment); otherwise the coarse quantizer assigns. With
+    ``cfg.pq``, ``codes`` may carry pre-encoded codewords (resharding);
+    otherwise the batch encodes on ingest.
     """
     if lists is None:
         lists = quantizer.assign(state.centroids, vecs.astype(cfg.dtype),
                                  cfg.metric)
-    return _insert_impl(cfg, state, vecs, ext_ids, lists)
+    return _insert_impl(cfg, state, vecs, ext_ids, lists, codes)
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core.pq import PQConfig
@@ -183,6 +184,21 @@ def init_state(cfg: SIVFConfig, centroids: jax.Array,
         codes=jnp.zeros((ns, c, cfg.code_m), jnp.uint8),
         pq_codebooks=cb,
     )
+
+
+def host_live_mask(cfg: SIVFConfig, bitmap) -> np.ndarray:
+    """Unpack validity bitmaps to a host-side bool mask, slot-ordered.
+
+    Accepts any ``[..., words]`` bitmap plane (single or stacked per-shard)
+    and returns ``[..., capacity]`` bool. This is the numpy analogue of
+    ``bitmap.unpack_batch`` for host-side state surgery — checkpoint
+    inspection and elastic resharding (``distributed.flatten_live_rows``)
+    walk the pool without touching a device.
+    """
+    words = np.asarray(bitmap).astype(np.uint32)
+    shifts = np.arange(bm.WORD_BITS, dtype=np.uint32)
+    bits = ((words[..., None] >> shifts) & np.uint32(1)) != 0
+    return bits.reshape(*words.shape[:-1], cfg.capacity)
 
 
 def memory_report(cfg: SIVFConfig) -> dict:

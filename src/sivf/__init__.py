@@ -23,6 +23,11 @@ from repro.core.api import (  # noqa: F401
     PendingReport,
     SearchResult,
 )
+from repro.core.distributed import (  # noqa: F401
+    flatten_live_rows,
+    reshard_state,
+    search_stacked,
+)
 from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
 from repro.core.pq import PQConfig, train_pq  # noqa: F401
 from repro.core.quantizer import train_kmeans  # noqa: F401
@@ -30,5 +35,6 @@ from repro.core.quantizer import train_kmeans  # noqa: F401
 __all__ = [
     "ErrorCode", "Index", "IndexProtocol", "MutationRejected",
     "MutationReport", "PendingReport", "PQConfig", "SearchResult",
-    "SIVFConfig", "init_state", "memory_report", "train_kmeans", "train_pq",
+    "SIVFConfig", "flatten_live_rows", "init_state", "memory_report",
+    "reshard_state", "search_stacked", "train_kmeans", "train_pq",
 ]

@@ -63,7 +63,7 @@ def test_structure_mismatch_rejected(tmp_path, rng):
     mgr = CheckpointManager(tmp_path)
     t = _tree(rng)
     mgr.save(1, t)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="structure mismatch"):
         mgr.restore(1, {"only": t["a"]})
 
 
