@@ -13,10 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 
 import sivf
-from repro import core
-from repro.baselines import ContiguousIVF, FlatIndex, HNSWLite, LSHIndex
 from benchmarks.common import (Row, build_sivf, dataset, exact_topk,
                                recall_at_k, timeit)
+from repro import core
+from repro.baselines import ContiguousIVF, FlatIndex, HNSWLite, LSHIndex
 
 D, NL, N = 64, 32, 20_000
 BATCH = 1_000
@@ -228,9 +228,9 @@ def fig9_recall_pareto():
     qs = dataset(D, 64, seed=13)
     true = exact_topk(vecs, qs, 10)
     for nprobe in (1, 4, 8, 16, NL):
-        t, (d, l) = timeit(core.search, cfg, state, jnp.asarray(qs), 10,
+        t, (d, lab) = timeit(core.search, cfg, state, jnp.asarray(qs), 10,
                            nprobe, warmup=1, iters=3)
-        rec = recall_at_k(np.asarray(l), true)
+        rec = recall_at_k(np.asarray(lab), true)
         rows.append(Row(f"fig9.sivf@nprobe={nprobe}", t,
                         f"recall@10={rec:.3f} qps={64 / t:.0f}"))
     assert "recall@10=1.000" in rows[-1].derived, "full-probe parity"
@@ -524,7 +524,7 @@ def tab2_mixed_workload():
         state = core.insert(cfg, state, newv, jnp.asarray(
             np.arange(next_id, next_id + 200) % cfg.n_max, jnp.int32))
         t0 = time.perf_counter()
-        d, l = core.search(cfg, state, qs, 10, 8)
+        d, lab = core.search(cfg, state, qs, 10, 8)
         jax.block_until_ready(d)
         lats.append(time.perf_counter() - t0)
         state = core.delete(cfg, state, jnp.asarray(

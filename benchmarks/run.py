@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV and writes
 experiments/bench_results.json. Run: PYTHONPATH=src python -m benchmarks.run
-[names ...] [--only fig1a,...] [--skip-dist] [--deferred]
+[names ...] [--only fig1a,...] [--skip-dist] [--deferred] [--strict]
 
 ``streaming_churn --deferred`` runs the eager AND deferred churn variants
 back-to-back and records p50/p99 latencies + jit compile counts to
@@ -10,18 +10,28 @@ back-to-back and records p50/p99 latencies + jit compile counts to
 (QPS, recall@10, measured slab temp bytes at Q=16/64/256) to
 ``BENCH_pq.json``; ``reshard_sweep`` records elastic-reshard wall-clock +
 bytes moved for 1->2->4 shards at 100k vectors (PQ on/off, search-parity
-asserted) to ``BENCH_reshard.json`` (the slow CI job's perf data points).
+asserted) to ``BENCH_reshard.json``; ``serve_churn`` records the
+open-loop mixed-workload SLO sweep (p50/p99/p999 search latency idle vs
+under ingest at 3 arrival rates + sustained mutation throughput) to
+``BENCH_serve.json`` (the slow CI job's perf data points —
+``scripts/check_bench.py`` gates them against committed baselines).
+
+Exceptions inside one benchmark print a ``<name>.ERROR`` row and the run
+continues, so a multi-artifact sweep survives a single failure;
+``--strict`` additionally exits non-zero at the end if *any* artifact
+errored (CI uses it so a typo'd registry name or a swallowed exception
+can't pass silently).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 import traceback
 from pathlib import Path
 
-from benchmarks import paper
-from benchmarks.common import Row
+from benchmarks import paper, serve_bench
 
 ARTIFACTS = [
     ("fig1a", paper.fig1a_physical_deletion_overhead),
@@ -77,6 +87,9 @@ def main() -> None:
     ap.add_argument("--deferred", action="store_true",
                     help="run streaming_churn in eager+deferred comparison "
                          "mode and write BENCH_streaming_churn.json")
+    ap.add_argument("--strict", action="store_true",
+                    help="still record every row, but exit non-zero if any "
+                         "artifact errored (CI regression safety)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set()
     only |= set(args.names)
@@ -99,6 +112,9 @@ def main() -> None:
     if only is None or "reshard_sweep" in only:
         run_summary_artifact("reshard_sweep", paper.reshard_sweep_summary,
                              "BENCH_reshard.json", results)
+    if only is None or "serve_churn" in only:
+        run_summary_artifact("serve_churn", serve_bench.serve_churn_summary,
+                             "BENCH_serve.json", results)
     for name, fn in artifacts:
         if only and name not in only:
             continue
@@ -138,11 +154,18 @@ def main() -> None:
             results["fig14"] = scale14
         except Exception as e:
             print(f"fig13.ERROR,0,{type(e).__name__}: {e}", flush=True)
+            results["fig13"] = {"error": traceback.format_exc()[-1500:]}
 
     out = Path("experiments/bench_results.json")
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(results, indent=1))
     print(f"# wrote {out}")
+    errored = sorted(name for name, v in results.items()
+                     if isinstance(v, dict) and "error" in v)
+    if errored:
+        print(f"# errored artifacts: {','.join(errored)}")
+        if args.strict:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

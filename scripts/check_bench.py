@@ -1,0 +1,206 @@
+"""Bench-regression gate: fresh ``BENCH_*.json`` vs committed baselines.
+
+The slow CI job regenerates every ``BENCH_*.json`` artifact from scratch;
+this script compares each against its committed baseline under
+``benchmarks/baselines/`` with *per-metric* tolerance bands and exits
+non-zero on any regression, printing a comparison table either way.
+
+Three band kinds (see ``METRICS``):
+
+  * ``ratio_max`` — new <= baseline * tol (latency-style: lower is
+    better; tolerances are generous because shared CI runners are noisy,
+    and the point is catching step-function regressions, not 10% drift);
+  * ``ratio_min`` — new >= baseline / tol (throughput-style: higher is
+    better);
+  * ``abs_min``   — new >= baseline - tol (bounded scores like recall@10,
+    where "no worse" is an absolute statement);
+  * ``exact_max`` — new <= baseline (counters that must never grow, like
+    jit executable counts — a compile-count regression is a bug, not
+    noise).
+
+A metric path missing from the *fresh* artifact fails (a renamed field
+must not silently drop out of the gate); a baseline file missing for a
+known artifact fails likewise, so the gate cannot no-op. Metrics listed
+as optional (path tuple ending in ``"?"``) are skipped only when absent
+from the *baseline* (old baseline formats stay comparable).
+
+Run: ``python scripts/check_bench.py [BENCH_foo.json ...]``
+(defaults to every artifact named in ``METRICS``, read from the repo
+root; ``--baseline-dir`` overrides the baseline location for tests).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BASELINE_DIR = REPO / "benchmarks" / "baselines"
+
+
+@dataclasses.dataclass(frozen=True)
+class Band:
+    """One gated metric: dotted ``path`` into the artifact JSON + band."""
+
+    path: str                   # e.g. "deferred.p99_us.add"
+    kind: str                   # ratio_max | ratio_min | abs_min | exact_max
+    tol: float = 1.0
+    optional: bool = False      # skip when absent from the BASELINE
+
+    def check(self, base: float, new: float) -> bool:
+        if self.kind == "ratio_max":
+            return new <= base * self.tol
+        if self.kind == "ratio_min":
+            return new >= base / self.tol
+        if self.kind == "abs_min":
+            return new >= base - self.tol
+        if self.kind == "exact_max":
+            return new <= base
+        raise ValueError(f"unknown band kind {self.kind!r}")
+
+    def describe(self) -> str:
+        return {"ratio_max": f"<= {self.tol}x",
+                "ratio_min": f">= 1/{self.tol}x",
+                "abs_min": f">= base-{self.tol}",
+                "exact_max": "<= base"}[self.kind]
+
+
+# Latency ratios are wide (shared-runner noise); structural counters are
+# exact; recall/compression are near-exact. p999/p99 on sub-second phases
+# routinely jitters 2-3x on CI runners — the gate is for order-of-
+# magnitude regressions (a lost fused kernel, a compile storm, a stalled
+# scheduler), which show up as >>4x.
+METRICS: dict[str, list[Band]] = {
+    "BENCH_streaming_churn.json": [
+        Band("eager.p50_us.add", "ratio_max", 4.0),
+        Band("eager.p50_us.search", "ratio_max", 4.0),
+        Band("deferred.p50_us.add", "ratio_max", 4.0),
+        Band("deferred.p99_us.add", "ratio_max", 4.0),
+        Band("deferred.p99_us.flush", "ratio_max", 6.0),
+        Band("eager.jit_compiles.add", "exact_max"),
+        Band("eager.jit_compiles.search", "exact_max"),
+        Band("deferred.jit_compiles.add", "exact_max"),
+        Band("deferred.jit_compiles.search", "exact_max"),
+    ],
+    "BENCH_pq.json": [
+        Band("recall_at_10", "abs_min", 0.02),
+        Band("reduction.16", "ratio_min", 1.1),
+        Band("reduction.256", "ratio_min", 1.1),
+        Band("qps.pq.64", "ratio_min", 4.0),
+        Band("bytes_per_vector.pq", "exact_max"),
+    ],
+    "BENCH_reshard.json": [
+        Band("variants.raw.steps.0.seconds", "ratio_max", 4.0),
+        Band("variants.pq.steps.0.seconds", "ratio_max", 4.0),
+        Band("variants.raw.steps.0.bytes_moved", "exact_max"),
+        Band("variants.pq.steps.0.bytes_moved", "exact_max"),
+    ],
+    "BENCH_serve.json": [
+        Band("scale_points.0.idle.p99_ms", "ratio_max", 4.0),
+        Band("scale_points.0.active.p99_ms", "ratio_max", 4.0),
+        Band("scale_points.2.active.p99_ms", "ratio_max", 4.0),
+        Band("scale_points.2.active.add_rows_per_s", "ratio_min", 4.0),
+        Band("max_p99_active_over_idle", "ratio_max", 2.5),
+        Band("jit.search_executables", "exact_max"),
+        Band("jit.add", "exact_max"),
+    ],
+}
+
+
+def lookup(doc, path: str):
+    """Resolve a dotted path through dicts and lists (int segments)."""
+    cur = doc
+    for seg in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(seg)]
+        elif isinstance(cur, dict):
+            if seg not in cur:
+                raise KeyError(path)
+            cur = cur[seg]
+        else:
+            raise KeyError(path)
+    if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+        raise TypeError(f"{path} is not numeric: {cur!r}")
+    return float(cur)
+
+
+def compare_artifact(name: str, fresh_doc: dict, base_doc: dict,
+                     bands: list[Band]) -> tuple[list[str], list[str]]:
+    """-> (table rows, failure messages) for one artifact."""
+    rows, failures = [], []
+    for band in bands:
+        try:
+            base = lookup(base_doc, band.path)
+        except (KeyError, IndexError, TypeError):
+            if band.optional:
+                rows.append(f"  {band.path:<42} (absent from baseline, "
+                            f"skipped)")
+                continue
+            failures.append(f"{name}: baseline is missing {band.path}")
+            continue
+        try:
+            new = lookup(fresh_doc, band.path)
+        except (KeyError, IndexError, TypeError):
+            failures.append(
+                f"{name}: fresh artifact is missing {band.path} "
+                f"(field renamed/dropped? update METRICS alongside)")
+            continue
+        ok = band.check(base, new)
+        verdict = "ok" if ok else "REGRESSION"
+        rows.append(f"  {band.path:<42} base={base:<12g} new={new:<12g} "
+                    f"{band.describe():<12} {verdict}")
+        if not ok:
+            failures.append(
+                f"{name}: {band.path} regressed — baseline {base:g}, "
+                f"fresh {new:g}, band {band.describe()}")
+    return rows, failures
+
+
+def check(files: list[Path], baseline_dir: Path,
+          metrics: dict[str, list[Band]] = METRICS) -> int:
+    failures: list[str] = []
+    for fresh in files:
+        name = fresh.name
+        bands = metrics.get(name)
+        print(f"{name}:")
+        if bands is None:
+            failures.append(f"{name}: no metric bands registered — add it "
+                            f"to METRICS in scripts/check_bench.py")
+            continue
+        if not fresh.exists():
+            failures.append(f"{name}: fresh artifact not found at {fresh}")
+            continue
+        base_path = baseline_dir / name
+        if not base_path.exists():
+            failures.append(f"{name}: no committed baseline at {base_path} "
+                            f"— commit one from a healthy run")
+            continue
+        rows, fails = compare_artifact(
+            name, json.loads(fresh.read_text()),
+            json.loads(base_path.read_text()), bands)
+        for r in rows:
+            print(r)
+        failures += fails
+    for f in failures:
+        print(f"FAIL {f}")
+    if not failures:
+        print(f"bench OK: {len(files)} artifact(s) within tolerance bands")
+    return 1 if failures else 0
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="fresh BENCH_*.json paths (default: every "
+                         "registered artifact, from the repo root)")
+    ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
+    args = ap.parse_args(argv)
+    files = [Path(f) for f in args.files] if args.files else \
+        [REPO / name for name in sorted(METRICS)]
+    return check(files, args.baseline_dir)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

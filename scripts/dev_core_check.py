@@ -1,7 +1,6 @@
 """Dev sanity check: SIVF core vs reference model."""
-import numpy as np
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import core
 
@@ -28,11 +27,11 @@ assert int(state.error) == 0
 # search exact (nprobe = all lists)
 Q, K = 8, 5
 qs = rng.normal(size=(Q, D)).astype(np.float32)
-d, l = core.search(cfg, state, jnp.asarray(qs), K, NL)
+d, lab = core.search(cfg, state, jnp.asarray(qs), K, NL)
 rd, rl = ref.search(qs, K, NL)
-print("jax labels:", np.asarray(l)[0], "ref labels:", rl[0])
+print("jax labels:", np.asarray(lab)[0], "ref labels:", rl[0])
 np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-assert (np.asarray(l) == rl).all(), "label mismatch"
+assert (np.asarray(lab) == rl).all(), "label mismatch"
 
 # pointer-walk path must agree with table path
 d2, l2 = core.search(cfg, state, jnp.asarray(qs), K, NL, use_tables=False)
@@ -43,7 +42,7 @@ d3, l3 = core.search(cfg, state, jnp.asarray(qs), K, NL,
                      impl="pallas_interpret")
 np.testing.assert_allclose(np.asarray(d3), np.asarray(d), rtol=1e-4,
                            atol=1e-4)
-assert (np.asarray(l3) == np.asarray(l)).all(), "fused kernel label mismatch"
+assert (np.asarray(l3) == np.asarray(lab)).all(), "fused kernel label mismatch"
 
 # delete half, re-check
 dels = np.arange(0, 4 * B, 2, dtype=np.int32)
@@ -51,25 +50,25 @@ state = core.delete(cfg, state, jnp.asarray(dels))
 ref.delete(dels)
 print("after delete:", core.stats(cfg, state), "ref n_live:", ref.n_live)
 assert int(state.n_live) == ref.n_live
-d, l = core.search(cfg, state, jnp.asarray(qs), K, NL)
+d, lab = core.search(cfg, state, jnp.asarray(qs), K, NL)
 rd, rl = ref.search(qs, K, NL)
 np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-assert (np.asarray(l) == rl).all()
+assert (np.asarray(lab) == rl).all()
 
 # overwrite semantics: re-insert id 1 with new payload
 nv = rng.normal(size=(1, D)).astype(np.float32)
 state = core.insert(cfg, state, jnp.asarray(nv), jnp.asarray([1], np.int32))
 ref.insert(nv, [1])
 assert int(state.n_live) == ref.n_live
-d, l = core.search(cfg, state, jnp.asarray(qs), K, NL)
+d, lab = core.search(cfg, state, jnp.asarray(qs), K, NL)
 rd, rl = ref.search(qs, K, NL)
 np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
 
 # nprobe < n_lists: subsets must match too
-d, l = core.search(cfg, state, jnp.asarray(qs), K, 2)
+d, lab = core.search(cfg, state, jnp.asarray(qs), K, 2)
 rd, rl = ref.search(qs, K, 2)
 np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-assert (np.asarray(l) == rl).all()
+assert (np.asarray(lab) == rl).all()
 
 # delete everything; index must be empty, all slabs recycled
 all_ids = np.arange(4 * B, dtype=np.int32)

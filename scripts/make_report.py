@@ -4,7 +4,6 @@ Usage: PYTHONPATH=src python scripts/make_report.py
 Prints markdown to stdout (pasted/regenerated into EXPERIMENTS.md).
 """
 import json
-import sys
 from pathlib import Path
 
 BASE = Path("experiments/baseline_paper_faithful.json")

@@ -24,7 +24,6 @@ import jax.numpy as jnp
 from repro.baselines import ProtocolEngine
 from repro.core import quantizer
 from repro.core.api import SearchResult
-from repro.utils import l2_sq
 
 
 @partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -127,9 +126,9 @@ class ContiguousIVF(ProtocolEngine):
         nprobe = self.centroids.shape[0] if nprobe is None \
             else min(int(nprobe), self.centroids.shape[0])
         qs = jnp.asarray(qs, jnp.float32)
-        d, l = _search(self.centroids, self.buf, self.ids, self.counts,
+        d, lab = _search(self.centroids, self.buf, self.ids, self.counts,
                        qs, k, nprobe, self.metric)
-        return SearchResult(distances=d, labels=l, k=k, nprobe=nprobe,
+        return SearchResult(distances=d, labels=lab, k=k, nprobe=nprobe,
                             padded_to=qs.shape[0])
 
     def stats(self) -> dict:

@@ -73,8 +73,8 @@ class FlatIndex(ProtocolEngine):
     def search(self, qs, k, nprobe=None):
         """Exact search; ``nprobe`` accepted for IndexProtocol, unused."""
         qs = jnp.asarray(qs, jnp.float32)
-        d, l = _search(self.buf, self.ids, self.cursor, qs, k, self.metric)
-        return SearchResult(distances=d, labels=l, k=k, nprobe=0,
+        d, lab = _search(self.buf, self.ids, self.cursor, qs, k, self.metric)
+        return SearchResult(distances=d, labels=lab, k=k, nprobe=0,
                             padded_to=qs.shape[0])
 
     @property

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 
 from repro.baselines import ProtocolEngine
 from repro.core.api import SearchResult
-from repro.utils import l2_sq
 
 
 def _codes(planes, vecs):
@@ -25,9 +24,9 @@ def _codes(planes, vecs):
 
 @partial(jax.jit, donate_argnums=(0, 1, 2))
 def _insert(bucket_vecs, bucket_ids, cursors, planes, vecs, ids):
-    l, nb, cap, d = bucket_vecs.shape
+    nl, nb, cap, d = bucket_vecs.shape
     codes = _codes(planes, vecs)                            # [B, L]
-    for li in range(l):                                     # L is small
+    for li in range(nl):                                     # L is small
         c = codes[:, li]
         order = jnp.argsort(c, stable=True)
         cs = c[order]
@@ -51,10 +50,10 @@ def _tombstone(bucket_ids, del_ids):
 
 @partial(jax.jit, static_argnames=("k", "metric"))
 def _search(bucket_vecs, bucket_ids, planes, qs, k, metric):
-    l, nb, cap, d = bucket_vecs.shape
+    nl, nb, cap, d = bucket_vecs.shape
     codes = _codes(planes, qs)                              # [Q, L]
-    xs = bucket_vecs[jnp.arange(l)[None, :], codes]         # [Q, L, cap, D]
-    xi = bucket_ids[jnp.arange(l)[None, :], codes]          # [Q, L, cap]
+    xs = bucket_vecs[jnp.arange(nl)[None, :], codes]         # [Q, L, cap, D]
+    xi = bucket_ids[jnp.arange(nl)[None, :], codes]          # [Q, L, cap]
     if metric == "ip":
         dist = -jnp.einsum("qd,qlcd->qlc", qs, xs)
     else:
@@ -100,9 +99,9 @@ class LSHIndex(ProtocolEngine):
     def search(self, qs, k, nprobe=None):
         """Hash-bucket search; ``nprobe`` accepted for IndexProtocol, unused."""
         qs = jnp.asarray(qs, jnp.float32)
-        d, l = _search(self.bucket_vecs, self.bucket_ids, self.planes,
+        d, lab = _search(self.bucket_vecs, self.bucket_ids, self.planes,
                        qs, k, self.metric)
-        return SearchResult(distances=d, labels=l, k=k, nprobe=0,
+        return SearchResult(distances=d, labels=lab, k=k, nprobe=0,
                             padded_to=qs.shape[0])
 
     @property

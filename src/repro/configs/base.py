@@ -8,7 +8,6 @@ CPU smoke-test variant of the same family.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.utils import ceil_div
 

@@ -44,6 +44,13 @@ Design points (ISSUE 2, atomicity + deferral reworked in ISSUE 3):
     int32 array crossing in one ``jax.device_get`` — never one sync per
     future. Eager and deferred modes run the *same* jitted executables —
     deferral adds zero compilations.
+  * **Serve-engine hooks** (ISSUE 6). :attr:`Index.epoch` counts
+    mutation batches *dispatched* (each is an atomic on-device commit,
+    so it is also the committed prefix a later search observes) and
+    :attr:`Index.pending_count` exposes the deferred-queue depth;
+    together with :meth:`flush` resolving futures oldest-first they are
+    the contract ``repro.serve.sivf_engine.ServeEngine`` builds its
+    coalescing scheduler and epoch-consistency guarantee on.
   * **Device-side padding.** Batches that arrive as ``jax.Array``s are
     padded to their bucket with ``jnp`` ops on the device; only host
     (numpy / list) inputs take the numpy padding path. Device-resident
@@ -521,6 +528,7 @@ class Index:
         self.deferred = bool(deferred)
         self._pending: list[tuple[PendingReport, str, dict, int,
                                   bool | None]] = []
+        self._epoch = 0
         self._axis = axis
         self._impl = impl
         self._block_q = int(block_q)
@@ -566,6 +574,24 @@ class Index:
     @property
     def n_live(self) -> int:
         return int(jnp.sum(self._state.n_live))
+
+    @property
+    def epoch(self) -> int:
+        """Mutation batches dispatched over this handle's lifetime.
+
+        Bumps on every ``add`` / ``remove`` *dispatch* (eager or
+        deferred) — device work executes in dispatch order and each
+        batch commits atomically, so a search dispatched at epoch ``e``
+        observes exactly the first ``e`` batches. The serve engine
+        (``repro.serve.sivf_engine``) stamps results with this value to
+        make search-during-ingest consistency checkable.
+        """
+        return self._epoch
+
+    @property
+    def pending_count(self) -> int:
+        """Deferred mutation batches awaiting :meth:`flush` (0 if eager)."""
+        return len(self._pending)
 
     def __len__(self) -> int:
         return self.n_live
@@ -708,7 +734,8 @@ class Index:
         return self._emit("remove", aux, bucket, strict)
 
     def _emit(self, op: str, aux: dict, bucket: int, strict: bool | None):
-        if self.deferred:
+        self._epoch += 1          # batch dispatched: the committed prefix
+        if self.deferred:         # a later search observes grows by one
             fut = PendingReport(self)
             self._pending.append((fut, op, aux, bucket, strict))
             return fut
@@ -805,9 +832,9 @@ class Index:
             else min(int(nprobe), self.cfg.n_lists)
         q = queries.shape[0]
         bucket = self._bucket(q)
-        d, l = self._ops.search(self._state, self._pad_rows(queries, bucket),
+        d, lab = self._ops.search(self._state, self._pad_rows(queries, bucket),
                                 int(k), nprobe)
-        return SearchResult(distances=d[:q], labels=l[:q], k=int(k),
+        return SearchResult(distances=d[:q], labels=lab[:q], k=int(k),
                             nprobe=nprobe, padded_to=bucket)
 
     # -- persistence --------------------------------------------------------

@@ -154,11 +154,11 @@ def sharded_search(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
             ) -> tuple[jax.Array, jax.Array]:
         def local(st, q):
             st = jax.tree.map(lambda x: x[0], st)
-            d, l = ix._search_impl(cfg, st, q, k, nprobe, use_tables, impl,
+            d, lab = ix._search_impl(cfg, st, q, k, nprobe, use_tables, impl,
                                    block_q)
             # gather fused [Q, k] partials from all shards (paper MPI_Gather)
             dg = jax.lax.all_gather(d, axis)                   # [S, Q, k]
-            lg = jax.lax.all_gather(l, axis)
+            lg = jax.lax.all_gather(lab, axis)
             s, qn, _ = dg.shape
             dg = jnp.moveaxis(dg, 0, 1).reshape(qn, s * k)
             lg = jnp.moveaxis(lg, 0, 1).reshape(qn, s * k)
@@ -379,15 +379,15 @@ def search_stacked(cfg: SIVFConfig, state: SlabPoolState, queries, k: int,
     q = jnp.asarray(queries)
     host = jax.tree.map(np.asarray, state)       # ONE device->host snapshot
     if host.ids.ndim == 2:                       # plain single state
-        d, l = ix.search(cfg, jax.tree.map(jnp.asarray, host), q, k,
+        d, lab = ix.search(cfg, jax.tree.map(jnp.asarray, host), q, k,
                          nprobe, impl=impl, block_q=block_q)
-        return np.asarray(d), np.asarray(l)
+        return np.asarray(d), np.asarray(lab)
     ds, ls = [], []
     for s in range(_leading_shards(host)):
         sub = jax.tree.map(lambda x: jnp.asarray(x[s]), host)
-        d, l = ix.search(cfg, sub, q, k, nprobe, impl=impl, block_q=block_q)
+        d, lab = ix.search(cfg, sub, q, k, nprobe, impl=impl, block_q=block_q)
         ds.append(np.asarray(d))
-        ls.append(np.asarray(l))
+        ls.append(np.asarray(lab))
     dg, lg = np.concatenate(ds, axis=1), np.concatenate(ls, axis=1)
     order = np.argsort(dg, axis=1, kind="stable")[:, :k]
     return np.take_along_axis(dg, order, 1), np.take_along_axis(lg, order, 1)

@@ -436,8 +436,8 @@ def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
 
     init = (jnp.full((qn, k), jnp.inf, jnp.float32),
             jnp.full((qn, k), -1, jnp.int32))
-    (d, l), _ = jax.lax.scan(step, init, table.T)
-    return d, l
+    (d, lab), _ = jax.lax.scan(step, init, table.T)
+    return d, lab
 
 
 def scan_slabs_topk_pq(cfg: SIVFConfig, state: SlabPoolState,
@@ -489,8 +489,8 @@ def scan_slabs_topk_pq(cfg: SIVFConfig, state: SlabPoolState,
 
     init = (jnp.full((qn, k), jnp.inf, jnp.float32),
             jnp.full((qn, k), -1, jnp.int32))
-    (d, l), _ = jax.lax.scan(step, init, table.T)
-    return d, l
+    (d, lab), _ = jax.lax.scan(step, init, table.T)
+    return d, lab
 
 
 SEARCH_IMPLS = ("xla", "pallas", "pallas_interpret")

@@ -37,8 +37,8 @@ class SIVFConfig:
     capacity: int = 128            # C: slots per slab (TPU lane width; paper uses 32)
     n_max: int = 1 << 20           # dense external-id space [0, n_max)
     metric: str = "l2"             # "l2" or "ip"
-    max_chain: int = 64            # bound on slabs walked per list (Alg. 3 traversal bound)
-    track_tables: bool = True      # beyond-paper: dense list->slab tables (DESIGN.md §2)
+    max_chain: int = 64            # slabs walked per list (Alg. 3 bound)
+    track_tables: bool = True      # dense list->slab tables (DESIGN.md §2)
     dtype: jnp.dtype = jnp.float32
     pq: PQConfig | None = None     # product-quantized slab payloads (core/pq.py)
 

@@ -60,8 +60,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
     @pl.when(ki == nk - 1)
     def _write():
-        l = l_ref[...]
-        o_ref[0] = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30),
+        denom = l_ref[...]
+        o_ref[0] = jnp.where(denom > 0, acc_ref[...] / jnp.maximum(denom, 1e-30),
                              0.0).astype(o_ref.dtype)
 
 

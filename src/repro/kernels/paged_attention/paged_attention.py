@@ -58,8 +58,8 @@ def _kernel(tables_ref, lengths_ref, starts_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(pi == maxp - 1)
     def _write():
-        l = l_ref[...]
-        o_ref[0] = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30),
+        denom = l_ref[...]
+        o_ref[0] = jnp.where(denom > 0, acc_ref[...] / jnp.maximum(denom, 1e-30),
                             0.0).astype(o_ref.dtype)
 
 

@@ -19,13 +19,13 @@ _NEG = -(2 ** 31) + 1  # python literal; jnp scalars would be captured consts
 
 
 def _kernel(dist_ref, lab_ref, outd_ref, outl_ref, *, k: int):
-    bq, l = dist_ref.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (bq, l), 1)
+    bq, nl = dist_ref.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, nl), 1)
 
     def body(j, cur):
         m = jnp.min(cur, axis=1, keepdims=True)                  # [bq, 1]
         # first index achieving the min (match lax.top_k tie-breaking)
-        ix = jnp.min(jnp.where(cur == m, col, l), axis=1, keepdims=True)
+        ix = jnp.min(jnp.where(cur == m, col, nl), axis=1, keepdims=True)
         oh = col == ix                                           # [bq, L]
         lab = jnp.max(jnp.where(oh, lab_ref[...], _NEG), axis=1)
         pl.store(outd_ref, (slice(None), pl.dslice(j, 1)), m)
@@ -39,7 +39,7 @@ def topk_pallas(dists: jax.Array, labels: jax.Array, k: int,
                 block_q: int = 8, interpret: bool = False
                 ) -> tuple[jax.Array, jax.Array]:
     """dists/labels [Q, L] -> smallest-k (dists [Q,k], labels [Q,k])."""
-    qn, l = dists.shape
+    qn, nl = dists.shape
     if qn % block_q != 0:
         block_q = 1
     grid = (qn // block_q,)
@@ -47,8 +47,8 @@ def topk_pallas(dists: jax.Array, labels: jax.Array, k: int,
         functools.partial(_kernel, k=k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_q, l), lambda i: (i, 0)),
-            pl.BlockSpec((block_q, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, nl), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, nl), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_q, k), lambda i: (i, 0)),

@@ -20,7 +20,6 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 from pathlib import Path
 
 import jax
@@ -34,9 +33,9 @@ from repro.launch.mesh import make_production_mesh, mesh_axes_dict
 from repro.models import model as M
 from repro.sharding import axes as AX
 from repro.sharding.rules import make_plan
-from repro.utils import set_mesh_compat
 from repro.train.train_step import (TrainConfig, init_train_state,
                                     make_train_step, state_specs)
+from repro.utils import set_mesh_compat
 
 
 def _to_dtype(tree, dtype):

@@ -13,7 +13,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ShapeConfig
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.sharding.axes import spec_for, strip
+from repro.sharding.axes import spec_for
 from repro.sharding.rules import ShardPlan
 
 

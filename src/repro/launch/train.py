@@ -22,7 +22,6 @@ from __future__ import annotations
 import argparse
 import signal
 import statistics
-import sys
 import time
 
 import jax
@@ -33,8 +32,8 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS
 from repro.data.pipeline import DataConfig, TokenStream
 from repro.models import model as M
-from repro.sharding.axes import strip, use_rules
-from repro.sharding.rules import make_plan, unpadded_plan
+from repro.sharding.axes import strip
+from repro.sharding.rules import unpadded_plan
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import (TrainConfig, init_train_state,
                                     make_train_step)

@@ -122,7 +122,7 @@ def _sdpa_chunked(q, k, v, qpos, kpos, causal: bool, scale: float,
         qi, qp = xs                                    # [b,qc,hkv,g,dh], [qc]
 
         def inner(carry, ys):
-            m, l, acc = carry
+            m, denom, acc = carry
             ki, vi, kp = ys                            # [b,kc,hkv,dh], [kc]
             sc = jnp.einsum("bqkgd,btkd->bkgqt", qi, ki,
                             preferred_element_type=jnp.float32) * scale
@@ -133,19 +133,19 @@ def _sdpa_chunked(q, k, v, qpos, kpos, causal: bool, scale: float,
             m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
             p = jnp.exp(sc - m_safe)
             alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
-            l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            denom = alpha * denom + jnp.sum(p, axis=-1, keepdims=True)
             acc = alpha * acc + jnp.einsum(
                 "bkgqt,btkd->bkgqd", p.astype(vi.dtype), vi,
                 preferred_element_type=jnp.float32)
-            return (m_new, l, acc), None
+            return (m_new, denom, acc), None
 
         init = (jnp.full((b, hkv, g, qc, 1), -jnp.inf, jnp.float32),
                 jnp.zeros((b, hkv, g, qc, 1), jnp.float32),
                 jnp.zeros((b, hkv, g, qc, dv), jnp.float32))
-        (m, l, acc), _ = jax.lax.scan(
+        (m, denom, acc), _ = jax.lax.scan(
             inner, init,
             (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), kpos_c))
-        o = acc / jnp.maximum(l, 1e-30)                # [b,hkv,g,qc,dv]
+        o = acc / jnp.maximum(denom, 1e-30)                # [b,hkv,g,qc,dv]
         return None, jnp.moveaxis(o, 3, 1)             # [b,qc,hkv,g,dv]
 
     _, out = jax.lax.scan(per_q, None, (jnp.moveaxis(qf, 1, 0), qpos_c))

@@ -13,9 +13,6 @@ the layer params; attention caches carry the "kv_seq" sharded axis
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -28,7 +25,7 @@ from repro.models.common import (
     apply_norm, embed_init, embed_lookup, lm_head, norm_init,
     sinusoid_positions,
 )
-from repro.sharding.axes import annot, constrain, strip
+from repro.sharding.axes import annot, constrain
 from repro.sharding.rules import ShardPlan
 
 

@@ -7,8 +7,6 @@ streaming lifecycle (ingest / search / evict) at the KV-cache level.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,147 @@
+"""Client-facing sessions and the typed request/future plumbing.
+
+A :class:`ClientSession` is a tenant-scoped handle onto a running
+``ServeEngine``: every call is a *non-blocking submit* that either
+enqueues a typed request and returns a :class:`ServeFuture`, or raises
+:class:`repro.serve.quota.Backpressure` immediately. Results carry the
+*epoch* (number of mutation batches the device had committed when the
+request was dispatched), which is what makes search-during-ingest
+results explainable: a search with ``epoch == e`` observed exactly the
+first ``e`` mutation batches — never a half-applied one (the PR 3
+atomic commit makes each batch all-or-nothing; the engine's single
+dispatch thread makes the prefix exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable
+
+import numpy as np
+
+from repro.core.api import MutationReport
+
+
+class ServeFuture:
+    """Engine-resolved future for one submitted request.
+
+    ``result()`` blocks until the scheduler resolves the request (or
+    raises the stored exception); ``done`` never blocks. ``on_done``
+    runs exactly once, after the value/error is stored but before
+    waiters wake — the engine uses it to release the tenant's in-flight
+    quota slot.
+    """
+
+    __slots__ = ("_event", "_value", "_error", "_on_done")
+
+    def __init__(self, on_done: "Callable[[ServeFuture], None] | None" = None):
+        self._event = threading.Event()
+        self._value = None
+        self._error: BaseException | None = None
+        self._on_done = on_done
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def _fire(self) -> None:
+        cb, self._on_done = self._on_done, None
+        if cb is not None:
+            cb(self)
+        self._event.set()
+
+    def set_result(self, value) -> None:
+        self._value = value
+        self._fire()
+
+    def set_exception(self, err: BaseException) -> None:
+        self._error = err
+        self._fire()
+
+    def result(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request unresolved after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    tenant: str
+    queries: np.ndarray        # [q, dim] float32 (host)
+    k: int
+    nprobe: int
+    future: ServeFuture
+    t_submit: float
+
+
+@dataclasses.dataclass
+class MutationRequest:
+    tenant: str
+    op: str                    # "add" | "remove"
+    vecs: np.ndarray | None    # [B, dim] float32 for add, None for remove
+    ids: np.ndarray            # [B] int32
+    future: ServeFuture
+    t_submit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSearchResult:
+    """Per-request slice of a coalesced search tile."""
+
+    distances: np.ndarray      # [q, k] f32 (inf pads)
+    labels: np.ndarray         # [q, k] int32 external ids (-1 pads)
+    k: int
+    nprobe: int
+    epoch: int                 # committed mutation-batch prefix observed
+    coalesced: int             # live queries in the shared tile
+    padded_to: int             # pow2 block_q bucket the tile padded to
+    queue_s: float             # submit -> dispatch
+    service_s: float           # dispatch -> device completion
+
+    def __iter__(self):
+        return iter((self.distances, self.labels))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMutationResult:
+    """Resolved deferred mutation: the index report plus its epoch."""
+
+    report: MutationReport
+    epoch: int                 # prefix length including this batch
+    queue_s: float             # submit -> flush resolution
+
+    @property
+    def ok(self) -> bool:
+        return self.report.ok
+
+
+class ClientSession:
+    """Tenant-scoped submit surface over a running engine.
+
+    Obtained from ``ServeEngine.session(tenant)``; safe to share across
+    client threads (all state lives in the engine, guarded by its lock).
+    """
+
+    def __init__(self, engine, tenant: str):
+        self._engine = engine
+        self.tenant = tenant
+
+    def search(self, queries, k: int | None = None,
+               nprobe: int | None = None) -> ServeFuture:
+        """Submit a search; resolves to :class:`ServeSearchResult`."""
+        return self._engine.submit_search(self.tenant, queries, k=k,
+                                          nprobe=nprobe)
+
+    def add(self, vecs, ids) -> ServeFuture:
+        """Submit an ingest batch; resolves to :class:`ServeMutationResult`."""
+        return self._engine.submit_add(self.tenant, vecs, ids)
+
+    def remove(self, ids) -> ServeFuture:
+        """Submit an eviction batch; resolves to
+        :class:`ServeMutationResult`."""
+        return self._engine.submit_remove(self.tenant, ids)
+
+    def __repr__(self) -> str:
+        return f"ClientSession(tenant={self.tenant!r})"

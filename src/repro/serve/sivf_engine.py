@@ -1,0 +1,457 @@
+"""Streaming serve engine: search-during-ingest front door for ``sivf.Index``.
+
+The paper's headline claim is that SIVF keeps serving millisecond searches
+*while* mutations stream in. Until now every consumer drove the index
+synchronously from one thread; this engine is the concurrent front door:
+
+    index = sivf.Index(cfg, centroids, deferred=True)
+    with ServeEngine(index) as eng:
+        writer = eng.session("ingest")
+        reader = eng.session("app")
+        writer.add(vecs, ids)                       # non-blocking submit
+        res = reader.search(qs, k=10).result()      # ServeSearchResult
+
+Architecture (cribbed from the seed LLM engine's admit/step split — one
+scheduler owns the device, clients only touch queues and futures):
+
+  * **One dispatch thread.** Client threads validate + enqueue under the
+    engine lock; a single scheduler thread drains the queue and is the
+    only thread that touches the index. JAX device work executes in
+    dispatch order, so the scheduler's ordering decisions *are* the
+    consistency story.
+  * **Coalesced query batching.** Queued searches sharing ``(k, nprobe)``
+    concatenate into one tile (capped at ``max_coalesce`` rows) and ride
+    one fused-kernel call; ``Index.search`` pads the tile to the PR 2
+    power-of-two query buckets, so executable counts stay bounded by
+    ``#buckets x #(k, nprobe) groups`` — :meth:`assert_bounded_compiles`
+    checks the observed jit cache against that bound.
+  * **Epoch-consistent mutation interleaving.** Mutations are admitted
+    through the ``deferred=True`` pipeline (fire-and-forget submits, one
+    packed sync per flush). Each dispatched batch bumps ``Index.epoch``;
+    a search dispatched at epoch ``e`` observes exactly the first ``e``
+    batches — never a half-applied one, because each batch commits
+    atomically on device (PR 3) and the scheduler serializes dispatch.
+    Searches dispatch *before* the mutations drained in the same cycle,
+    so queries never stall behind ingest.
+  * **Typed backpressure.** Per-tenant quotas (in-flight search cap,
+    mutation-rate token bucket) and the global queue bound reject at
+    submit time with :class:`repro.serve.quota.Backpressure` — the queue
+    cannot grow without bound.
+
+``close()`` (or context exit) drains: queued requests are processed, the
+deferred queue is flushed, every future resolves. See docs/serving.md.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+import jax
+import numpy as np
+
+from repro.core.api import Index
+from repro.serve.quota import (
+    Backpressure,
+    BackpressureKind,
+    TenantQuota,
+    TenantState,
+)
+from repro.serve.session import (
+    ClientSession,
+    MutationRequest,
+    SearchRequest,
+    ServeFuture,
+    ServeMutationResult,
+    ServeSearchResult,
+)
+
+
+class ServeEngine:
+    """Concurrent serve front door over a ``deferred=True`` ``sivf.Index``.
+
+    Parameters
+    ----------
+    index:        the :class:`sivf.Index` to serve. Must be constructed
+                  with ``deferred=True`` (the engine sequences flushes)
+                  and ``strict=False`` (admission errors surface on the
+                  per-request :class:`ServeMutationResult`, never as a
+                  mid-flush raise).
+    default_k:    ``k`` used when a search request does not name one.
+    default_nprobe: likewise for ``nprobe`` (``None`` probes every list).
+    quota:        engine-wide default :class:`TenantQuota`.
+    quotas:       per-tenant overrides, ``{tenant: TenantQuota}``.
+    max_queue:    global bound on queued requests; beyond it submits are
+                  rejected with ``QUEUE_FULL``.
+    max_coalesce: cap on live query rows coalesced into one search tile
+                  (the tile then pads to the next pow2 bucket).
+    flush_every:  flush the deferred mutation queue once this many
+                  batches are pending (the queue also flushes whenever
+                  the engine goes idle, and at drain).
+    clock:        injectable monotonic clock (tests drive quota refill
+                  deterministically).
+    """
+
+    def __init__(self, index: Index, *, default_k: int = 10,
+                 default_nprobe: int | None = None,
+                 quota: TenantQuota | None = None,
+                 quotas: "dict[str, TenantQuota] | None" = None,
+                 max_queue: int = 1024, max_coalesce: int = 256,
+                 flush_every: int = 8, clock=time.monotonic):
+        if not isinstance(index, Index):
+            raise TypeError(f"index must be a sivf.Index, got {index!r}")
+        if not index.deferred:
+            raise ValueError(
+                "ServeEngine requires Index(deferred=True): the engine "
+                "sequences flushes, eager per-batch syncs would stall the "
+                "dispatch thread")
+        if index.strict:
+            raise ValueError(
+                "ServeEngine requires strict=False: admission errors are "
+                "reported on each ServeMutationResult, a strict flush "
+                "raise would tear down the whole queue")
+        if max_coalesce < 1:
+            raise ValueError("max_coalesce must be >= 1")
+        self._index = index
+        self._default_k = int(default_k)
+        self._default_nprobe = default_nprobe
+        self._default_quota = quota or TenantQuota()
+        self._quota_overrides = dict(quotas or {})
+        self._max_queue = int(max_queue)
+        self._max_coalesce = int(max_coalesce)
+        self._flush_every = int(flush_every)
+        self._clock = clock
+
+        self._cv = threading.Condition()
+        self._queue: deque = deque()
+        self._tenants: dict[str, TenantState] = {}
+        self._closing = False
+        self._closed = False
+        self._gate = threading.Event()        # cleared = scheduler paused
+        self._gate.set()
+        # scheduler-thread-only state
+        self._mut_inflight: deque = deque()   # (req, PendingReport, epoch)
+        self._kn_groups: set = set()
+        self._max_tile = 0
+        self._max_mut_rows = 0
+        self._n_searches = 0
+        self._n_tiles = 0
+        self._n_mutations = 0
+        self._coalesce_sizes: list[int] = []
+        if index.pending_count:               # engine owns the queue from here
+            index.flush()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="sivf-serve-engine")
+        self._thread.start()
+
+    # -- client surface ------------------------------------------------------
+
+    def session(self, tenant: str = "default") -> ClientSession:
+        """A tenant-scoped submit handle (cheap; any number per tenant)."""
+        return ClientSession(self, tenant)
+
+    @property
+    def index(self) -> Index:
+        return self._index
+
+    @property
+    def epoch(self) -> int:
+        """Committed mutation-batch prefix length (``Index.epoch``)."""
+        return self._index.epoch
+
+    def _tenant_state(self, tenant: str) -> TenantState:
+        st = self._tenants.get(tenant)
+        if st is None:
+            st = TenantState(
+                self._quota_overrides.get(tenant, self._default_quota),
+                clock=self._clock)
+            self._tenants[tenant] = st
+        return st
+
+    def _check_open_and_capacity(self, st: TenantState, tenant: str) -> None:
+        if self._closing:
+            raise Backpressure(BackpressureKind.ENGINE_CLOSED, tenant,
+                               "engine is closed")
+        if len(self._queue) >= self._max_queue:
+            st.reject(BackpressureKind.QUEUE_FULL, tenant,
+                      f"engine queue at max_queue={self._max_queue}")
+
+    def submit_search(self, tenant: str, queries, *, k: int | None = None,
+                      nprobe: int | None = None) -> ServeFuture:
+        """Validate + enqueue a search; returns a future, never blocks."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim == 1:
+            q = q[None]
+        if q.ndim != 2 or q.shape[1] != self._index.cfg.dim:
+            raise ValueError(
+                f"queries {q.shape} != [q, dim={self._index.cfg.dim}]")
+        k = self._default_k if k is None else int(k)
+        nprobe = self._default_nprobe if nprobe is None else nprobe
+        n_lists = self._index.cfg.n_lists
+        nprobe = n_lists if nprobe is None else min(int(nprobe), n_lists)
+        with self._cv:
+            st = self._tenant_state(tenant)
+            self._check_open_and_capacity(st, tenant)
+            st.admit_search(tenant)
+            fut = ServeFuture(on_done=lambda _f, s=st: self._release(s))
+            self._queue.append(SearchRequest(
+                tenant=tenant, queries=q, k=k, nprobe=nprobe, future=fut,
+                t_submit=self._clock()))
+            self._cv.notify()
+        return fut
+
+    def _release(self, st: TenantState) -> None:
+        with self._cv:
+            st.release_search()
+
+    def _submit_mutation(self, tenant: str, op: str, vecs, ids
+                         ) -> ServeFuture:
+        ids_a = np.asarray(ids, np.int32).reshape(-1)
+        vecs_a = None
+        if op == "add":
+            vecs_a = np.asarray(vecs, np.float32)
+            if vecs_a.ndim != 2 or vecs_a.shape[1] != self._index.cfg.dim:
+                raise ValueError(
+                    f"vecs {vecs_a.shape} != [B, dim={self._index.cfg.dim}]")
+            if vecs_a.shape[0] != ids_a.shape[0]:
+                raise ValueError(
+                    f"vecs {vecs_a.shape} / ids {ids_a.shape} mismatch")
+        with self._cv:
+            st = self._tenant_state(tenant)
+            self._check_open_and_capacity(st, tenant)
+            st.admit_mutation(tenant, int(ids_a.shape[0]))
+            fut = ServeFuture()
+            self._queue.append(MutationRequest(
+                tenant=tenant, op=op, vecs=vecs_a, ids=ids_a, future=fut,
+                t_submit=self._clock()))
+            self._cv.notify()
+        return fut
+
+    def submit_add(self, tenant: str, vecs, ids) -> ServeFuture:
+        """Enqueue an ingest batch through the deferred pipeline."""
+        return self._submit_mutation(tenant, "add", vecs, ids)
+
+    def submit_remove(self, tenant: str, ids) -> ServeFuture:
+        """Enqueue an eviction batch through the deferred pipeline."""
+        return self._submit_mutation(tenant, "remove", None, ids)
+
+    # -- scheduler -----------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    if self._closing and not self._queue \
+                            and not self._mut_inflight:
+                        return
+                    if self._gate.is_set() and (
+                            self._queue or self._closing
+                            or self._mut_inflight):
+                        break
+                    self._cv.wait(timeout=0.1)
+                batch = list(self._queue)
+                self._queue.clear()
+            searches = [r for r in batch if isinstance(r, SearchRequest)]
+            muts = [r for r in batch if isinstance(r, MutationRequest)]
+            dispatched = self._dispatch_searches(searches)
+            self._dispatch_mutations(muts)
+            self._maybe_flush()
+            self._resolve_searches(dispatched)
+
+    def _dispatch_searches(self, searches: list) -> list:
+        """Coalesce by (k, nprobe), dispatch each tile async, at the
+        *current* committed epoch — before this cycle's mutations."""
+        groups: dict = {}
+        for r in searches:
+            groups.setdefault((r.k, r.nprobe), []).append(r)
+        dispatched = []
+        epoch = self._index.epoch
+        for (k, nprobe), reqs in sorted(groups.items()):
+            chunk: list = []
+            rows = 0
+            for r in reqs + [None]:                # None terminates
+                nq = 0 if r is None else r.queries.shape[0]
+                if chunk and (r is None or rows + nq > self._max_coalesce):
+                    self._dispatch_tile(chunk, k, nprobe, epoch, dispatched)
+                    chunk, rows = [], 0
+                if r is not None:
+                    chunk.append(r)
+                    rows += nq
+        return dispatched
+
+    def _dispatch_tile(self, chunk: list, k: int, nprobe: int, epoch: int,
+                       dispatched: list) -> None:
+        qmat = chunk[0].queries if len(chunk) == 1 else \
+            np.concatenate([r.queries for r in chunk])
+        t0 = self._clock()
+        try:
+            res = self._index.search(qmat, k, nprobe)   # async dispatch
+        except Exception as e:
+            for r in chunk:
+                r.future.set_exception(e)
+            return
+        self._n_tiles += 1
+        self._n_searches += len(chunk)
+        self._coalesce_sizes.append(int(qmat.shape[0]))
+        self._max_tile = max(self._max_tile, res.padded_to)
+        self._kn_groups.add((k, res.nprobe))
+        dispatched.append((chunk, res, epoch, t0))
+
+    def _dispatch_mutations(self, muts: list) -> None:
+        for r in muts:
+            try:
+                if r.op == "add":
+                    pending = self._index.add(r.vecs, r.ids)
+                else:
+                    pending = self._index.remove(r.ids)
+            except Exception as e:
+                r.future.set_exception(e)
+                continue
+            self._n_mutations += 1
+            self._max_mut_rows = max(self._max_mut_rows,
+                                     int(r.ids.shape[0]))
+            self._mut_inflight.append((r, pending, self._index.epoch))
+
+    def _maybe_flush(self) -> None:
+        """Flush when the deferred queue is deep, the engine is idle, or
+        a drain is in progress — one packed sync resolves every batch."""
+        if not self._mut_inflight:
+            return
+        if self._index.pending_count < self._flush_every \
+                and not self._closing:
+            with self._cv:
+                if self._queue:        # more work queued: keep deferring
+                    return
+        try:
+            self._index.flush()
+        except Exception as e:
+            while self._mut_inflight:
+                req, _, _ = self._mut_inflight.popleft()
+                req.future.set_exception(e)
+            return
+        now = self._clock()
+        while self._mut_inflight:
+            req, pending, epoch = self._mut_inflight.popleft()
+            req.future.set_result(ServeMutationResult(
+                report=pending.result(), epoch=epoch,
+                queue_s=now - req.t_submit))
+
+    def _resolve_searches(self, dispatched: list) -> None:
+        for chunk, res, epoch, t0 in dispatched:
+            try:
+                jax.block_until_ready(res.distances)
+                d = np.asarray(res.distances)
+                labels = np.asarray(res.labels)
+            except Exception as e:
+                for r in chunk:
+                    r.future.set_exception(e)
+                continue
+            t1 = self._clock()
+            total = sum(r.queries.shape[0] for r in chunk)
+            off = 0
+            for r in chunk:
+                nq = r.queries.shape[0]
+                r.future.set_result(ServeSearchResult(
+                    distances=d[off:off + nq], labels=labels[off:off + nq],
+                    k=res.k, nprobe=res.nprobe, epoch=epoch,
+                    coalesced=total, padded_to=res.padded_to,
+                    queue_s=t0 - r.t_submit, service_s=t1 - t0))
+                off += nq
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def pause(self) -> None:
+        """Hold the scheduler after its current cycle: submits keep
+        queueing (and hitting quota/queue bounds) but nothing dispatches
+        until :meth:`resume`. Admission-control behavior under a stalled
+        device becomes deterministic — that is what the backpressure
+        tests (and a maintenance window) need."""
+        self._gate.clear()
+
+    def resume(self) -> None:
+        with self._cv:
+            self._gate.set()
+            self._cv.notify_all()
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the engine. ``drain=True`` (default) processes every queued
+        request and flushes the deferred queue before returning — no
+        future is left unresolved. ``drain=False`` fails queued requests
+        with ``ENGINE_CLOSED`` (already-dispatched work still resolves)."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closing = True
+            dropped = []
+            if not drain:
+                dropped = list(self._queue)
+                self._queue.clear()
+            self._gate.set()                  # a paused engine still drains
+            self._cv.notify_all()
+        for r in dropped:
+            r.future.set_exception(Backpressure(
+                BackpressureKind.ENGINE_CLOSED, r.tenant,
+                "engine closed before dispatch"))
+        self._thread.join(timeout=120)
+        if self._thread.is_alive():            # pragma: no cover - defensive
+            raise RuntimeError("serve scheduler failed to drain")
+        if self._index.pending_count:          # pragma: no cover - defensive
+            self._index.flush()
+        self._closed = True
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close(drain=exc_type is None)
+        return False
+
+    # -- introspection -------------------------------------------------------
+
+    def compile_bound(self) -> int:
+        """Upper bound on search executables for the traffic served so far:
+        ``#pow2 query buckets up to the largest tile x #(k, nprobe)``."""
+        max_tile = max(self._max_tile, self._index.min_bucket)
+        buckets = len(self._index.bucket_shapes(max_tile))
+        return buckets * max(1, len(self._kn_groups))
+
+    def assert_bounded_compiles(self) -> tuple[int, int]:
+        """Assert observed search executables <= :meth:`compile_bound`;
+        returns ``(observed, bound)``. Shared jit caches mean handles with
+        an equal (cfg, backend, impl, ...) tuple pool executables — use a
+        fresh ``SIVFConfig`` to measure an engine in isolation."""
+        observed = self._index.compile_stats()["search"]
+        bound = self.compile_bound()
+        if observed > bound:
+            raise AssertionError(
+                f"search executables {observed} exceed the coalescing bound "
+                f"{bound} ({len(self._kn_groups)} (k, nprobe) groups, max "
+                f"tile {self._max_tile})")
+        return observed, bound
+
+    def stats(self) -> dict:
+        """Serve-side counters + the index's own compile stats."""
+        with self._cv:
+            rejections = {
+                tenant: {kind.value: n for kind, n in st.rejections.items()
+                         if n}
+                for tenant, st in self._tenants.items()}
+            inflight = {tenant: st.inflight_searches
+                        for tenant, st in self._tenants.items()}
+            queued = len(self._queue)
+        sizes = self._coalesce_sizes
+        return {
+            "epoch": self.epoch,
+            "queued": queued,
+            "searches": self._n_searches,
+            "search_tiles": self._n_tiles,
+            "coalesce_mean": round(float(np.mean(sizes)), 2) if sizes else 0,
+            "coalesce_max": max(sizes, default=0),
+            "mutations": self._n_mutations,
+            "pending_mutations": self._index.pending_count,
+            "inflight_searches": inflight,
+            "rejections": rejections,
+            "kn_groups": sorted(self._kn_groups),
+            "compiles": self._index.compile_stats(),
+            "compile_bound": self.compile_bound(),
+        }

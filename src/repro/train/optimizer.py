@@ -8,7 +8,6 @@ dp-fold; gathered transparently by GSPMD at update time).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

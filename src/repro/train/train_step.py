@@ -8,7 +8,6 @@ serves the CPU smoke tests and the 512-chip dry-run.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

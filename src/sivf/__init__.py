@@ -28,13 +28,26 @@ from repro.core.distributed import (  # noqa: F401
     reshard_state,
     search_stacked,
 )
-from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
 from repro.core.pq import PQConfig, train_pq  # noqa: F401
 from repro.core.quantizer import train_kmeans  # noqa: F401
+from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
+from repro.serve.quota import (  # noqa: F401
+    Backpressure,
+    BackpressureKind,
+    TenantQuota,
+)
+from repro.serve.session import (  # noqa: F401
+    ClientSession,
+    ServeMutationResult,
+    ServeSearchResult,
+)
+from repro.serve.sivf_engine import ServeEngine  # noqa: F401
 
 __all__ = [
-    "ErrorCode", "Index", "IndexProtocol", "MutationRejected",
-    "MutationReport", "PendingReport", "PQConfig", "SearchResult",
-    "SIVFConfig", "flatten_live_rows", "init_state", "memory_report",
+    "Backpressure", "BackpressureKind", "ClientSession", "ErrorCode",
+    "Index", "IndexProtocol", "MutationRejected", "MutationReport",
+    "PendingReport", "PQConfig", "SearchResult", "ServeEngine",
+    "ServeMutationResult", "ServeSearchResult", "SIVFConfig",
+    "TenantQuota", "flatten_live_rows", "init_state", "memory_report",
     "reshard_state", "search_stacked", "train_kmeans", "train_pq",
 ]

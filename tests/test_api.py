@@ -35,10 +35,10 @@ def make(rng, *, n_slabs=64, capacity=32, n_max=4096, max_chain=16,
 
 def check_search(idx, ref, rng, k=5, nprobe=NL, q=6):
     qs = rng.normal(size=(q, D)).astype(np.float32)
-    d, l = idx.search(qs, k, nprobe)
+    d, lab = idx.search(qs, k, nprobe)
     rd, rl = ref.search(qs, k, nprobe)
     np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-    assert (np.asarray(l) == rl).all()
+    assert (np.asarray(lab) == rl).all()
 
 
 # ---------------------------------------------------------------------------
@@ -212,7 +212,7 @@ def test_ragged_batches_bounded_compiles(rng):
         ref.insert(vecs, ids)
         next_id += s
     for s in sizes:
-        d, l = idx.search(rng.normal(size=(s, D)).astype(np.float32), 4, NL)
+        d, lab = idx.search(rng.normal(size=(s, D)).astype(np.float32), 4, NL)
         assert d.shape == (s, 4)
     for s in (2, 6, 11, 18, 27, 34, 50, 62):
         ids = rng.integers(0, next_id, s).astype(np.int32)
@@ -367,7 +367,7 @@ def test_index_and_baselines_satisfy_protocol(rng):
         rep = eng.add(vecs, np.arange(20))
         assert rep.accepted == 20, type(eng)
         res = eng.search(vecs[:3], 4)
-        d, l = res                                   # tuple-compat unpack
+        d, lab = res                                   # tuple-compat unpack
         assert np.asarray(d).shape == (3, 4)
         assert eng.remove(np.arange(10)).accepted == 10
         assert eng.stats()["n_live"] == eng.n_live == 10

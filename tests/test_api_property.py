@@ -61,10 +61,10 @@ def _oracle_add(ref, vecs, ids, rep, cfg):
 
 def _check_search(idx, ref, rng, q=3, k=4):
     qs = rng.normal(size=(q, D)).astype(np.float32)
-    d, l = idx.search(qs, k, NL)
+    d, lab = idx.search(qs, k, NL)
     rd, rl = ref.search(qs, k, NL)
     np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-    assert (np.asarray(l) == rl).all()
+    assert (np.asarray(lab) == rl).all()
 
 
 ops_strategy = st.lists(
@@ -85,8 +85,8 @@ def _assert_failed_batch_atomic(idx, before):
         return
     pids = np.fromiter(before.keys(), np.int32)
     qs = np.stack([before[int(i)] for i in pids])
-    d, l = idx.search(qs, 1, NL)
-    assert (np.asarray(l)[:, 0] == pids).all()
+    d, lab = idx.search(qs, 1, NL)
+    assert (np.asarray(lab)[:, 0] == pids).all()
     np.testing.assert_allclose(np.asarray(d)[:, 0], 0, atol=1e-4)
 
 

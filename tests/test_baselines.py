@@ -26,10 +26,10 @@ def test_flat_exact(data):
     ix = FlatIndex(D, 512)
     ix.insert(vecs, ids)
     ix.delete(ids[::2])
-    d, l = ix.search(qs, 5)
+    d, lab = ix.search(qs, 5)
     rd, rl = ref.search(qs, 5, 1)
     np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-    assert (np.asarray(l) == rl).all()
+    assert (np.asarray(lab) == rl).all()
     assert ix.n_live == ref.n_live
 
 
@@ -40,10 +40,10 @@ def test_contiguous_ivf_exact_full_probe(data, rng):
     ix.insert(vecs, ids)
     assert ix.n_relayouts > 0          # 2x growth exercised
     ix.delete(ids[::2])
-    d, l = ix.search(qs, 5, 8)
+    d, lab = ix.search(qs, 5, 8)
     rd, rl = ref.search(qs, 5, 1)
     np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-    assert (np.asarray(l) == rl).all()
+    assert (np.asarray(lab) == rl).all()
 
 
 def test_lsh_recall_reasonable(data):
@@ -51,9 +51,9 @@ def test_lsh_recall_reasonable(data):
     ix = LSHIndex(jax.random.key(1), D, n_tables=6, bits=4, bucket_cap=128)
     ix.insert(vecs, ids)
     ix.delete(ids[::2])
-    d, l = ix.search(qs, 5)
+    d, lab = ix.search(qs, 5)
     rd, rl = ref.search(qs, 5, 1)
-    rec = np.mean([len(set(np.asarray(l)[i].tolist())
+    rec = np.mean([len(set(np.asarray(lab)[i].tolist())
                        & set(rl[i].tolist())) / 5 for i in range(len(qs))])
     assert rec > 0.3
 
@@ -64,8 +64,8 @@ def test_hnsw_lite_recall_and_rebuild(data):
     ix.insert(vecs, ids)
     ix.delete(ids[::2])                # forces full rebuild
     assert ix.n_live == ref.n_live
-    d, l = ix.search(qs, 5)
+    d, lab = ix.search(qs, 5)
     rd, rl = ref.search(qs, 5, 1)
-    rec = np.mean([len(set(np.asarray(l)[i].tolist())
+    rec = np.mean([len(set(np.asarray(lab)[i].tolist())
                        & set(rl[i].tolist())) / 5 for i in range(len(qs))])
     assert rec > 0.7

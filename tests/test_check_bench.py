@@ -1,0 +1,150 @@
+"""The bench-regression gate cannot silently no-op (ISSUE 6 satellite).
+
+Same pattern as ``tests/test_docs.py``: the CI slow job *runs*
+``scripts/check_bench.py``; tier-1 pins the checker's own behavior —
+path lookup, every tolerance-band kind, the injected-regression failure
+path, and the "missing field/baseline fails loudly" contract.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+from check_bench import (  # noqa: E402
+    BASELINE_DIR,
+    METRICS,
+    Band,
+    check,
+    compare_artifact,
+    lookup,
+)
+
+
+def test_lookup_traverses_dicts_and_lists():
+    doc = {"a": {"b": [{"c": 3.5}, {"c": 4.5}]}, "n": 2}
+    assert lookup(doc, "a.b.0.c") == 3.5
+    assert lookup(doc, "a.b.1.c") == 4.5
+    assert lookup(doc, "n") == 2.0
+    with pytest.raises(KeyError):
+        lookup(doc, "a.missing")
+    with pytest.raises(IndexError):
+        lookup(doc, "a.b.9.c")
+    with pytest.raises(TypeError):
+        lookup(doc, "a")            # non-numeric leaf
+    with pytest.raises(TypeError):
+        lookup({"x": True}, "x")    # bools are not metrics
+
+
+def test_band_kinds():
+    assert Band("p", "ratio_max", 1.5).check(100, 149)
+    assert not Band("p", "ratio_max", 1.5).check(100, 151)
+    assert Band("p", "ratio_min", 2.0).check(100, 51)
+    assert not Band("p", "ratio_min", 2.0).check(100, 49)
+    assert Band("p", "abs_min", 0.02).check(1.0, 0.985)
+    assert not Band("p", "abs_min", 0.02).check(1.0, 0.97)
+    assert Band("p", "exact_max").check(5, 5)
+    assert not Band("p", "exact_max").check(5, 6)
+    with pytest.raises(ValueError):
+        Band("p", "nope").check(1, 1)
+
+
+def test_injected_regression_fails_and_prints_table():
+    base = {"p99": {"search": 100.0}, "jit": {"search": 3}}
+    good = {"p99": {"search": 120.0}, "jit": {"search": 3}}
+    bad = {"p99": {"search": 100.0}, "jit": {"search": 4}}
+    bands = [Band("p99.search", "ratio_max", 1.5),
+             Band("jit.search", "exact_max")]
+    rows, fails = compare_artifact("X.json", good, base, bands)
+    assert not fails and len(rows) == 2
+    assert all("ok" in r for r in rows)
+    rows, fails = compare_artifact("X.json", bad, base, bands)
+    assert len(fails) == 1 and "jit.search" in fails[0]
+    assert any("REGRESSION" in r for r in rows)
+
+
+def test_fresh_artifact_missing_metric_fails():
+    """A renamed/dropped field must fail the gate, not skip it."""
+    base = {"p99": 10.0}
+    fresh = {"p99_renamed": 10.0}
+    _, fails = compare_artifact("X.json", fresh, base,
+                                [Band("p99", "ratio_max", 2.0)])
+    assert len(fails) == 1 and "missing p99" in fails[0]
+
+
+def test_optional_band_skips_only_on_missing_baseline():
+    bands = [Band("new_metric", "ratio_max", 2.0, optional=True)]
+    rows, fails = compare_artifact("X.json", {"new_metric": 5}, {}, bands)
+    assert not fails and "skipped" in rows[0]
+    # present in baseline but absent from fresh: still a failure
+    _, fails = compare_artifact("X.json", {}, {"new_metric": 5}, bands)
+    assert len(fails) == 1
+
+
+def test_check_end_to_end_with_temp_baselines(tmp_path, capsys):
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    name = "BENCH_streaming_churn.json"
+    doc = {"eager": {"p50_us": {"add": 100.0, "search": 50.0},
+                     "jit_compiles": {"add": 5, "search": 1}},
+           "deferred": {"p50_us": {"add": 10.0},
+                        "p99_us": {"add": 20.0, "flush": 2.0},
+                        "jit_compiles": {"add": 5, "search": 1}}}
+    (baselines / name).write_text(json.dumps(doc))
+    fresh = tmp_path / name
+    fresh.write_text(json.dumps(doc))
+    assert check([fresh], baselines) == 0
+    assert "bench OK" in capsys.readouterr().out
+    # inject a 10x p99 regression
+    doc["deferred"]["p99_us"]["add"] = 200.0
+    fresh.write_text(json.dumps(doc))
+    assert check([fresh], baselines) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "deferred.p99_us.add" in out
+
+
+def test_missing_baseline_and_unregistered_artifact_fail(tmp_path, capsys):
+    fresh = tmp_path / "BENCH_pq.json"
+    fresh.write_text("{}")
+    assert check([fresh], tmp_path / "nowhere") == 1
+    assert "no committed baseline" in capsys.readouterr().out
+    rogue = tmp_path / "BENCH_rogue.json"
+    rogue.write_text("{}")
+    assert check([rogue], tmp_path) == 1
+    assert "no metric bands registered" in capsys.readouterr().out
+
+
+def test_committed_baselines_cover_every_registered_artifact():
+    """The real gate has a baseline for all four artifacts, and every
+    non-optional band resolves against it — so the CI invocation can
+    never silently check nothing."""
+    for name, bands in METRICS.items():
+        path = BASELINE_DIR / name
+        assert path.exists(), f"missing committed baseline {path}"
+        doc = json.loads(path.read_text())
+        for band in bands:
+            if band.optional:
+                continue
+            lookup(doc, band.path)      # raises if the baseline drifted
+
+
+def test_cli_exit_codes(tmp_path):
+    """The script entrypoint (what CI runs) propagates failures."""
+    name = "BENCH_pq.json"
+    baselines = tmp_path / "b"
+    baselines.mkdir()
+    doc = {"recall_at_10": 1.0, "reduction": {"16": 5.3, "256": 5.3},
+           "qps": {"pq": {"64": 500.0}}, "bytes_per_vector": {"pq": 8}}
+    (baselines / name).write_text(json.dumps(doc))
+    fresh = tmp_path / name
+    fresh.write_text(json.dumps(doc))
+    cmd = [sys.executable, str(REPO / "scripts" / "check_bench.py"),
+           str(fresh), "--baseline-dir", str(baselines)]
+    assert subprocess.run(cmd, capture_output=True).returncode == 0
+    doc["recall_at_10"] = 0.5           # injected recall regression
+    fresh.write_text(json.dumps(doc))
+    r = subprocess.run(cmd, capture_output=True, text=True)
+    assert r.returncode == 1 and "recall_at_10" in r.stdout

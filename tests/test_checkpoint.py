@@ -1,5 +1,4 @@
 """Checkpoint manager: atomicity, checksums, retention, async, elastic."""
-import json
 import os
 
 import jax.numpy as jnp

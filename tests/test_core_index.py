@@ -1,8 +1,6 @@
 """SIVF core behaviour vs the reference model (paper §3 semantics)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import core
 
@@ -28,10 +26,10 @@ def insert(cfg, state, ref, rng, ids):
 
 def check_search(cfg, state, ref, rng, k=5, nprobe=NL, q=6):
     qs = rng.normal(size=(q, D)).astype(np.float32)
-    d, l = core.search(cfg, state, jnp.asarray(qs), k, nprobe)
+    d, lab = core.search(cfg, state, jnp.asarray(qs), k, nprobe)
     rd, rl = ref.search(qs, k, nprobe)
     np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-    assert (np.asarray(l) == rl).all()
+    assert (np.asarray(lab) == rl).all()
 
 
 def test_insert_search_exact(rng):
@@ -133,10 +131,10 @@ def test_nprobe_subset(rng):
     state = insert(cfg, state, ref, rng, np.arange(256))
     for nprobe in (1, 2, 4):
         qs = rng.normal(size=(5, D)).astype(np.float32)
-        d, l = core.search(cfg, state, jnp.asarray(qs), 4, nprobe)
+        d, lab = core.search(cfg, state, jnp.asarray(qs), 4, nprobe)
         rd, rl = ref.search(qs, 4, nprobe)
         np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-        assert (np.asarray(l) == rl).all()
+        assert (np.asarray(lab) == rl).all()
 
 
 def test_ip_metric(rng):

@@ -58,10 +58,10 @@ def test_op_sequences_match_reference(ops, seed):
     # full-probe search must agree exactly (ties are measure-zero)
     qs = rng.normal(size=(3, D)).astype(np.float32)
     k = 4
-    d, l = core.search(CFG, state, jnp.asarray(qs), k, NL)
+    d, lab = core.search(CFG, state, jnp.asarray(qs), k, NL)
     rd, rl = ref.search(qs, k, NL)
     np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-    assert (np.asarray(l) == rl).all()
+    assert (np.asarray(lab) == rl).all()
 
     # structural invariants
     from repro.core import bitmap as bm

@@ -4,8 +4,6 @@ import json
 import subprocess
 import sys
 
-import pytest
-
 _DIST_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -2,7 +2,6 @@
 workloads (this is the §Roofline measurement instrument)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analyzer import analyze, parse_module, _trip_count

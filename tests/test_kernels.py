@@ -1,5 +1,4 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -40,13 +39,13 @@ def test_sivf_scan_sweep(rng, capacity, d, metric):
 
 # -- topk ----------------------------------------------------------------------
 
-@pytest.mark.parametrize("q,l,k", [(8, 64, 5), (16, 256, 17), (3, 128, 1)])
-def test_topk_sweep(rng, q, l, k):
+@pytest.mark.parametrize("q,nl,k", [(8, 64, 5), (16, 256, 17), (3, 128, 1)])
+def test_topk_sweep(rng, q, nl, k):
     from repro.kernels.topk import ops as topk_ops
     from repro.kernels.topk.ref import topk_ref
-    d = rng.normal(size=(q, l)).astype(np.float32)
-    d[rng.random(size=(q, l)) < 0.2] = np.inf      # dead slots
-    lab = rng.integers(0, 1000, (q, l)).astype(np.int32)
+    d = rng.normal(size=(q, nl)).astype(np.float32)
+    d[rng.random(size=(q, nl)) < 0.2] = np.inf      # dead slots
+    lab = rng.integers(0, 1000, (q, nl)).astype(np.int32)
     td, tl = topk_ops.topk(jnp.asarray(d), jnp.asarray(lab), k,
                            interpret=True)
     rd, rl = topk_ref(jnp.asarray(d), jnp.asarray(lab), k)

@@ -81,8 +81,8 @@ def test_reshard_chain_is_search_identical(rng, pq):
         assert np.array_equal(rows["lists"], rows0["lists"])
         assert np.array_equal(rows["data"], rows0["data"])      # payloads
         assert np.array_equal(rows["codes"], rows0["codes"])    # PQ codes
-        d, l = search_any(cfg, st, qs, 5)
-        assert np.array_equal(d, d0) and np.array_equal(l, l0), (n_from, n_to)
+        d, lab = search_any(cfg, st, qs, 5)
+        assert np.array_equal(d, d0) and np.array_equal(lab, l0), (n_from, n_to)
         # routing invariant: every id lives on the shard id % n_to picks
         if n_to > 1:
             for s in range(n_to):
@@ -104,8 +104,8 @@ def test_reshard_empty_index(rng):
     st = dist.reshard_state(cfg, idx.state, 1, 3)
     assert int(np.asarray(st.n_live).sum()) == 0
     assert np.asarray(st.ids).shape[0] == 3
-    d, l = search_any(cfg, st, rng.normal(size=(2, D)).astype(np.float32), 4)
-    assert (l == -1).all() and np.isinf(d).all()
+    d, lab = search_any(cfg, st, rng.normal(size=(2, D)).astype(np.float32), 4)
+    assert (lab == -1).all() and np.isinf(d).all()
     st = dist.reshard_state(cfg, st, 3, 1)
     assert int(np.asarray(st.n_live)) == 0
 
@@ -126,9 +126,9 @@ def test_shrink_leaves_a_shard_empty(rng):
     st2 = dist.reshard_state(cfg, st4, 4, 2)
     per_shard = np.asarray(st2.n_live)
     assert per_shard[0] == 60 and per_shard[1] == 0
-    d, l = search_any(cfg, st2, qs, 5)
+    d, lab = search_any(cfg, st2, qs, 5)
     assert np.array_equal(d, np.asarray(d0))
-    assert np.array_equal(l, np.asarray(l0))
+    assert np.array_equal(lab, np.asarray(l0))
     # the empty shard accepts its first insert (id 1 routes to shard 1)
     one = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[1]), st2)
     one = core.insert(cfg, one, jnp.asarray(vecs[:1]),

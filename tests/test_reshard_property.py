@@ -56,9 +56,9 @@ def test_churn_then_reshard_chain_matches_oracle(ops):
     state = idx.state
     for n_from, n_to in [(1, 4), (4, 2), (2, 3), (3, 1)]:
         state = dist.reshard_state(_CFG, state, n_from, n_to)
-        d, l = search_any(_CFG, state, qs, 4)
+        d, lab = search_any(_CFG, state, qs, 4)
         np.testing.assert_allclose(d, rd, rtol=1e-4, atol=1e-4)
-        assert (l == rl).all(), (n_from, n_to)
+        assert (lab == rl).all(), (n_from, n_to)
         assert int(np.asarray(state.n_live).sum()) == ref.n_live
     # the collapsed state still routes: a fresh handle keeps streaming
     end = sivf.Index(_CFG, _CENTS, _state=jax.tree.map(

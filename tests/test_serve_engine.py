@@ -1,0 +1,354 @@
+"""Streaming serve engine (ISSUE 6): coalescing, quotas, epoch consistency.
+
+Covers the four serve edge cases named in the issue:
+
+  * tenant quota exhaustion returns a *typed* rejection at submit time —
+    the queue does not grow;
+  * searches issued mid-ingest always observe a committed prefix of the
+    mutation stream (oracle check against the stamped ``epoch``);
+  * ``close()`` / drain flushes the deferred queue and resolves every
+    future;
+  * a threaded multi-client churn keeps jit executable counts bounded by
+    the pow2-bucket x (k, nprobe) coalescing bound.
+
+Each test builds a *fresh* ``SIVFConfig`` (distinct ``n_slabs``) so the
+lru-cached backend op sets — and therefore the measured compile counts —
+are isolated per test.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import sivf
+from sivf import Backpressure, BackpressureKind, ServeEngine, TenantQuota
+
+DIM = 16
+_SLAB_SALT = iter(range(100))
+
+
+def _engine(rng, *, n_lists=8, n_max=8192, min_bucket=16, **eng_kw):
+    cfg = sivf.SIVFConfig(dim=DIM, n_lists=n_lists,
+                          n_slabs=256 + next(_SLAB_SALT), capacity=32,
+                          n_max=n_max)
+    cents = sivf.train_kmeans(
+        jax.random.key(0),
+        rng.normal(size=(512, DIM)).astype(np.float32), n_lists)
+    idx = sivf.Index(cfg, cents, deferred=True, min_bucket=min_bucket)
+    return idx, ServeEngine(idx, **eng_kw)
+
+
+def _vec_for(i: int) -> np.ndarray:
+    """Deterministic per-id vector (distinct ids are well separated)."""
+    return np.random.default_rng(1000 + i).normal(
+        size=(DIM,)).astype(np.float32)
+
+
+def _vecs_for(ids) -> np.ndarray:
+    return np.stack([_vec_for(int(i)) for i in ids])
+
+
+# ---------------------------------------------------------------------------
+# construction contract
+# ---------------------------------------------------------------------------
+
+def test_engine_requires_deferred_nonstrict_index(rng):
+    cfg = sivf.SIVFConfig(dim=DIM, n_lists=4, n_slabs=64, capacity=32,
+                          n_max=1024)
+    cents = rng.normal(size=(4, DIM)).astype(np.float32)
+    with pytest.raises(ValueError, match="deferred=True"):
+        ServeEngine(sivf.Index(cfg, cents))
+    with pytest.raises(ValueError, match="strict=False"):
+        ServeEngine(sivf.Index(cfg, cents, deferred=True, strict=True))
+    with pytest.raises(TypeError, match="sivf.Index"):
+        ServeEngine("not an index")
+
+
+# ---------------------------------------------------------------------------
+# basic round trip + coalescing
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_and_coalesced_tiles(rng):
+    idx, eng = _engine(rng, default_k=5)
+    with eng:
+        writer, reader = eng.session("ingest"), eng.session("app")
+        ids = np.arange(64, dtype=np.int32)
+        writer.add(_vecs_for(ids), ids).result(30)
+        eng.pause()                      # queue searches so they coalesce
+        futs = [reader.search(_vec_for(j)[None]) for j in range(8)]
+        futs += [reader.search(_vec_for(j)[None], k=3, nprobe=2)
+                 for j in range(4)]
+        eng.resume()
+        res = [f.result(30) for f in futs]
+        # self-hit at distance ~0 for every query, both (k, nprobe) groups
+        for j, r in enumerate(res[:8]):
+            assert r.labels[0, 0] == j and r.distances[0, 0] < 1e-5
+            assert r.k == 5
+        # the 8 default-(k, nprobe) searches shared tiles; grouping is by
+        # (k, nprobe) so the k=3 group cannot ride the k=5 tile
+        assert all(r.coalesced >= 2 for r in res)
+        assert {(r.k, r.nprobe) for r in res} == {(5, 8), (3, 2)}
+        obs, bound = eng.assert_bounded_compiles()
+        assert obs <= bound
+        st = eng.stats()
+        assert st["searches"] == 12 and st["search_tiles"] >= 2
+    assert idx.pending_count == 0
+
+
+def test_submit_validation_is_synchronous(rng):
+    _, eng = _engine(rng)
+    with eng:
+        s = eng.session()
+        with pytest.raises(ValueError, match="dim"):
+            s.search(np.zeros((2, DIM + 1), np.float32))
+        with pytest.raises(ValueError, match="dim"):
+            s.add(np.zeros((2, DIM + 1), np.float32),
+                  np.arange(2, dtype=np.int32))
+        with pytest.raises(ValueError, match="mismatch"):
+            s.add(np.zeros((2, DIM), np.float32),
+                  np.arange(3, dtype=np.int32))
+
+
+def test_mutation_errors_surface_on_result_not_raise(rng):
+    """Non-strict contract: an ID_RANGE batch resolves with ok=False."""
+    idx, eng = _engine(rng)
+    with eng:
+        s = eng.session()
+        bad = np.asarray([1, idx.cfg.n_max + 7], np.int32)
+        r = s.add(_vecs_for([1, 2]), bad).result(30)
+        assert not r.ok
+        assert r.report.errors & sivf.ErrorCode.ID_RANGE
+        assert r.report.accepted == 1 and r.report.rejected == 1
+
+
+# ---------------------------------------------------------------------------
+# quotas: typed backpressure, no queue growth
+# ---------------------------------------------------------------------------
+
+def test_search_inflight_quota_typed_rejection(rng):
+    idx, eng = _engine(
+        rng, quotas={"capped": TenantQuota(max_inflight_searches=2)})
+    with eng:
+        s = eng.session("capped")
+        eng.pause()                          # stall dispatch deterministically
+        q = _vec_for(0)[None]
+        f1, f2 = s.search(q), s.search(q)
+        with pytest.raises(Backpressure) as ei:
+            s.search(q)
+        assert ei.value.kind is BackpressureKind.SEARCH_INFLIGHT
+        assert ei.value.tenant == "capped"
+        assert eng.stats()["queued"] == 2    # rejected submit never queued
+        # other tenants are unaffected
+        f3 = eng.session("other").search(q)
+        eng.resume()
+        for f in (f1, f2, f3):
+            f.result(30)
+        # resolution released the slots: the tenant can submit again
+        s.search(q).result(30)
+        rej = eng.stats()["rejections"]["capped"]
+        assert rej == {"search_inflight": 1}
+
+
+def test_queue_full_typed_rejection(rng):
+    idx, eng = _engine(rng, max_queue=3)
+    with eng:
+        s = eng.session()
+        eng.pause()
+        ids = np.arange(4, dtype=np.int32)
+        futs = [s.add(_vecs_for(ids + 4 * i), ids + 4 * i) for i in range(3)]
+        with pytest.raises(Backpressure) as ei:
+            s.remove(ids)
+        assert ei.value.kind is BackpressureKind.QUEUE_FULL
+        assert eng.stats()["queued"] == 3    # bounded, not growing
+        eng.resume()
+        assert all(f.result(30).ok for f in futs)
+
+
+def test_mutation_rate_token_bucket(rng):
+    now = [0.0]
+    idx, eng = _engine(
+        rng, clock=lambda: now[0],
+        quotas={"bulk": TenantQuota(mutation_rows_per_s=100,
+                                    mutation_burst_rows=50)})
+    with eng:
+        s = eng.session("bulk")
+        ids = np.arange(50, dtype=np.int32)
+        f = s.add(_vecs_for(ids), ids)       # drains the burst exactly
+        with pytest.raises(Backpressure) as ei:
+            s.remove(np.arange(1, dtype=np.int32))
+        assert ei.value.kind is BackpressureKind.MUTATION_RATE
+        now[0] += 0.5                        # refill 50 tokens
+        f2 = s.remove(np.arange(40, dtype=np.int32))
+        assert f.result(30).ok and f2.result(30).ok
+
+
+def test_submit_after_close_rejected(rng):
+    idx, eng = _engine(rng)
+    eng.close()
+    with pytest.raises(Backpressure) as ei:
+        eng.session().search(_vec_for(0)[None])
+    assert ei.value.kind is BackpressureKind.ENGINE_CLOSED
+
+
+# ---------------------------------------------------------------------------
+# epoch consistency: searches mid-ingest see a committed prefix
+# ---------------------------------------------------------------------------
+
+def test_search_mid_ingest_observes_committed_prefix(rng):
+    """Oracle: batch b covers ids [b*B, (b+1)*B). A search stamped with
+    epoch e must (a) never return an id from a batch > e, and (b) find
+    the planted id at distance ~0 whenever its batch <= e. Atomic batch
+    commits (PR 3) + single-thread dispatch make the prefix exact."""
+    B, n_batches = 32, 12
+    idx, eng = _engine(rng, default_k=4, flush_every=3)
+    with eng:
+        writer, reader = eng.session("ingest"), eng.session("app")
+        results = []
+        stop = threading.Event()
+
+        def searcher():
+            while not stop.is_set():
+                target = int(rng.integers(0, B * n_batches))
+                try:
+                    fut = reader.search(_vec_for(target)[None], nprobe=None)
+                except Backpressure:          # shed load, retry later
+                    time.sleep(0.005)
+                    continue
+                results.append((target, fut))
+                time.sleep(0.001)
+
+        t = threading.Thread(target=searcher)
+        t.start()
+        mut_futs = []
+        for b in range(n_batches):
+            ids = np.arange(b * B, (b + 1) * B, dtype=np.int32)
+            mut_futs.append(writer.add(_vecs_for(ids), ids))
+            time.sleep(0.002)
+        reps = [f.result(60) for f in mut_futs]
+        stop.set()
+        t.join()
+        assert all(r.ok for r in reps)
+        # batch b resolves at epoch b+1: epochs are the dispatch order
+        assert [r.epoch for r in reps] == list(range(1, n_batches + 1))
+
+        checked_absent = checked_present = 0
+        for target, fut in results:
+            r = fut.result(60)
+            batch_of_target = target // B + 1          # 1-based epoch
+            present = (r.distances[0, 0] < 1e-5
+                       and r.labels[0, 0] == target)
+            if batch_of_target <= r.epoch:
+                # nprobe=None probes every list: a committed id is found
+                assert present, (target, r.epoch, r.labels[0])
+                checked_present += 1
+            else:
+                assert not present, (target, r.epoch, r.labels[0])
+                checked_absent += 1
+            # (a) no id from an uncommitted batch ever appears
+            live = r.labels[0][r.labels[0] >= 0]
+            assert (live < r.epoch * B).all(), (r.epoch, live)
+        assert checked_present > 0           # the oracle saw both sides
+    assert idx.n_live == B * n_batches
+
+
+# ---------------------------------------------------------------------------
+# drain / shutdown
+# ---------------------------------------------------------------------------
+
+def test_close_drains_deferred_queue(rng):
+    idx, eng = _engine(rng, flush_every=10_000)   # never flush on depth
+    s = eng.session()
+    ids = np.arange(200, dtype=np.int32)
+    futs = [s.add(_vecs_for(ids[i:i + 50]), ids[i:i + 50])
+            for i in range(0, 200, 50)]
+    futs.append(s.remove(ids[:10]))
+    eng.close()                                   # drain=True default
+    assert all(f.done for f in futs)
+    reps = [f.result(0) for f in futs]
+    assert all(r.ok for r in reps)
+    assert idx.pending_count == 0
+    assert idx.n_live == 190
+    eng.close()                                   # idempotent
+
+
+def test_close_without_drain_rejects_queued_requests(rng):
+    idx, eng = _engine(rng)
+    s = eng.session()
+    eng.pause()
+    ids = np.arange(8, dtype=np.int32)
+    f = s.add(_vecs_for(ids), ids)
+    eng.close(drain=False)
+    with pytest.raises(Backpressure) as ei:
+        f.result(5)
+    assert ei.value.kind is BackpressureKind.ENGINE_CLOSED
+    assert idx.pending_count == 0
+
+
+def test_context_exit_flushes(rng):
+    idx, eng = _engine(rng)
+    with eng:
+        ids = np.arange(32, dtype=np.int32)
+        fut = eng.session().add(_vecs_for(ids), ids)
+    assert fut.result(0).ok and idx.pending_count == 0
+
+
+# ---------------------------------------------------------------------------
+# threaded multi-client churn: bounded executables
+# ---------------------------------------------------------------------------
+
+def test_threaded_churn_bounded_executables(rng):
+    idx, eng = _engine(rng, default_k=8, min_bucket=8, flush_every=4)
+    n_per_client = 30
+    errs: list = []
+    with eng:
+        def searcher(tenant, seed):
+            r = np.random.default_rng(seed)
+            sess = eng.session(tenant)
+            for _ in range(n_per_client):
+                q = r.normal(size=(int(r.integers(1, 9)), DIM)
+                             ).astype(np.float32)
+                try:
+                    res = sess.search(q).result(60)
+                    assert res.labels.shape == (q.shape[0], 8)
+                except Exception as e:          # surfaced on the main thread
+                    errs.append(e)
+
+        def mutator(tenant, seed, base):
+            r = np.random.default_rng(seed)
+            sess = eng.session(tenant)
+            nxt = base
+            for i in range(n_per_client):
+                n = int(r.integers(1, 33))
+                ids = np.arange(nxt, nxt + n, dtype=np.int32)
+                nxt += n
+                try:
+                    rep = sess.add(_vecs_for(ids), ids).result(60)
+                    assert rep.ok, rep
+                    if i % 3 == 2:
+                        assert sess.remove(ids[: n // 2]).result(60).ok
+                except Exception as e:
+                    errs.append(e)
+
+        threads = [
+            threading.Thread(target=searcher, args=("app-a", 1)),
+            threading.Thread(target=searcher, args=("app-b", 2)),
+            threading.Thread(target=mutator, args=("ingest-a", 3, 0)),
+            threading.Thread(target=mutator, args=("ingest-b", 4, 4000)),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs, errs[:3]
+        obs, bound = eng.assert_bounded_compiles()
+        st = eng.stats()
+        assert st["searches"] == 2 * n_per_client
+        assert st["queued"] == 0
+        assert all(v == 0 for v in st["inflight_searches"].values())
+        # mutation executables ride the PR 2 bucket bound too
+        comp = idx.compile_stats()
+        mut_bound = len(idx.bucket_shapes(32))
+        assert comp["add"] <= mut_bound and comp["remove"] <= mut_bound
+    assert idx.pending_count == 0

@@ -6,10 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES
+from repro.configs import ARCHS
 from repro.models import model as M
-from repro.sharding.axes import Annot, logical_axes, spec_for, strip
-from repro.sharding.rules import ShardPlan, make_plan, unpadded_plan
+from repro.sharding.axes import logical_axes, spec_for, strip
+from repro.sharding.rules import make_plan, unpadded_plan
 
 MESH = {"data": 16, "model": 16}
 

@@ -45,10 +45,10 @@ def test_streaming_sliding_window_end_to_end(rng):
     assert peak_slabs * cfg.capacity <= (W + B) * 2.5
     # search over the final window matches brute force
     qs = stream.batch(99, 8)
-    d, l = core.search(cfg, state, jnp.asarray(qs), 10, NL)
+    d, lab = core.search(cfg, state, jnp.asarray(qs), 10, NL)
     rd, rl = ref.search(qs, 10, NL)
     np.testing.assert_allclose(np.asarray(d), rd, rtol=1e-4, atol=1e-4)
-    assert (np.asarray(l) == rl).all()
+    assert (np.asarray(lab) == rl).all()
 
 
 def test_recall_parity_with_exact_at_full_probe(rng):
@@ -63,12 +63,12 @@ def test_recall_parity_with_exact_at_full_probe(rng):
     state = core.insert(cfg, state, jnp.asarray(vecs),
                         jnp.asarray(np.arange(800), np.int32))
     qs = rng.normal(size=(16, D)).astype(np.float32)
-    d, l = core.search(cfg, state, jnp.asarray(qs), 10, NL)
+    d, lab = core.search(cfg, state, jnp.asarray(qs), 10, NL)
     # exact brute force
     from repro.utils import l2_sq
     full = np.asarray(l2_sq(jnp.asarray(qs), jnp.asarray(vecs)))
     exact = np.argsort(full, axis=1, kind="stable")[:, :10]
-    recall = np.mean([len(set(np.asarray(l)[i].tolist())
+    recall = np.mean([len(set(np.asarray(lab)[i].tolist())
                           & set(exact[i].tolist())) / 10
                       for i in range(16)])
     assert recall == 1.0

@@ -16,7 +16,7 @@ from repro.models import model as M
 from repro.sharding.axes import strip
 from repro.sharding.rules import unpadded_plan
 from repro.train.grad_compress import (compress_tree, dequantize_int8,
-                                       init_residual, quantize_int8)
+                                       quantize_int8)
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, \
     schedule
 from repro.train.train_step import (TrainConfig, init_train_state,
