@@ -10,7 +10,10 @@ back-to-back and records p50/p99 latencies + jit compile counts to
 (QPS, recall@10, measured slab temp bytes at Q=16/64/256) to
 ``BENCH_pq.json``; ``reshard_sweep`` records elastic-reshard wall-clock +
 bytes moved for 1->2->4 shards at 100k vectors (PQ on/off, search-parity
-asserted) to ``BENCH_reshard.json``; ``serve_churn`` records the
+asserted) to ``BENCH_reshard.json``; ``filtered_sweep`` records filtered-search QPS +
+recall@10 at ~1%/10%/50% predicate selectivity vs the post-filter-then-
+widen baseline (plus the jit executable count across filter structures)
+to ``BENCH_filter.json``; ``serve_churn`` records the
 open-loop mixed-workload SLO sweep (p50/p99/p999 search latency idle vs
 under ingest at 3 arrival rates + sustained mutation throughput) to
 ``BENCH_serve.json`` (the slow CI job's perf data points —
@@ -112,6 +115,9 @@ def main() -> None:
     if only is None or "reshard_sweep" in only:
         run_summary_artifact("reshard_sweep", paper.reshard_sweep_summary,
                              "BENCH_reshard.json", results)
+    if only is None or "filtered_sweep" in only:
+        run_summary_artifact("filtered_sweep", paper.filtered_sweep_summary,
+                             "BENCH_filter.json", results)
     if only is None or "serve_churn" in only:
         run_summary_artifact("serve_churn", serve_bench.serve_churn_summary,
                              "BENCH_serve.json", results)

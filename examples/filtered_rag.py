@@ -1,0 +1,79 @@
+"""Filtered RAG — multi-tenant retrieval with time-window predicates.
+
+Two tenants share one GPU-resident index through the serve engine; each
+is pinned to a mandatory ``Eq("tenant", ...)`` filter, so isolation is
+structural, not best-effort: the engine force-stamps the tenant id onto
+every ingested row (a spoofed attribute is overridden) and AND-s the
+predicate into every search (a client filter can narrow, never escape).
+On top of the slice, queries add a ``Range("ts", ...)`` freshness window
+— the predicate evaluates *inside* the scan kernels, so recall within
+the window is exact, with no post-filter widening.
+
+Run: PYTHONPATH=src python examples/filtered_rag.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import sivf
+
+rng = np.random.default_rng(0)
+DIM, N_LISTS = 32, 8
+
+train = rng.normal(size=(512, DIM)).astype(np.float32)
+cents = sivf.train_kmeans(jax.random.key(1), jnp.asarray(train), N_LISTS)
+cfg = sivf.SIVFConfig(dim=DIM, n_lists=N_LISTS, n_slabs=128, capacity=32,
+                      n_max=8192, max_chain=16,
+                      attributes=("tenant", "ts"))
+index = sivf.Index(cfg, cents, deferred=True, min_bucket=8)
+
+TENANTS = {"acme": 1, "globex": 2}
+docs: dict[int, int] = {}            # doc id -> ingest timestamp
+
+with sivf.ServeEngine(
+        index, default_nprobe=N_LISTS,
+        tenant_filters={t: sivf.Eq("tenant", v)
+                        for t, v in TENANTS.items()}) as engine:
+    # -- 1. two tenants stream documents in, stamped with a timestamp ------
+    sessions = {t: engine.session(t) for t in TENANTS}
+    doc_id = 0
+    for ts in range(8):
+        for tenant, sess in sessions.items():
+            ids = np.arange(doc_id, doc_id + 16, dtype=np.int32)
+            vecs = rng.normal(size=(16, DIM)).astype(np.float32)
+            # note: no "tenant" column — the engine stamps the Eq-pinned
+            # value itself; a spoofed value would be overridden the same way
+            sess.add(vecs, ids, attrs={"ts": ts}).result()
+            docs.update({int(i): ts for i in ids})
+            doc_id += 16
+    print(f"ingested {index.n_live} docs across {len(TENANTS)} tenants")
+
+    # -- 2. tenant-sliced retrieval with a freshness window ----------------
+    queries = rng.normal(size=(4, DIM)).astype(np.float32)
+    window = sivf.Range("ts", 5, 8)          # only the 3 freshest steps
+    for tenant, sess in sessions.items():
+        res = sess.search(queries, k=8, filter=window).result()
+        labels = np.asarray(res.labels)
+        hits = labels[labels >= 0]
+        # isolation guarantee: every hit is the tenant's own (ids were
+        # interleaved per step, so parity of the 16-block identifies the
+        # writer) AND inside the freshness window
+        block_owner = (hits // 16) % len(TENANTS)
+        want = list(TENANTS).index(tenant)
+        assert (block_owner == want).all(), "cross-tenant leak!"
+        assert all(5 <= docs[int(h)] < 8 for h in hits), "stale doc!"
+        print(f"  {tenant}: {len(hits)} hits, all tenant-owned, "
+              f"ts ∈ [5, 8) — isolation + freshness hold")
+
+    # -- 3. the slice is inescapable ---------------------------------------
+    other = sivf.Eq("tenant", TENANTS["globex"])
+    escaped = sessions["acme"].search(queries, k=8, filter=other).result()
+    assert (np.asarray(escaped.labels) == -1).all()
+    print("  acme ∧ Eq(tenant=globex) returned nothing: slices cannot "
+          "be escaped, only narrowed")
+
+    compiles, bound = engine.assert_bounded_compiles()
+    print(f"jit search executables: {compiles} <= bound {bound} "
+          f"(filter constants never mint an executable)")
+
+print("ok: multi-tenant filtered retrieval with exact in-scan predicates")

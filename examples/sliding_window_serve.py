@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import model as M
-from repro.serve.engine import ServeEngine
+from repro.serve.paged_lm import PagedLMEngine
 from repro.sharding.axes import strip
 from repro.sharding.rules import unpadded_plan
 
@@ -20,7 +20,7 @@ plan = unpadded_plan(cfg)
 params = strip(M.init_params(cfg, plan, jax.random.key(0), max_seq=256))
 rng = np.random.default_rng(0)
 
-engine = ServeEngine(cfg, plan, params, page_size=16, n_pages=64,
+engine = PagedLMEngine(cfg, plan, params, page_size=16, n_pages=64,
                      max_seqs=4, max_pages_per_seq=16)
 
 # admit a batch of requests (prefill writes pages; O(pages) allocation)

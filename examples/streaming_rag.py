@@ -16,7 +16,7 @@ import numpy as np
 import sivf
 from repro.configs import ARCHS
 from repro.models import model as M
-from repro.serve.engine import ServeEngine
+from repro.serve.paged_lm import PagedLMEngine
 from repro.sharding.axes import strip
 from repro.sharding.rules import unpadded_plan
 
@@ -76,7 +76,7 @@ print("retrieved docs:", hits)
 assert all(h in docs for h in hits), "retrieval returned an evicted doc!"
 
 prompt = np.concatenate([docs[h] for h in hits] + [query_toks])
-engine = ServeEngine(cfg, plan, params, page_size=16, n_pages=32,
+engine = PagedLMEngine(cfg, plan, params, page_size=16, n_pages=32,
                      max_seqs=1)
 assert engine.admit(0, prompt)
 out = [int(engine.last_tokens[0, 0])]

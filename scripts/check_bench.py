@@ -97,6 +97,17 @@ METRICS: dict[str, list[Band]] = {
         Band("variants.raw.steps.0.bytes_moved", "exact_max"),
         Band("variants.pq.steps.0.bytes_moved", "exact_max"),
     ],
+    "BENCH_filter.json": [
+        # fused in-scan filtering is exact by construction: recall@10 vs
+        # the within-predicate oracle must stay 1.0 at every selectivity
+        Band("selectivities.sel1pct.fused.recall_at_10", "abs_min", 0.0),
+        Band("selectivities.sel10pct.fused.recall_at_10", "abs_min", 0.0),
+        Band("selectivities.sel50pct.fused.recall_at_10", "abs_min", 0.0),
+        Band("selectivities.sel1pct.fused.qps", "ratio_min", 4.0),
+        Band("selectivities.sel50pct.fused.qps", "ratio_min", 4.0),
+        # one executable per filter STRUCTURE — constants must never mint
+        Band("search_executables", "exact_max"),
+    ],
     "BENCH_serve.json": [
         Band("scale_points.0.idle.p99_ms", "ratio_max", 4.0),
         Band("scale_points.0.active.p99_ms", "ratio_max", 4.0),

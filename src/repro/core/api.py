@@ -93,6 +93,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import filters as flt
 from repro.core import index as ix
 from repro.core import pq as pqmod
 from repro.core import quantizer
@@ -365,11 +366,12 @@ def _single_ops(cfg: SIVFConfig, impl: str, block_q: int,
         return valid, pb, aux
 
     @partial(jax.jit, donate_argnums=(0,))
-    def insert_fn(state, vecs, ids):
+    def insert_fn(state, vecs, ids, attrs):
         valid, pb, aux = _pre(state, ids)
         lists = quantizer.assign(state.centroids, vecs.astype(cfg.dtype),
                                  cfg.metric)
-        st = ix._insert_impl(cfg, _clear_error(state), vecs, ids, lists)
+        st = ix._insert_impl(cfg, _clear_error(state), vecs, ids, lists,
+                             attrs=attrs)
         aux["errors"] = _or_bits(st.error)
         aux["n_live_after"] = st.n_live
         # overwritten == present-before AND the batch committed; on an
@@ -387,10 +389,11 @@ def _single_ops(cfg: SIVFConfig, impl: str, block_q: int,
         aux["n_overwritten"] = jnp.zeros((), jnp.int32)
         return _clear_error(st), aux
 
-    @partial(jax.jit, static_argnums=(2, 3))
-    def search_fn(state, queries, k, nprobe):
+    @partial(jax.jit, static_argnums=(2, 3, 4))
+    def search_fn(state, queries, k, nprobe, fstruct, fconsts):
         return ix._search_impl(cfg, state, queries, k, nprobe, use_tables,
-                               impl, block_q)
+                               impl, block_q, fstruct=fstruct,
+                               fconsts=fconsts)
 
     return SimpleNamespace(insert=insert_fn, delete=delete_fn,
                            search=search_fn, n_shards=1)
@@ -429,9 +432,9 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
         return valid, pb, aux
 
     @partial(jax.jit, donate_argnums=(0,))
-    def insert_fn(state, vecs, ids):
+    def insert_fn(state, vecs, ids, attrs):
         valid, pb, aux = _pre(state, ids)
-        st = raw_insert(_clear_error(state), vecs, ids)
+        st = raw_insert(_clear_error(state), vecs, ids, attrs)
         aux["errors"] = _or_bits(st.error)
         aux["shard_errors"] = st.error                       # [S] bits
         aux["n_live_after"] = jnp.sum(st.n_live)
@@ -452,9 +455,10 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
         aux["n_overwritten"] = jnp.zeros((), jnp.int32)
         return _clear_error(st), aux
 
-    @partial(jax.jit, static_argnums=(2, 3))
-    def search_fn(state, queries, k, nprobe):
-        return raw_search(state, queries, k, nprobe)
+    @partial(jax.jit, static_argnums=(2, 3, 4))
+    def search_fn(state, queries, k, nprobe, fstruct, fconsts):
+        return raw_search(state, queries, k, nprobe, fstruct=fstruct,
+                          fconsts=fconsts)
 
     return SimpleNamespace(insert=insert_fn, delete=delete_fn,
                            search=search_fn, n_shards=n)
@@ -652,6 +656,12 @@ class Index:
         out[: len(rows)] = rows
         return jnp.asarray(out)
 
+    def _pad_attrs(self, attrs: np.ndarray, bucket: int) -> jax.Array:
+        # padding rows carry zeros; their ids are -1 so they never commit
+        out = np.zeros((bucket, self.cfg.n_attrs), np.int32)
+        out[: len(attrs)] = attrs
+        return jnp.asarray(out)
+
     @staticmethod
     def _as_batch(x, np_dtype, flat: bool = False):
         """Host inputs -> numpy; ``jax.Array`` inputs stay on device."""
@@ -698,7 +708,7 @@ class Index:
                 "PQ codebooks are untrained: call Index.train(sample) or "
                 "construct with pq_codebooks= before adding vectors")
 
-    def add(self, vecs, ids, *, strict: bool | None = None
+    def add(self, vecs, ids, *, attrs=None, strict: bool | None = None
             ) -> "MutationReport | PendingReport":
         """Ingest a batch. ``vecs [B, D]``, ``ids [B]`` (-1 rows skipped).
 
@@ -709,6 +719,14 @@ class Index:
         (per shard on the mesh backend). Inputs that are already
         ``jax.Array``s are padded device-side. In deferred mode this
         returns a :class:`PendingReport` without any host sync.
+
+        With ``SIVFConfig(attributes=...)`` configured, ``attrs`` is
+        **required** — either a ``{name: value_or_column}`` dict or a
+        ``[B, n_attrs]`` int array in config order. Every configured
+        attribute must be supplied (missing names raise): silently
+        defaulting an attribute like ``tenant`` to 0 would leak rows into
+        tenant 0's filtered results. Without configured attributes,
+        passing ``attrs`` raises.
         """
         self._require_trained()
         vecs = self._as_batch(vecs, np.float32)
@@ -718,10 +736,22 @@ class Index:
                 f"vecs {vecs.shape} / ids {ids_a.shape} mismatch")
         if vecs.shape[1] != self.cfg.dim:
             raise ValueError(f"dim {vecs.shape[1]} != cfg.dim {self.cfg.dim}")
+        if self.cfg.n_attrs:
+            if attrs is None:
+                raise ValueError(
+                    f"index has attributes {self.cfg.attributes}: add() "
+                    f"requires attrs= for every row (dict of per-attribute "
+                    f"values or a [B, {self.cfg.n_attrs}] int array)")
+            attrs_np = flt.normalize_attrs(self.cfg.attributes, attrs,
+                                           int(ids_a.shape[0]))
+        elif attrs is not None:
+            raise ValueError(
+                "attrs= given but SIVFConfig(attributes=...) is empty")
         bucket = self._bucket(ids_a.shape[0])
         self._state, aux = self._ops.insert(
             self._state, self._pad_rows(vecs, bucket),
-            self._pad_ids(ids_a, bucket))
+            self._pad_ids(ids_a, bucket),
+            self._pad_attrs(attrs_np, bucket) if self.cfg.n_attrs else None)
         return self._emit("add", aux, bucket, strict)
 
     def remove(self, ids, *, strict: bool | None = None
@@ -816,11 +846,21 @@ class Index:
 
     # -- search -------------------------------------------------------------
 
-    def search(self, queries, k: int, nprobe: int | None = None
-               ) -> SearchResult:
+    def search(self, queries, k: int, nprobe: int | None = None, *,
+               filter=None) -> SearchResult:
         """Top-k search; ``nprobe=None`` probes every list (exact recall).
 
         ``jax.Array`` queries are padded device-side (no host round trip).
+
+        ``filter`` is a :mod:`repro.core.filters` predicate (``Eq`` /
+        ``In`` / ``Range`` / ``And``) over the configured attributes — or
+        an already-:func:`~repro.core.filters.compile_filter`-ed
+        ``CompiledFilter`` (the serve engine pre-compiles to coalesce).
+        Only rows matching it can appear in the result (non-matching slots
+        mask to ``inf`` / ``-1`` *inside* the scan, before top-k, so they
+        never displace passing candidates). The predicate *structure* is a
+        static jit key while its constants are traced operands — searching
+        ``Eq("tenant", 3)`` then ``Eq("tenant", 7)`` compiles once.
         """
         queries = self._as_batch(queries, np.float32)
         if queries.ndim == 1:
@@ -828,12 +868,21 @@ class Index:
         if queries.shape[1] != self.cfg.dim:
             raise ValueError(
                 f"dim {queries.shape[1]} != cfg.dim {self.cfg.dim}")
+        fstruct = fconsts = None
+        if filter is not None:
+            if not self.cfg.n_attrs:
+                raise ValueError(
+                    "filtered search needs SIVFConfig(attributes=...)")
+            cf = filter if isinstance(filter, flt.CompiledFilter) \
+                else flt.compile_filter(filter, self.cfg.attributes)
+            fstruct = cf.structure
+            fconsts = jnp.asarray(cf.consts, jnp.int32)
         nprobe = self.cfg.n_lists if nprobe is None \
             else min(int(nprobe), self.cfg.n_lists)
         q = queries.shape[0]
         bucket = self._bucket(q)
         d, lab = self._ops.search(self._state, self._pad_rows(queries, bucket),
-                                int(k), nprobe)
+                                int(k), nprobe, fstruct, fconsts)
         return SearchResult(distances=d[:q], labels=lab[:q], k=int(k),
                             nprobe=nprobe, padded_to=bucket)
 
@@ -848,7 +897,7 @@ class Index:
         cfg = dataclasses.asdict(self.cfg)   # nested PQConfig -> plain dict
         cfg["dtype"] = np.dtype(self.cfg.dtype).name
         mgr.save_metadata(self._META, {
-            "format": 2,
+            "format": 3,
             "pq_trained": self._pq_trained,
             "backend": self._backend_kind,
             "n_shards": self.n_shards,
@@ -928,23 +977,25 @@ class Index:
                 lambda x: jax.ShapeDtypeStruct((src_shards,) + x.shape,
                                                x.dtype), example)
         leaves, treedef = jax.tree.flatten(example)
-        # format-1 checkpoints predate the PQ planes; ``codes`` and
-        # ``pq_codebooks`` are the LAST two registered data fields, so a
-        # legacy manifest restores into the leaf prefix and the (zero-width,
-        # since format 1 implies cfg.pq=None) planes are filled fresh
-        legacy = int(meta.get("format", 1)) < 2
+        # older checkpoints predate trailing slab planes, which are by
+        # design the LAST registered data fields so a legacy manifest
+        # restores into the leaf prefix and the missing planes fill fresh:
+        # format 1 lacks ``codes`` / ``pq_codebooks`` / ``attrs`` (all
+        # zero-width: format 1 implies cfg.pq=None and no attributes),
+        # format 2 lacks only ``attrs``
+        n_miss = {1: 3, 2: 1}.get(int(meta.get("format", 1)), 0)
         if tgt_kind == src_kind and n_to == src_shards:
             # topology match: restore leaves straight onto their devices
             shard = None
             if tgt_kind == "mesh":
                 from jax.sharding import NamedSharding, PartitionSpec as P
                 shard = NamedSharding(backend, P(kw["axis"]))
-            want = leaves[:-2] if legacy else leaves
+            want = leaves[:-n_miss] if n_miss else leaves
             out = list(mgr.restore(
                 step, want,
                 sharding_tree=None if shard is None else [shard] * len(want)))
-            if legacy:
-                fill = [jnp.zeros(x.shape, x.dtype) for x in leaves[-2:]]
+            if n_miss:
+                fill = [jnp.zeros(x.shape, x.dtype) for x in leaves[-n_miss:]]
                 if shard is not None:
                     fill = [jax.device_put(f, shard) for f in fill]
                 out += fill
@@ -953,9 +1004,9 @@ class Index:
             # elastic reshard: manifest-described host restore, pure
             # re-route, then placement onto the target backend
             out = mgr.restore_arrays(step)
-            if legacy:
+            if n_miss:
                 out = out + [np.zeros(x.shape, x.dtype)
-                             for x in leaves[-2:]]
+                             for x in leaves[-n_miss:]]
             if len(out) != len(leaves):
                 raise ValueError(
                     f"checkpoint stored {len(out)} leaves but the "

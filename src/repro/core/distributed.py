@@ -97,22 +97,25 @@ def sharded_insert(cfg: SIVFConfig, mesh: Mesh, axis: str = "data"):
     """
     n = mesh.shape[axis]
 
-    def run(state: SlabPoolState, vecs: jax.Array, ext_ids: jax.Array
-            ) -> SlabPoolState:
-        def local(st, v, i):
+    def run(state: SlabPoolState, vecs: jax.Array, ext_ids: jax.Array,
+            attrs: jax.Array | None = None) -> SlabPoolState:
+        def local(st, v, i, *a):
             st = jax.tree.map(lambda x: x[0], st)
             me = jax.lax.axis_index(axis)
             mine = shard_of(i, n) == me
             from repro.core.quantizer import assign
             lists = assign(st.centroids, v.astype(cfg.dtype), cfg.metric)
-            st = ix._insert_impl(cfg, st, v, jnp.where(mine, i, -1), lists)
+            st = ix._insert_impl(cfg, st, v, jnp.where(mine, i, -1), lists,
+                                 attrs=a[0] if a else None)
             return jax.tree.map(lambda x: x[None], st)
 
+        extra = () if attrs is None else (attrs,)
         f = shard_map_compat(
             local, mesh=mesh, check_vma=False,
-            in_specs=(_spec_tree(state, axis), P(), P()),
+            in_specs=(_spec_tree(state, axis), P(), P())
+            + tuple(P() for _ in extra),
             out_specs=_spec_tree(state, axis))
-        return f(state, vecs, ext_ids)
+        return f(state, vecs, ext_ids, *extra)
 
     return run
 
@@ -150,12 +153,14 @@ def sharded_search(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
     cross the interconnect — never per-slab candidates.
     """
 
-    def run(state: SlabPoolState, queries: jax.Array, k: int, nprobe: int
+    def run(state: SlabPoolState, queries: jax.Array, k: int, nprobe: int,
+            fstruct: tuple | None = None, fconsts: jax.Array | None = None
             ) -> tuple[jax.Array, jax.Array]:
-        def local(st, q):
+        def local(st, q, *fc):
             st = jax.tree.map(lambda x: x[0], st)
             d, lab = ix._search_impl(cfg, st, q, k, nprobe, use_tables, impl,
-                                   block_q)
+                                     block_q, fstruct=fstruct,
+                                     fconsts=fc[0] if fc else None)
             # gather fused [Q, k] partials from all shards (paper MPI_Gather)
             dg = jax.lax.all_gather(d, axis)                   # [S, Q, k]
             lg = jax.lax.all_gather(lab, axis)
@@ -165,11 +170,13 @@ def sharded_search(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
             nd, idx = jax.lax.top_k(-dg, k)                    # global merge
             return -nd, jnp.take_along_axis(lg, idx, axis=1)
 
+        extra = () if fconsts is None else (fconsts,)
         f = shard_map_compat(
             local, mesh=mesh, check_vma=False,
-            in_specs=(_spec_tree(state, axis), P()),
+            in_specs=(_spec_tree(state, axis), P())
+            + tuple(P() for _ in extra),
             out_specs=(P(), P()))
-        return f(state, queries)
+        return f(state, queries, *extra)
 
     return run
 
@@ -202,6 +209,8 @@ def flatten_live_rows(cfg: SIVFConfig, state: SlabPoolState) -> dict:
       ``data``    [N, payload_dim] stored fp payloads (width 0 when PQ
                   codes replace them);
       ``codes``   [N, code_m] uint8 PQ codewords (width 0 without PQ);
+      ``attrs``   [N, n_attrs] int32 filter attributes (width 0 without
+                  ``cfg.attributes``);
     plus the replicated leaves ``centroids`` [n_lists, D] and
     ``pq_codebooks`` (shard 0's copy when stacked).
     """
@@ -219,6 +228,7 @@ def flatten_live_rows(cfg: SIVFConfig, state: SlabPoolState) -> dict:
                                  ).reshape(-1)[idx]
     data = np.asarray(state.data).reshape(slots, cfg.payload_dim)[idx]
     codes = np.asarray(state.codes).reshape(slots, cfg.code_m)[idx]
+    attrs = np.asarray(state.attrs).reshape(slots, cfg.n_attrs)[idx]
     n_live = int(np.asarray(state.n_live).sum())
     if len(live_ids) != n_live:
         raise ValueError(
@@ -233,6 +243,7 @@ def flatten_live_rows(cfg: SIVFConfig, state: SlabPoolState) -> dict:
         "lists": live_lists[order].astype(np.int32),
         "data": data[order],
         "codes": codes[order],
+        "attrs": attrs[order].astype(np.int32),
         "centroids": cents[0] if stacked else cents,
         "pq_codebooks": cb[0] if stacked else cb,
     }
@@ -270,14 +281,15 @@ def _check_reshard_fit(cfg: SIVFConfig, ids: np.ndarray, lists: np.ndarray,
 
 def _build_shard(cfg: SIVFConfig, centroids: np.ndarray, cb: np.ndarray,
                  vecs: np.ndarray, ids: np.ndarray, lists: np.ndarray,
-                 codes: np.ndarray | None) -> SlabPoolState:
+                 codes: np.ndarray | None,
+                 attrs: np.ndarray | None = None) -> SlabPoolState:
     """One target shard: fresh ``init_state`` + a single pre-routed insert.
 
     The batch pads to a power-of-two bucket (floor 64) so a sweep over
     shard counts compiles a bounded number of insert executables, same as
     the session handle's bucketing. With PQ, the *stored* codes ride
     along and are scattered as-is, so code planes survive byte-for-byte
-    by construction.
+    by construction — and the same holds for the int32 attribute stamps.
     """
     pq_cb = None if cfg.pq is None else jnp.asarray(cb)
     st = init_state(cfg, jnp.asarray(centroids), pq_cb)
@@ -296,8 +308,13 @@ def _build_shard(cfg: SIVFConfig, centroids: np.ndarray, cb: np.ndarray,
         cp = np.zeros((b, cfg.code_m), np.uint8)
         cp[:n] = codes
         cp = jnp.asarray(cp)
+    ap = None
+    if attrs is not None and cfg.n_attrs:
+        ap = np.zeros((b, cfg.n_attrs), np.int32)
+        ap[:n] = attrs
+        ap = jnp.asarray(ap)
     st = ix.insert(cfg, st, jnp.asarray(vp), jnp.asarray(ip),
-                   jnp.asarray(lp), cp)
+                   jnp.asarray(lp), cp, ap)
     if int(st.error):
         raise ValueError(
             f"reshard rebuild failed with error bits {int(st.error)} "
@@ -358,7 +375,9 @@ def reshard_state(cfg: SIVFConfig, state: SlabPoolState, n_from: int,
         shards.append(_build_shard(cfg, rows["centroids"],
                                    rows["pq_codebooks"], vecs[sel],
                                    ids[sel], lists[sel],
-                                   None if codes is None else codes[sel]))
+                                   None if codes is None else codes[sel],
+                                   rows["attrs"][sel] if cfg.n_attrs
+                                   else None))
     if n_to == 1 and not stack:
         return shards[0]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)

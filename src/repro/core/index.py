@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitmap as bm
+from repro.core import filters as flt
 from repro.core import pq as pqmod
 from repro.core import quantizer
 from repro.core.state import (
@@ -84,13 +85,20 @@ def _dedupe_keep_last(ext_ids: jax.Array, valid: jax.Array) -> jax.Array:
 
 def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
                  ext_ids: jax.Array, lists: jax.Array,
-                 codes: jax.Array | None = None) -> SlabPoolState:
+                 codes: jax.Array | None = None,
+                 attrs: jax.Array | None = None) -> SlabPoolState:
     """All-or-nothing batched insert.
 
     With ``cfg.pq`` set, ``codes`` ``[B, m]`` may carry pre-encoded
     codewords (elastic resharding re-routes *stored* codes, so the code
     planes survive byte-for-byte by construction instead of round-tripping
     through decode/encode); omitted, the batch encodes on ingest.
+
+    With ``cfg.attributes`` set, ``attrs`` ``[B, n_attrs]`` int32 stamps
+    each row's filter attributes (core/filters.py); omitted at this
+    functional layer the batch stamps zeros — the session handle
+    (``Index.add``) is the strict surface that *requires* attributes, so
+    tenant rows can never default their way out of a mandatory filter.
 
     Overwrites keep the paper's delete-then-insert linearization, but the
     whole batch is *staged*: the overwrite-deletes run on a functional copy
@@ -189,6 +197,12 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
                                      sv.astype(jnp.float32))
         else:
             new_codes = codes[order].astype(jnp.uint8)   # same batch sort
+    # attribute stamps ride the same sort and the same staged commit
+    if cfg.n_attrs:
+        if attrs is None:
+            sattrs = jnp.zeros((b, cfg.n_attrs), jnp.int32)
+        else:
+            sattrs = attrs[order].astype(jnp.int32)
 
     def apply(operand) -> SlabPoolState:
         staged, _ = operand                          # commit the staged batch
@@ -225,6 +239,11 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
                 new_codes, mode="drop")
         else:
             codes = staged.codes
+        if cfg.n_attrs:
+            attrs_plane = staged.attrs.at[drop_i, item_slot].set(
+                sattrs, mode="drop")
+        else:
+            attrs_plane = staged.attrs
         ids = staged.ids.at[drop_i, item_slot].set(sids, mode="drop")
         norms = staged.norms.at[drop_i, item_slot].set(
             jnp.sum(sv.astype(jnp.float32) ** 2, axis=-1), mode="drop")
@@ -244,7 +263,7 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
             error=staged.error | jnp.where(err_range, ERR_ID_RANGE, 0),
             centroids=staged.centroids, tables=tables, table_len=table_len,
             table_pos=table_pos, codes=codes,
-            pq_codebooks=staged.pq_codebooks)
+            pq_codebooks=staged.pq_codebooks, attrs=attrs_plane)
 
     def fail(operand) -> SlabPoolState:
         _, pristine = operand                 # drop the staged deletes whole
@@ -263,18 +282,20 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def insert(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
            ext_ids: jax.Array, lists: jax.Array | None = None,
-           codes: jax.Array | None = None) -> SlabPoolState:
+           codes: jax.Array | None = None,
+           attrs: jax.Array | None = None) -> SlabPoolState:
     """Batched ingest. ``vecs`` [B, D], ``ext_ids`` [B] (-1 rows = padding).
 
     ``lists`` may pre-route vectors (distributed ingestion reuses the
     router's assignment); otherwise the coarse quantizer assigns. With
     ``cfg.pq``, ``codes`` may carry pre-encoded codewords (resharding);
-    otherwise the batch encodes on ingest.
+    otherwise the batch encodes on ingest. With ``cfg.attributes``,
+    ``attrs`` [B, n_attrs] stamps filter attributes (zeros when omitted).
     """
     if lists is None:
         lists = quantizer.assign(state.centroids, vecs.astype(cfg.dtype),
                                  cfg.metric)
-    return _insert_impl(cfg, state, vecs, ext_ids, lists, codes)
+    return _insert_impl(cfg, state, vecs, ext_ids, lists, codes, attrs)
 
 
 # ---------------------------------------------------------------------------
@@ -359,7 +380,7 @@ def _delete_impl(cfg: SIVFConfig, state: SlabPoolState, ext_ids: jax.Array
         att_slot=state.att_slot, n_live=n_live, error=state.error,
         centroids=state.centroids, tables=tables, table_len=table_len,
         table_pos=table_pos, codes=state.codes,
-        pq_codebooks=state.pq_codebooks)
+        pq_codebooks=state.pq_codebooks, attrs=state.attrs)
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
@@ -401,8 +422,26 @@ def gather_tables(cfg: SIVFConfig, state: SlabPoolState, lists: jax.Array
     return t.reshape(q, -1)
 
 
+def _filter_mask(cfg: SIVFConfig, state: SlabPoolState, sc: jax.Array,
+                 fstruct: tuple | None, fconsts: jax.Array | None
+                 ) -> jax.Array | None:
+    """Per-slot predicate mask for one gathered slab column (XLA paths).
+
+    ``sc`` [Q] clipped slab ids -> bool [Q, C] (or None when unfiltered).
+    Same ``filters.eval_structure`` recursion the Pallas kernels run; the
+    structure is static (jit key), the constants are traced.
+    """
+    if fstruct is None:
+        return None
+    at = state.attrs[sc]                                      # [Q, C, A]
+    return flt.eval_structure(
+        fstruct, lambda j: at[..., j], lambda i: fconsts[i])
+
+
 def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
-                    table: jax.Array, k: int
+                    table: jax.Array, k: int,
+                    fstruct: tuple | None = None,
+                    fconsts: jax.Array | None = None
                     ) -> tuple[jax.Array, jax.Array]:
     """Validity-masked distance scan + streaming top-k (XLA path).
 
@@ -410,6 +449,10 @@ def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
     [Q, k] result, the jnp analogue of Alg. 3's per-lane register top-k.
     The fused Pallas kernel (kernels/sivf_scan/fused.py) is the TPU
     analogue and matches this reference bit-for-bit, ties included.
+    ``fstruct``/``fconsts`` (core/filters.py) AND a per-slot predicate mask
+    into the validity mask *before* the fold — filtered-out candidates
+    score +inf / label -1, exactly like deleted slots, so they can never
+    displace passing rows from the top-k.
     """
     qn = queries.shape[0]
     qf = queries.astype(jnp.float32)
@@ -421,6 +464,9 @@ def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
         x = state.data[sc].astype(jnp.float32)                # [Q, C, D]
         vb = bm.unpack_batch(state.bitmap[sc], cfg.capacity)  # [Q, C]
         ok = vb & (slab_col >= 0)[:, None]
+        pm = _filter_mask(cfg, state, sc, fstruct, fconsts)
+        if pm is not None:
+            ok = ok & pm
         dot = jnp.einsum("qd,qcd->qc", qf, x)
         if cfg.metric == "l2":
             d = qq[:, None] - 2.0 * dot + state.norms[sc]
@@ -442,7 +488,9 @@ def scan_slabs_topk(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
 
 def scan_slabs_topk_pq(cfg: SIVFConfig, state: SlabPoolState,
                        queries: jax.Array, table: jax.Array, k: int,
-                       adc: jax.Array | None = None
+                       adc: jax.Array | None = None,
+                       fstruct: tuple | None = None,
+                       fconsts: jax.Array | None = None
                        ) -> tuple[jax.Array, jax.Array]:
     """ADC scan + streaming top-k over PQ-compressed slabs (XLA path).
 
@@ -479,6 +527,9 @@ def scan_slabs_topk_pq(cfg: SIVFConfig, state: SlabPoolState,
             d = t_s if d is None else d + t_s                 # [Q, C]
         vb = bm.unpack_batch(state.bitmap[sc], cfg.capacity)  # [Q, C]
         ok = vb & (slab_col >= 0)[:, None]
+        pm = _filter_mask(cfg, state, sc, fstruct, fconsts)
+        if pm is not None:
+            ok = ok & pm
         d = jnp.where(ok, d, jnp.inf)
         lab = jnp.where(ok, state.ids[sc], -1)
         alld = jnp.concatenate([bd, d], axis=1)               # [Q, k+C]
@@ -497,7 +548,9 @@ SEARCH_IMPLS = ("xla", "pallas", "pallas_interpret")
 
 
 def _scan_dispatch(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
-                   table: jax.Array, k: int, impl: str, block_q: int
+                   table: jax.Array, k: int, impl: str, block_q: int,
+                   fstruct: tuple | None = None,
+                   fconsts: jax.Array | None = None
                    ) -> tuple[jax.Array, jax.Array]:
     """Route a gathered slab table through one scan->top-k backend.
 
@@ -510,22 +563,40 @@ def _scan_dispatch(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
     (``scan_slabs_topk_pq`` / kernels/sivf_scan/pq_fused.py): the uint8
     code plane replaces the fp32 payload DMA and distances are table-lookup
     sums against per-query ADC tables held in VMEM.
+
+    ``fstruct``/``fconsts`` (a compiled predicate, core/filters.py) thread
+    the same per-slot mask into every backend: the XLA references AND it
+    into their validity mask, the Pallas kernels read the constants from a
+    second scalar-prefetch operand in SMEM and mask before the top-k fold.
     """
+    if fstruct is not None and cfg.n_attrs == 0:
+        raise ValueError("filtered search needs SIVFConfig(attributes=...)")
     if cfg.pq is not None and impl in SEARCH_IMPLS:
         # one ADC table build serves whichever backend scores with it
         adc = pqmod.adc_tables(state.pq_codebooks,
                                queries.astype(jnp.float32), cfg.metric)
         if impl == "xla":
-            return scan_slabs_topk_pq(cfg, state, queries, table, k, adc=adc)
+            return scan_slabs_topk_pq(cfg, state, queries, table, k, adc=adc,
+                                      fstruct=fstruct, fconsts=fconsts)
         from repro.kernels.sivf_scan.pq_fused import (
             sivf_pq_fused_search_pallas,
         )
         return sivf_pq_fused_search_pallas(
             adc, table, state.codes, state.ids, state.bitmap, k,
-            block_q=block_q, interpret=impl == "pallas_interpret")
+            block_q=block_q, interpret=impl == "pallas_interpret",
+            attrs=state.attrs if fstruct is not None else None,
+            fstruct=fstruct, fconsts=fconsts)
     if impl == "xla":
-        return scan_slabs_topk(cfg, state, queries, table, k)
+        return scan_slabs_topk(cfg, state, queries, table, k,
+                               fstruct=fstruct, fconsts=fconsts)
     if impl in ("pallas", "pallas_interpret"):
+        if fstruct is not None:
+            from repro.kernels.sivf_scan.fused import sivf_fused_search_pallas
+            return sivf_fused_search_pallas(
+                queries.astype(jnp.float32), table, state.data, state.ids,
+                state.norms, state.bitmap, k, metric=cfg.metric,
+                block_q=block_q, interpret=impl == "pallas_interpret",
+                attrs=state.attrs, fstruct=fstruct, fconsts=fconsts)
         from repro.kernels.sivf_scan import ops as scan_ops
         return scan_ops.sivf_fused_search(
             queries.astype(jnp.float32), table, state.data, state.ids,
@@ -536,20 +607,25 @@ def _scan_dispatch(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
 
 def _search_impl(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
                  k: int, nprobe: int, use_tables: bool | None, impl: str,
-                 block_q: int) -> tuple[jax.Array, jax.Array]:
+                 block_q: int, fstruct: tuple | None = None,
+                 fconsts: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
     """Un-jitted search body, shared by `search` and distributed shards."""
     ut = cfg.track_tables if use_tables is None else use_tables
     lists = quantizer.probe(state.centroids, queries.astype(cfg.dtype),
                             nprobe, cfg.metric)
     table = (gather_tables if ut else walk_chains)(cfg, state, lists)
-    return _scan_dispatch(cfg, state, queries, table, k, impl, block_q)
+    return _scan_dispatch(cfg, state, queries, table, k, impl, block_q,
+                          fstruct=fstruct, fconsts=fconsts)
 
 
 @partial(jax.jit, static_argnames=("cfg", "k", "nprobe", "use_tables",
-                                   "impl", "block_q"))
+                                   "impl", "block_q", "fstruct"))
 def search(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
            k: int, nprobe: int, use_tables: bool | None = None,
-           impl: str = "xla", block_q: int = 8
+           impl: str = "xla", block_q: int = 8,
+           fstruct: tuple | None = None,
+           fconsts: jax.Array | None = None
            ) -> tuple[jax.Array, jax.Array]:
     """Top-k search. queries [Q, D] -> (distances [Q, k], labels [Q, k]).
 
@@ -559,9 +635,14 @@ def search(cfg: SIVFConfig, state: SlabPoolState, queries: jax.Array,
     dry-run), "pallas" (fused TPU kernel), or "pallas_interpret" (the fused
     kernel under the Pallas interpreter). ``block_q`` is the fused kernel's
     query-tile height.
+
+    ``fstruct``/``fconsts`` come from ``filters.compile_filter``: the
+    structure is a *static* argument (one executable per filter shape), the
+    constants are traced (changing ``Eq("tenant", 3)`` to ``..., 7`` hits
+    the same executable).
     """
     return _search_impl(cfg, state, queries, k, nprobe, use_tables, impl,
-                        block_q)
+                        block_q, fstruct=fstruct, fconsts=fconsts)
 
 
 # ---------------------------------------------------------------------------
@@ -579,7 +660,8 @@ def _memory_stats(cfg: SIVFConfig, n_shards: int = 1) -> dict:
     from repro.core.state import memory_report
     mr = memory_report(cfg)
     out = {"payload_bytes": mr["payload_bytes"] * n_shards,
-           "code_bytes": mr["code_bytes"] * n_shards}
+           "code_bytes": mr["code_bytes"] * n_shards,
+           "attr_bytes": mr["attr_bytes"] * n_shards}
     if cfg.pq is not None:
         out["compression_ratio"] = mr["compression_ratio"]
     return out

@@ -41,6 +41,8 @@ class SIVFConfig:
     track_tables: bool = True      # dense list->slab tables (DESIGN.md §2)
     dtype: jnp.dtype = jnp.float32
     pq: PQConfig | None = None     # product-quantized slab payloads (core/pq.py)
+    attributes: tuple[str, ...] = ()  # named int32 filter attributes
+    #                                   (core/filters.py; order = plane column)
 
     def __post_init__(self):
         bm.n_words(self.capacity)  # validates capacity
@@ -49,6 +51,12 @@ class SIVFConfig:
         if self.pq is not None and self.dim % self.pq.m:
             raise ValueError(
                 f"dim {self.dim} not divisible by pq.m {self.pq.m}")
+        attrs = tuple(self.attributes)
+        if len(set(attrs)) != len(attrs) or any(
+                not (a and isinstance(a, str)) for a in attrs):
+            raise ValueError(
+                f"attributes must be unique non-empty names, got {attrs}")
+        object.__setattr__(self, "attributes", attrs)
 
     @property
     def words(self) -> int:
@@ -69,6 +77,11 @@ class SIVFConfig:
         """Width of the uint8 ``codes`` plane (0 when PQ is disabled)."""
         return self.pq.m if self.pq is not None else 0
 
+    @property
+    def n_attrs(self) -> int:
+        """Width of the int32 ``attrs`` plane (0 when filtering is off)."""
+        return len(self.attributes)
+
 
 @partial(
     jax.tree_util.register_dataclass,
@@ -76,7 +89,7 @@ class SIVFConfig:
         "data", "ids", "norms", "bitmap", "nxt", "prv", "owner", "cursor",
         "live", "heads", "free_stack", "free_top", "att_slab", "att_slot",
         "n_live", "error", "centroids", "tables", "table_len", "table_pos",
-        "codes", "pq_codebooks",
+        "codes", "pq_codebooks", "attrs",
     ],
     meta_fields=[],
 )
@@ -116,6 +129,12 @@ class SlabPoolState:
     # product-quantization planes (core/pq.py; zero-width when cfg.pq=None)
     codes: jax.Array       # [n_slabs, C, code_m] uint8 PQ codewords
     pq_codebooks: jax.Array  # [m, ksub, dim//m] f32 trained codebooks
+    # filter-attribute plane (core/filters.py; zero-width when no attributes).
+    # NOTE: keep this the LAST registered data field — checkpoint-format
+    # migration (core/api.py Index.load) maps older formats by how many
+    # trailing leaves they lack (format 1: codes/pq_codebooks/attrs,
+    # format 2: attrs).
+    attrs: jax.Array       # [n_slabs, C, n_attrs] int32 attribute stamps
 
 
 ERR_POOL_EXHAUSTED = 1
@@ -183,6 +202,7 @@ def init_state(cfg: SIVFConfig, centroids: jax.Array,
         table_pos=jnp.full((ns,), -1, jnp.int32),
         codes=jnp.zeros((ns, c, cfg.code_m), jnp.uint8),
         pq_codebooks=cb,
+        attrs=jnp.zeros((ns, c, cfg.n_attrs), jnp.int32),
     )
 
 
@@ -207,11 +227,16 @@ def memory_report(cfg: SIVFConfig) -> dict:
     With ``cfg.pq`` set, the per-vector payload is the uint8 code plane
     (plus the raw plane only when ``store_raw``); ``compression_ratio``
     reports pool payload bytes at fp32 over the stored payload+code bytes.
+    Filter attributes (``cfg.attributes``) are stored raw on both sides of
+    that ratio — they appear in the raw-equivalent row exactly as in the
+    stored row, so enabling filtering never inflates the apparent
+    compression.
     """
     slots = cfg.n_slabs * cfg.capacity
     payload = slots * cfg.payload_dim * jnp.dtype(cfg.dtype).itemsize
     codes = slots * cfg.code_m
-    raw_equiv = slots * cfg.dim * jnp.dtype(cfg.dtype).itemsize
+    attrs = slots * cfg.n_attrs * 4
+    raw_equiv = slots * cfg.dim * jnp.dtype(cfg.dtype).itemsize + attrs
     codebooks = 0
     if cfg.pq is not None:
         codebooks = cfg.pq.m * cfg.pq.ksub * (cfg.dim // cfg.pq.m) * 4
@@ -223,12 +248,13 @@ def memory_report(cfg: SIVFConfig) -> dict:
     stack = cfg.n_slabs * 4
     tables = (cfg.n_lists * cfg.max_chain + cfg.n_lists + cfg.n_slabs) * 4 \
         if cfg.track_tables else 0
-    stored = payload + codes
+    stored = payload + codes + attrs
     total = stored + codebooks + ids + norms + headers + att + heads + stack \
         + tables
     return {
         "payload_bytes": int(payload),
         "code_bytes": int(codes),
+        "attr_bytes": int(attrs),
         "codebook_bytes": int(codebooks),
         "compression_ratio": float(raw_equiv / stored) if stored else 1.0,
         "metadata_bytes": int(total - stored),

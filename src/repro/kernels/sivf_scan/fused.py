@@ -91,8 +91,32 @@ def fold_topk(outd_ref, outl_ref, qj, d, lab, *, capacity: int, k: int
     jax.lax.fori_loop(0, k, body, cd)
 
 
-def _kernel(table_ref, q_ref, data_ref, ids_ref, norms_ref, bitmap_ref,
-            outd_ref, outl_ref, *, capacity: int, k: int, metric: str):
+def predicate_mask(attrs_ref, consts_ref, fstruct: tuple) -> jax.Array:
+    """Evaluate a compiled filter over one slab's attribute tile.
+
+    ``attrs_ref`` holds the slab's attributes *pre-transposed* to
+    ``[1, A, C]`` so each attribute row is a native lane-major ``[1, C]``
+    vector (no in-kernel relayout); the filter constants live in SMEM via
+    the second scalar-prefetch operand. Same ``filters.eval_structure``
+    recursion as the XLA references and the host oracle -> identical masks.
+    """
+    from repro.core.filters import eval_structure
+    at = attrs_ref[0]                                   # [A, C] int32
+    return eval_structure(
+        fstruct,
+        lambda j: at[j:j + 1, :],                       # [1, C]
+        lambda i: consts_ref[i])
+
+
+def _kernel(table_ref, *refs, capacity: int, k: int, metric: str,
+            fstruct: tuple | None = None):
+    if fstruct is None:
+        (q_ref, data_ref, ids_ref, norms_ref, bitmap_ref,
+         outd_ref, outl_ref) = refs
+        consts_ref = attrs_ref = None
+    else:
+        (consts_ref, q_ref, data_ref, ids_ref, norms_ref, attrs_ref,
+         bitmap_ref, outd_ref, outl_ref) = refs
     qj = pl.program_id(1)                               # query within tile
     ti = pl.program_id(2)                               # slab within chain
     bq = pl.num_programs(1)
@@ -120,6 +144,10 @@ def _kernel(table_ref, q_ref, data_ref, ids_ref, norms_ref, bitmap_ref,
         d = -dot
 
     valid = _unpack_bitmap(bitmap_ref[...], capacity) & (slab >= 0)
+    if fstruct is not None:
+        # filtered-out slots fail exactly like deleted slots (+inf / -1):
+        # they can never displace a passing candidate from the top-k
+        valid &= predicate_mask(attrs_ref, consts_ref, fstruct)
     d = jnp.where(valid, d, jnp.inf)
     lab = jnp.where(valid, ids_ref[...], -1)
 
@@ -131,17 +159,28 @@ def sivf_fused_search_pallas(queries: jax.Array, table: jax.Array,
                              data: jax.Array, ids: jax.Array,
                              norms: jax.Array, bitmap: jax.Array, k: int,
                              metric: str = "l2", block_q: int = 8,
-                             interpret: bool = False
+                             interpret: bool = False,
+                             attrs: jax.Array | None = None,
+                             fstruct: tuple | None = None,
+                             fconsts: jax.Array | None = None
                              ) -> tuple[jax.Array, jax.Array]:
     """queries [Q,D], table [Q,T] -> (dists [Q,k], labels [Q,k]).
 
     Never materializes the [Q, T*C] candidate matrix; ragged Q is handled
     by padding to a block_q multiple with -1 slab rows (masked to +inf).
+
+    With ``fstruct`` set (a compiled predicate structure from
+    ``core.filters``), ``attrs`` ``[n_slabs, C, A]`` rides as one more
+    slab-indexed operand (transposed here to ``[n_slabs, A, C]`` so the
+    kernel reads lane-major attribute rows) and ``fconsts`` becomes a
+    *second* scalar-prefetch operand — filter constants are data in SMEM,
+    so every predicate of the same structure shares this one kernel.
     """
     qn, d_dim = queries.shape
     t = table.shape[1]
     _, c, _ = data.shape
     w = bitmap.shape[1]
+    filtered = fstruct is not None
 
     bq = max(1, min(block_q, qn))
     pad = (-qn) % bq
@@ -154,28 +193,43 @@ def sivf_fused_search_pallas(queries: jax.Array, table: jax.Array,
 
     grid = (qp // bq, bq, t)
 
-    def slab_ix(qt, qj, ti, tab):
+    def slab_ix(qt, qj, ti, tab, *_):
         return (jnp.maximum(tab[(qt * bq + qj) * t + ti], 0), 0, 0)
 
-    def slab_ix2(qt, qj, ti, tab):
+    def slab_ix2(qt, qj, ti, tab, *_):
         return (jnp.maximum(tab[(qt * bq + qj) * t + ti], 0), 0)
 
+    def q_ix(qt, qj, ti, *_):
+        return (qt, 0)
+
+    in_specs = [
+        pl.BlockSpec((bq, d_dim), q_ix),                             # q
+        pl.BlockSpec((1, c, d_dim), slab_ix),                        # data
+        pl.BlockSpec((1, c), slab_ix2),                              # ids
+        pl.BlockSpec((1, c), slab_ix2),                              # norms
+    ]
+    operands = [queries, data, ids, norms]
+    if filtered:
+        a = attrs.shape[-1]
+        in_specs.append(pl.BlockSpec((1, a, c), slab_ix))            # attrs
+        operands.append(attrs.swapaxes(1, 2))         # [n_slabs, A, C]
+    in_specs.append(pl.BlockSpec((1, w), slab_ix2))                  # bitmap
+    operands.append(bitmap)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if filtered else 1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, d_dim), lambda qt, qj, ti, tab: (qt, 0)),  # q
-            pl.BlockSpec((1, c, d_dim), slab_ix),                        # data
-            pl.BlockSpec((1, c), slab_ix2),                              # ids
-            pl.BlockSpec((1, c), slab_ix2),                              # norms
-            pl.BlockSpec((1, w), slab_ix2),                              # bitmap
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((bq, k), lambda qt, qj, ti, tab: (qt, 0)),
-            pl.BlockSpec((bq, k), lambda qt, qj, ti, tab: (qt, 0)),
+            pl.BlockSpec((bq, k), q_ix),
+            pl.BlockSpec((bq, k), q_ix),
         ],
     )
-    kernel = functools.partial(_kernel, capacity=c, k=k, metric=metric)
+    kernel = functools.partial(_kernel, capacity=c, k=k, metric=metric,
+                               fstruct=fstruct)
+    prefetch = [table.reshape(-1)]
+    if filtered:
+        prefetch.append(fconsts.astype(jnp.int32))
     dists, labels = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -186,5 +240,5 @@ def sivf_fused_search_pallas(queries: jax.Array, table: jax.Array,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(table.reshape(-1), queries, data, ids, norms, bitmap)
+    )(*prefetch, *operands)
     return dists[:qn], labels[:qn]

@@ -37,12 +37,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.sivf_scan.fused import _unpack_bitmap, fold_topk
+from repro.kernels.sivf_scan.fused import (
+    _unpack_bitmap,
+    fold_topk,
+    predicate_mask,
+)
 
 
-def _pq_kernel(table_ref, adc_ref, codes_ref, ids_ref, bitmap_ref,
-               outd_ref, outl_ref, *, capacity: int, k: int, m: int,
-               ksub: int):
+def _pq_kernel(table_ref, *refs, capacity: int, k: int, m: int,
+               ksub: int, fstruct: tuple | None = None):
+    if fstruct is None:
+        (adc_ref, codes_ref, ids_ref, bitmap_ref,
+         outd_ref, outl_ref) = refs
+        consts_ref = attrs_ref = None
+    else:
+        (consts_ref, adc_ref, codes_ref, ids_ref, attrs_ref, bitmap_ref,
+         outd_ref, outl_ref) = refs
     qj = pl.program_id(1)                               # query within tile
     ti = pl.program_id(2)                               # slab within chain
     bq = pl.num_programs(1)
@@ -72,6 +82,9 @@ def _pq_kernel(table_ref, adc_ref, codes_ref, ids_ref, bitmap_ref,
         d = term if d is None else d + term
 
     valid = _unpack_bitmap(bitmap_ref[...], capacity) & (slab >= 0)
+    if fstruct is not None:
+        # filtered-out slots fail exactly like deleted slots (+inf / -1)
+        valid &= predicate_mask(attrs_ref, consts_ref, fstruct)
     d = jnp.where(valid, d, jnp.inf)
     lab = jnp.where(valid, ids_ref[...], -1)
 
@@ -81,18 +94,27 @@ def _pq_kernel(table_ref, adc_ref, codes_ref, ids_ref, bitmap_ref,
 def sivf_pq_fused_search_pallas(adc: jax.Array, table: jax.Array,
                                 codes: jax.Array, ids: jax.Array,
                                 bitmap: jax.Array, k: int, block_q: int = 8,
-                                interpret: bool = False
+                                interpret: bool = False,
+                                attrs: jax.Array | None = None,
+                                fstruct: tuple | None = None,
+                                fconsts: jax.Array | None = None
                                 ) -> tuple[jax.Array, jax.Array]:
     """adc [Q, m, ksub], table [Q, T] -> (dists [Q, k], labels [Q, k]).
 
     ``adc`` comes from ``core.pq.adc_tables`` (already metric-shaped, so
     the kernel itself is metric-agnostic); ragged Q pads to a ``block_q``
     multiple with -1 slab rows (masked to +inf) and zero ADC rows.
+
+    ``attrs``/``fstruct``/``fconsts`` add the compiled-predicate mask
+    exactly as in ``fused.sivf_fused_search_pallas``: attributes become a
+    slab-indexed ``[1, A, C]`` operand, constants a second scalar-prefetch
+    SMEM vector, and filtered-out slots mask before the top-k fold.
     """
     qn, m, ksub = adc.shape
     t = table.shape[1]
     _, c, _ = codes.shape
     w = bitmap.shape[1]
+    filtered = fstruct is not None
     adc = adc.reshape(qn, m * ksub)                     # row-major [s, j]
 
     bq = max(1, min(block_q, qn))
@@ -106,27 +128,42 @@ def sivf_pq_fused_search_pallas(adc: jax.Array, table: jax.Array,
 
     grid = (qp // bq, bq, t)
 
-    def slab_ix(qt, qj, ti, tab):
+    def slab_ix(qt, qj, ti, tab, *_):
         return (jnp.maximum(tab[(qt * bq + qj) * t + ti], 0), 0, 0)
 
-    def slab_ix2(qt, qj, ti, tab):
+    def slab_ix2(qt, qj, ti, tab, *_):
         return (jnp.maximum(tab[(qt * bq + qj) * t + ti], 0), 0)
 
+    def q_ix(qt, qj, ti, *_):
+        return (qt, 0)
+
+    in_specs = [
+        pl.BlockSpec((bq, m * ksub), q_ix),
+        pl.BlockSpec((1, c, m), slab_ix),                        # codes
+        pl.BlockSpec((1, c), slab_ix2),                          # ids
+    ]
+    operands = [adc, codes, ids]
+    if filtered:
+        a = attrs.shape[-1]
+        in_specs.append(pl.BlockSpec((1, a, c), slab_ix))        # attrs
+        operands.append(attrs.swapaxes(1, 2))     # [n_slabs, A, C]
+    in_specs.append(pl.BlockSpec((1, w), slab_ix2))              # bitmap
+    operands.append(bitmap)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if filtered else 1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, m * ksub), lambda qt, qj, ti, tab: (qt, 0)),
-            pl.BlockSpec((1, c, m), slab_ix),                        # codes
-            pl.BlockSpec((1, c), slab_ix2),                          # ids
-            pl.BlockSpec((1, w), slab_ix2),                          # bitmap
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((bq, k), lambda qt, qj, ti, tab: (qt, 0)),
-            pl.BlockSpec((bq, k), lambda qt, qj, ti, tab: (qt, 0)),
+            pl.BlockSpec((bq, k), q_ix),
+            pl.BlockSpec((bq, k), q_ix),
         ],
     )
-    kernel = functools.partial(_pq_kernel, capacity=c, k=k, m=m, ksub=ksub)
+    kernel = functools.partial(_pq_kernel, capacity=c, k=k, m=m, ksub=ksub,
+                               fstruct=fstruct)
+    prefetch = [table.reshape(-1)]
+    if filtered:
+        prefetch.append(fconsts.astype(jnp.int32))
     dists, labels = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -137,5 +174,5 @@ def sivf_pq_fused_search_pallas(adc: jax.Array, table: jax.Array,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(table.reshape(-1), adc, codes, ids, bitmap)
+    )(*prefetch, *operands)
     return dists[:qn], labels[:qn]

@@ -1,9 +1,15 @@
-"""Batched serving engine over the slab-paged KV cache.
+"""Batched LM serving engine over the slab-paged KV cache.
 
 Decoder-only archs (all assigned archs except whisper-base, whose cross
 cache lives in the dense path). Requests are admitted via prefill, decoded
 in lockstep batches, and evicted / window-slid in O(1) — the paper's
 streaming lifecycle (ingest / search / evict) at the KV-cache level.
+
+Formerly ``repro.serve.engine.ServeEngine``; renamed to
+:class:`PagedLMEngine` when ``sivf_engine.ServeEngine`` (the vector-search
+serve front door, the surface ``sivf.ServeEngine`` exports) took the
+name. This module is the *token-decode* side of the streaming story and
+is independent of the SIVF index path.
 """
 from __future__ import annotations
 
@@ -22,7 +28,7 @@ from repro.sharding.rules import ShardPlan
 from repro.utils import ceil_div
 
 
-class ServeEngine:
+class PagedLMEngine:
     def __init__(self, cfg: ModelConfig, plan: ShardPlan, params,
                  page_size: int = 16, n_pages: int = 128,
                  max_seqs: int = 4, max_pages_per_seq: int = 32,

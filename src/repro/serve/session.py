@@ -20,6 +20,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.api import MutationReport
+from repro.core.filters import CompiledFilter
 
 
 class ServeFuture:
@@ -74,6 +75,9 @@ class SearchRequest:
     nprobe: int
     future: ServeFuture
     t_submit: float
+    # effective compiled predicate (tenant-mandatory AND user filter);
+    # requests coalesce only within an identical (k, nprobe, cfilter)
+    cfilter: CompiledFilter | None = None
 
 
 @dataclasses.dataclass
@@ -84,6 +88,9 @@ class MutationRequest:
     ids: np.ndarray            # [B] int32
     future: ServeFuture
     t_submit: float
+    # dense [B, n_attrs] int32, already normalized + tenant-stamped at
+    # submit time (None when the index has no attributes / on remove)
+    attrs: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,14 +136,25 @@ class ClientSession:
         self.tenant = tenant
 
     def search(self, queries, k: int | None = None,
-               nprobe: int | None = None) -> ServeFuture:
-        """Submit a search; resolves to :class:`ServeSearchResult`."""
-        return self._engine.submit_search(self.tenant, queries, k=k,
-                                          nprobe=nprobe)
+               nprobe: int | None = None, filter=None) -> ServeFuture:
+        """Submit a search; resolves to :class:`ServeSearchResult`.
 
-    def add(self, vecs, ids) -> ServeFuture:
-        """Submit an ingest batch; resolves to :class:`ServeMutationResult`."""
-        return self._engine.submit_add(self.tenant, vecs, ids)
+        ``filter`` is a ``repro.core.filters`` predicate; if the engine
+        pins a mandatory filter for this tenant the two are AND-ed — the
+        tenant's filter can be narrowed, never escaped.
+        """
+        return self._engine.submit_search(self.tenant, queries, k=k,
+                                          nprobe=nprobe, filter=filter)
+
+    def add(self, vecs, ids, attrs=None) -> ServeFuture:
+        """Submit an ingest batch; resolves to :class:`ServeMutationResult`.
+
+        With configured attributes, ``attrs`` follows ``Index.add`` (dict
+        or ``[B, n_attrs]`` array); attributes the tenant's mandatory
+        filter pins with ``Eq`` are force-stamped by the engine and may be
+        omitted here.
+        """
+        return self._engine.submit_add(self.tenant, vecs, ids, attrs=attrs)
 
     def remove(self, ids) -> ServeFuture:
         """Submit an eviction batch; resolves to

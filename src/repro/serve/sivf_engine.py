@@ -19,12 +19,19 @@ scheduler owns the device, clients only touch queues and futures):
     only thread that touches the index. JAX device work executes in
     dispatch order, so the scheduler's ordering decisions *are* the
     consistency story.
-  * **Coalesced query batching.** Queued searches sharing ``(k, nprobe)``
-    concatenate into one tile (capped at ``max_coalesce`` rows) and ride
-    one fused-kernel call; ``Index.search`` pads the tile to the PR 2
-    power-of-two query buckets, so executable counts stay bounded by
-    ``#buckets x #(k, nprobe) groups`` — :meth:`assert_bounded_compiles`
-    checks the observed jit cache against that bound.
+  * **Coalesced query batching.** Queued searches sharing
+    ``(k, nprobe, filter)`` concatenate into one tile (capped at
+    ``max_coalesce`` rows) and ride one fused-kernel call;
+    ``Index.search`` pads the tile to the PR 2 power-of-two query
+    buckets, so executable counts stay bounded by ``#buckets x
+    #(k, nprobe, filter-structure) groups`` — filter constants never
+    mint an executable — and :meth:`assert_bounded_compiles` checks the
+    observed jit cache against that bound.
+  * **Mandatory tenant filters.** ``tenant_filters={tenant: predicate}``
+    AND-s the predicate into every search the tenant submits and
+    force-stamps its ``Eq``-pinned attributes onto the tenant's ingested
+    rows — isolation holds on the read *and* write paths (see
+    docs/filtering.md).
   * **Epoch-consistent mutation interleaving.** Mutations are admitted
     through the ``deferred=True`` pipeline (fire-and-forget submits, one
     packed sync per flush). Each dispatched batch bumps ``Index.epoch``;
@@ -50,6 +57,7 @@ from collections import deque
 import jax
 import numpy as np
 
+from repro.core import filters as flt
 from repro.core.api import Index
 from repro.serve.quota import (
     Backpressure,
@@ -88,6 +96,16 @@ class ServeEngine:
     flush_every:  flush the deferred mutation queue once this many
                   batches are pending (the queue also flushes whenever
                   the engine goes idle, and at drain).
+    tenant_filters: ``{tenant: predicate}`` *mandatory* filters
+                  (``repro.core.filters``). Every search from a listed
+                  tenant is AND-ed with its predicate — a client filter
+                  can narrow but never escape it — and every attribute
+                  the predicate pins with ``Eq`` (e.g. a tenant id) is
+                  force-stamped onto that tenant's ingested rows, so a
+                  listed tenant can neither read nor write outside its
+                  slice. (``remove`` stays id-addressed; partition the id
+                  space per tenant if eviction isolation matters too.)
+                  Requires ``SIVFConfig(attributes=...)``.
     clock:        injectable monotonic clock (tests drive quota refill
                   deterministically).
     """
@@ -97,7 +115,9 @@ class ServeEngine:
                  quota: TenantQuota | None = None,
                  quotas: "dict[str, TenantQuota] | None" = None,
                  max_queue: int = 1024, max_coalesce: int = 256,
-                 flush_every: int = 8, clock=time.monotonic):
+                 flush_every: int = 8,
+                 tenant_filters: "dict | None" = None,
+                 clock=time.monotonic):
         if not isinstance(index, Index):
             raise TypeError(f"index must be a sivf.Index, got {index!r}")
         if not index.deferred:
@@ -121,6 +141,14 @@ class ServeEngine:
         self._max_coalesce = int(max_coalesce)
         self._flush_every = int(flush_every)
         self._clock = clock
+        # mandatory per-tenant filters: compile eagerly so a bad predicate
+        # (unknown attribute, no attributes configured) fails construction,
+        # not some later search; Eq-pinned values become ingest overrides
+        self._tenant_filters = dict(tenant_filters or {})
+        self._tenant_stamps: dict[str, dict[str, int]] = {}
+        for tenant, pred in self._tenant_filters.items():
+            flt.compile_filter(pred, index.cfg.attributes)
+            self._tenant_stamps[tenant] = flt.eq_bindings(pred)
 
         self._cv = threading.Condition()
         self._queue: deque = deque()
@@ -176,8 +204,21 @@ class ServeEngine:
             st.reject(BackpressureKind.QUEUE_FULL, tenant,
                       f"engine queue at max_queue={self._max_queue}")
 
+    def _effective_filter(self, tenant: str, filter):
+        """AND the tenant's mandatory predicate (if any) with the request's
+        own, compiled once at submit so bad filters raise in the client
+        thread and equal filters coalesce by value downstream."""
+        mandatory = self._tenant_filters.get(tenant)
+        if mandatory is None:
+            pred = filter
+        elif filter is None:
+            pred = mandatory
+        else:
+            pred = flt.And(mandatory, filter)
+        return flt.compile_filter(pred, self._index.cfg.attributes)
+
     def submit_search(self, tenant: str, queries, *, k: int | None = None,
-                      nprobe: int | None = None) -> ServeFuture:
+                      nprobe: int | None = None, filter=None) -> ServeFuture:
         """Validate + enqueue a search; returns a future, never blocks."""
         q = np.asarray(queries, np.float32)
         if q.ndim == 1:
@@ -189,6 +230,7 @@ class ServeEngine:
         nprobe = self._default_nprobe if nprobe is None else nprobe
         n_lists = self._index.cfg.n_lists
         nprobe = n_lists if nprobe is None else min(int(nprobe), n_lists)
+        cfilter = self._effective_filter(tenant, filter)
         with self._cv:
             st = self._tenant_state(tenant)
             self._check_open_and_capacity(st, tenant)
@@ -196,7 +238,7 @@ class ServeEngine:
             fut = ServeFuture(on_done=lambda _f, s=st: self._release(s))
             self._queue.append(SearchRequest(
                 tenant=tenant, queries=q, k=k, nprobe=nprobe, future=fut,
-                t_submit=self._clock()))
+                t_submit=self._clock(), cfilter=cfilter))
             self._cv.notify()
         return fut
 
@@ -204,10 +246,10 @@ class ServeEngine:
         with self._cv:
             st.release_search()
 
-    def _submit_mutation(self, tenant: str, op: str, vecs, ids
-                         ) -> ServeFuture:
+    def _submit_mutation(self, tenant: str, op: str, vecs, ids,
+                         attrs=None) -> ServeFuture:
         ids_a = np.asarray(ids, np.int32).reshape(-1)
-        vecs_a = None
+        vecs_a = attrs_a = None
         if op == "add":
             vecs_a = np.asarray(vecs, np.float32)
             if vecs_a.ndim != 2 or vecs_a.shape[1] != self._index.cfg.dim:
@@ -216,6 +258,18 @@ class ServeEngine:
             if vecs_a.shape[0] != ids_a.shape[0]:
                 raise ValueError(
                     f"vecs {vecs_a.shape} / ids {ids_a.shape} mismatch")
+            if self._index.cfg.n_attrs:
+                # normalize in the client thread (errors raise at submit);
+                # Eq-pinned tenant attributes override whatever the client
+                # sent — a row can never escape its mandatory filter
+                attrs_a = flt.normalize_attrs(
+                    self._index.cfg.attributes, attrs,
+                    int(ids_a.shape[0]),
+                    overrides=self._tenant_stamps.get(tenant))
+            elif attrs is not None:
+                raise ValueError(
+                    "attrs= given but the served index has no "
+                    "SIVFConfig(attributes=...)")
         with self._cv:
             st = self._tenant_state(tenant)
             self._check_open_and_capacity(st, tenant)
@@ -223,13 +277,13 @@ class ServeEngine:
             fut = ServeFuture()
             self._queue.append(MutationRequest(
                 tenant=tenant, op=op, vecs=vecs_a, ids=ids_a, future=fut,
-                t_submit=self._clock()))
+                t_submit=self._clock(), attrs=attrs_a))
             self._cv.notify()
         return fut
 
-    def submit_add(self, tenant: str, vecs, ids) -> ServeFuture:
+    def submit_add(self, tenant: str, vecs, ids, attrs=None) -> ServeFuture:
         """Enqueue an ingest batch through the deferred pipeline."""
-        return self._submit_mutation(tenant, "add", vecs, ids)
+        return self._submit_mutation(tenant, "add", vecs, ids, attrs=attrs)
 
     def submit_remove(self, tenant: str, ids) -> ServeFuture:
         """Enqueue an eviction batch through the deferred pipeline."""
@@ -259,33 +313,38 @@ class ServeEngine:
             self._resolve_searches(dispatched)
 
     def _dispatch_searches(self, searches: list) -> list:
-        """Coalesce by (k, nprobe), dispatch each tile async, at the
-        *current* committed epoch — before this cycle's mutations."""
+        """Coalesce by (k, nprobe, compiled filter), dispatch each tile
+        async, at the *current* committed epoch — before this cycle's
+        mutations. Equal filters (same structure AND constants) share a
+        tile; the jit cache additionally collapses same-structure tiles
+        onto one executable."""
         groups: dict = {}
         for r in searches:
-            groups.setdefault((r.k, r.nprobe), []).append(r)
+            groups.setdefault((r.k, r.nprobe, r.cfilter), []).append(r)
         dispatched = []
         epoch = self._index.epoch
-        for (k, nprobe), reqs in sorted(groups.items()):
+        for (k, nprobe, cfilter), reqs in sorted(groups.items(), key=repr):
             chunk: list = []
             rows = 0
             for r in reqs + [None]:                # None terminates
                 nq = 0 if r is None else r.queries.shape[0]
                 if chunk and (r is None or rows + nq > self._max_coalesce):
-                    self._dispatch_tile(chunk, k, nprobe, epoch, dispatched)
+                    self._dispatch_tile(chunk, k, nprobe, cfilter, epoch,
+                                        dispatched)
                     chunk, rows = [], 0
                 if r is not None:
                     chunk.append(r)
                     rows += nq
         return dispatched
 
-    def _dispatch_tile(self, chunk: list, k: int, nprobe: int, epoch: int,
-                       dispatched: list) -> None:
+    def _dispatch_tile(self, chunk: list, k: int, nprobe: int, cfilter,
+                       epoch: int, dispatched: list) -> None:
         qmat = chunk[0].queries if len(chunk) == 1 else \
             np.concatenate([r.queries for r in chunk])
         t0 = self._clock()
         try:
-            res = self._index.search(qmat, k, nprobe)   # async dispatch
+            res = self._index.search(qmat, k, nprobe,
+                                     filter=cfilter)    # async dispatch
         except Exception as e:
             for r in chunk:
                 r.future.set_exception(e)
@@ -294,14 +353,16 @@ class ServeEngine:
         self._n_searches += len(chunk)
         self._coalesce_sizes.append(int(qmat.shape[0]))
         self._max_tile = max(self._max_tile, res.padded_to)
-        self._kn_groups.add((k, res.nprobe))
+        # executables are per filter STRUCTURE, not per constant set
+        self._kn_groups.add((k, res.nprobe,
+                             None if cfilter is None else cfilter.structure))
         dispatched.append((chunk, res, epoch, t0))
 
     def _dispatch_mutations(self, muts: list) -> None:
         for r in muts:
             try:
                 if r.op == "add":
-                    pending = self._index.add(r.vecs, r.ids)
+                    pending = self._index.add(r.vecs, r.ids, attrs=r.attrs)
                 else:
                     pending = self._index.remove(r.ids)
             except Exception as e:
@@ -410,7 +471,9 @@ class ServeEngine:
 
     def compile_bound(self) -> int:
         """Upper bound on search executables for the traffic served so far:
-        ``#pow2 query buckets up to the largest tile x #(k, nprobe)``."""
+        ``#pow2 query buckets up to the largest tile x #(k, nprobe,
+        filter-structure)`` groups — filter *constants* never mint an
+        executable, only distinct predicate shapes do."""
         max_tile = max(self._max_tile, self._index.min_bucket)
         buckets = len(self._index.bucket_shapes(max_tile))
         return buckets * max(1, len(self._kn_groups))
@@ -425,7 +488,7 @@ class ServeEngine:
         if observed > bound:
             raise AssertionError(
                 f"search executables {observed} exceed the coalescing bound "
-                f"{bound} ({len(self._kn_groups)} (k, nprobe) groups, max "
+                f"{bound} ({len(self._kn_groups)} (k, nprobe, filter) groups, max "
                 f"tile {self._max_tile})")
         return observed, bound
 
@@ -451,7 +514,7 @@ class ServeEngine:
             "pending_mutations": self._index.pending_count,
             "inflight_searches": inflight,
             "rejections": rejections,
-            "kn_groups": sorted(self._kn_groups),
+            "kn_groups": sorted(self._kn_groups, key=repr),
             "compiles": self._index.compile_stats(),
             "compile_bound": self.compile_bound(),
         }

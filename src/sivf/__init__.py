@@ -28,6 +28,14 @@ from repro.core.distributed import (  # noqa: F401
     reshard_state,
     search_stacked,
 )
+from repro.core.filters import (  # noqa: F401
+    And,
+    CompiledFilter,
+    Eq,
+    In,
+    Range,
+    compile_filter,
+)
 from repro.core.pq import PQConfig, train_pq  # noqa: F401
 from repro.core.quantizer import train_kmeans  # noqa: F401
 from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
@@ -44,10 +52,11 @@ from repro.serve.session import (  # noqa: F401
 from repro.serve.sivf_engine import ServeEngine  # noqa: F401
 
 __all__ = [
-    "Backpressure", "BackpressureKind", "ClientSession", "ErrorCode",
-    "Index", "IndexProtocol", "MutationRejected", "MutationReport",
-    "PendingReport", "PQConfig", "SearchResult", "ServeEngine",
-    "ServeMutationResult", "ServeSearchResult", "SIVFConfig",
-    "TenantQuota", "flatten_live_rows", "init_state", "memory_report",
-    "reshard_state", "search_stacked", "train_kmeans", "train_pq",
+    "And", "Backpressure", "BackpressureKind", "ClientSession",
+    "CompiledFilter", "Eq", "ErrorCode", "In", "Index", "IndexProtocol",
+    "MutationRejected", "MutationReport", "PendingReport", "PQConfig",
+    "Range", "SearchResult", "ServeEngine", "ServeMutationResult",
+    "ServeSearchResult", "SIVFConfig", "TenantQuota", "compile_filter",
+    "flatten_live_rows", "init_state", "memory_report", "reshard_state",
+    "search_stacked", "train_kmeans", "train_pq",
 ]

@@ -314,23 +314,25 @@ def test_save_load_roundtrip(tmp_path, rng):
 
 def test_load_format1_checkpoint(tmp_path, rng):
     """Pre-PQ (format-1) checkpoints lack the ``codes`` / ``pq_codebooks``
-    leaves; ``Index.load`` must restore them into the leaf prefix and fill
-    the (zero-width, since format 1 implies ``pq=None``) planes fresh."""
+    / ``attrs`` leaves; ``Index.load`` must restore them into the leaf
+    prefix and fill the (zero-width, since format 1 implies ``pq=None``
+    and no attributes) planes fresh."""
     from repro.checkpoint.manager import CheckpointManager
     idx, _ = make(rng)
     vecs = rng.normal(size=(60, D)).astype(np.float32)
     idx.add(vecs, np.arange(60))
     idx.save(tmp_path / "ckpt")
-    # rewrite the checkpoint as a format-1 save: drop the two PQ leaves
-    # (last two registered data fields) and the pq metadata keys
+    # rewrite the checkpoint as a format-1 save: drop the three trailing
+    # plane leaves (last registered data fields) and the newer metadata
     mgr = CheckpointManager(tmp_path / "ckpt", keep_last=1)
     meta = mgr.load_metadata("index")
     meta["format"] = 1
     meta.pop("pq_trained")
     meta["cfg"].pop("pq")
+    meta["cfg"].pop("attributes")
     mgr.save_metadata("index", meta)
     leaves, _ = jax.tree.flatten(idx.state)
-    mgr.save(0, leaves[:-2])
+    mgr.save(0, leaves[:-3])
     loaded = sivf.Index.load(tmp_path / "ckpt")
     assert loaded.n_live == 60
     qs = rng.normal(size=(4, D)).astype(np.float32)

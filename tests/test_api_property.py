@@ -17,6 +17,7 @@ from hypothesis import given, settings, strategies as st
 
 import sivf
 from repro import core
+from repro.core import filters as flt
 
 D, NL = 8, 4
 CFG = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=48, capacity=32,
@@ -275,3 +276,78 @@ def test_deferred_churn_matches_eager_reports(backend_name, ops, seed):
     for er, dr in zip(eager_reps, deferred_reps):
         assert er == dr, (er, dr)
     assert eager.n_live == deferred.n_live
+
+
+# ---------------------------------------------------------------------------
+# Filtered churn (ISSUE 7): predicate masks must track the live set
+# ---------------------------------------------------------------------------
+
+CFG_ATTR = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=48, capacity=32,
+                           n_max=256, max_chain=12,
+                           attributes=("tenant", "ts"))
+
+# random predicates over small attribute domains so selectivity spans
+# empty -> everything (Range bounds may invert: empty matches are legal)
+pred_strategy = st.one_of(
+    st.builds(sivf.Eq, st.just("tenant"), st.integers(0, 3)),
+    st.builds(sivf.In, st.just("tenant"),
+              st.lists(st.integers(0, 3), min_size=1, max_size=3)
+              .map(tuple)),
+    st.builds(sivf.Range, st.just("ts"), st.integers(0, 8),
+              st.integers(0, 8)),
+    st.builds(lambda a, b: sivf.And(a, b),
+              st.builds(sivf.Eq, st.just("tenant"), st.integers(0, 3)),
+              st.builds(sivf.Range, st.just("ts"), st.integers(0, 8),
+                        st.integers(0, 8))),
+)
+
+
+def _check_filtered_live_set(idx, store, pred, rng, q=2):
+    """Full-probe filtered search with k >= n_matching returns exactly the
+    ids whose CURRENT attribute row satisfies the predicate (the dict
+    oracle) — overwritten rows count under their latest stamps, removed
+    rows never."""
+    matching = {i for i, (_, a) in store.items()
+                if flt.host_matches(pred, CFG_ATTR.attributes, a)}
+    k = max(len(matching), 1)
+    qs = rng.normal(size=(q, D)).astype(np.float32)
+    _, lab = idx.search(qs, k, NL, filter=pred)
+    for row in np.asarray(lab):
+        assert set(row[row >= 0].tolist()) == matching
+
+
+@pytest.mark.parametrize("backend_name", ["single", "mesh"])
+@settings(max_examples=15, deadline=None)
+@given(ops=ops_strategy, pred=pred_strategy, seed=st.integers(0, 2 ** 16))
+def test_filtered_churn_matches_oracle(backend_name, ops, pred, seed):
+    """Hypothesis churn with random attribute stamps and a random
+    predicate, on both backends: at every search point the filtered
+    reachable set equals the dict oracle's within-predicate live set."""
+    idx = sivf.Index(CFG_ATTR, _CENTS, backend=_backend(backend_name),
+                     min_bucket=8)
+    rng = np.random.default_rng(seed)
+    store: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+    for kind, ids in ops:
+        ids = np.asarray(ids, np.int32)
+        if kind == "add":
+            vecs = rng.normal(size=(len(ids), D)).astype(np.float32)
+            attrs = np.stack([rng.integers(0, 4, len(ids)),
+                              rng.integers(0, 9, len(ids))],
+                             axis=1).astype(np.int32)
+            rep = idx.add(vecs, ids, attrs=attrs)
+            assert rep.accepted + rep.overwritten + rep.rejected \
+                == rep.requested == len(ids)
+            se = rep.shard_errors
+            last = {int(i): (v, a) for i, v, a in zip(ids, vecs, attrs)}
+            for i, va in last.items():               # batch: last wins
+                bits = rep.errors if se is None else se[i % len(se)]
+                if not bits & _ABORT:
+                    store[i] = va
+        elif kind == "remove":
+            idx.remove(ids)
+            for i in set(ids.tolist()):
+                store.pop(int(i), None)
+        else:
+            _check_filtered_live_set(idx, store, pred, rng)
+        assert idx.n_live == len(store)
+    _check_filtered_live_set(idx, store, pred, rng)

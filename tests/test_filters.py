@@ -1,0 +1,526 @@
+"""Filtered search (ISSUE 7): predicate algebra, fused masks, isolation.
+
+Four layers, matching the subsystem's structure:
+
+  * the predicate algebra / ``compile_filter`` split (structure vs
+    constants) and the ``normalize_attrs`` ingest contract;
+  * kernel parity — the Pallas fused scan with an in-scan predicate mask
+    must match the XLA reference label-exact on raw AND PQ paths,
+    including deleted slots, empty-after-filter, ``k > n_passing`` and
+    the pointer-walk table;
+  * the ``sivf.Index`` handle — filtered recall@10 == 1.0 against the
+    brute-force-within-predicate oracle, compile counts bounded by
+    filter *structures* (constants never mint an executable), and
+    checkpoint format 3 (attrs plane roundtrip + format-2 migration);
+  * ``ServeEngine`` mandatory tenant filters — read- and write-path
+    isolation (spoofed attributes are force-stamped, user filters can
+    narrow but never escape).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import sivf
+from repro import core
+from repro.core import filters as flt
+
+D, NL = 16, 4
+ATTRS = ("tenant", "ts")
+# distinct n_slabs per compile-counting test: backend op sets are
+# lru-cached per cfg, so a unique shape isolates the measured counters
+_SLAB_SALT = iter(range(200, 300))
+
+
+# ---------------------------------------------------------------------------
+# Predicate algebra + compilation
+# ---------------------------------------------------------------------------
+
+def test_compile_structure_and_const_layout():
+    pred = flt.And(flt.Eq("tenant", 7),
+                   flt.In("ts", (3, 1, 2)),
+                   flt.Range("ts", 10, 20))
+    cf = flt.compile_filter(pred, ATTRS)
+    assert cf.structure == ("and", ("eq", 0), ("in", 1, 3), ("range", 1))
+    assert cf.consts == (7, 3, 1, 2, 10, 20)
+
+
+def test_same_structure_different_consts_share_key():
+    a = flt.compile_filter(flt.Eq("tenant", 3), ATTRS)
+    b = flt.compile_filter(flt.Eq("tenant", 9), ATTRS)
+    assert a.structure == b.structure and hash(a.structure) == hash(b.structure)
+    assert a.consts != b.consts
+    assert a != b and hash(a) != hash(b)          # CompiledFilter is hashable
+
+
+def test_compile_none_passthrough_and_errors():
+    assert flt.compile_filter(None, ATTRS) is None
+    with pytest.raises(KeyError, match="unknown attribute 'nope'"):
+        flt.compile_filter(flt.Eq("nope", 1), ATTRS)
+    with pytest.raises(KeyError, match="SIVFConfig"):
+        flt.compile_filter(flt.Eq("tenant", 1), ())   # filtering not enabled
+    with pytest.raises(ValueError, match="at least one value"):
+        flt.In("tenant", ())
+    with pytest.raises(ValueError, match="at least one predicate"):
+        flt.And()
+    with pytest.raises(TypeError, match="not a predicate"):
+        flt.compile_filter("tenant == 1", ATTRS)
+
+
+def test_host_matches_oracle():
+    attrs = np.array([[1, 5], [2, 15], [1, 15], [3, 25]], np.int32)
+    assert (flt.host_matches(flt.Eq("tenant", 1), ATTRS, attrs)
+            == [True, False, True, False]).all()
+    assert (flt.host_matches(flt.In("tenant", (2, 3)), ATTRS, attrs)
+            == [False, True, False, True]).all()
+    # Range is half-open: hi excluded, empty range matches nothing
+    assert (flt.host_matches(flt.Range("ts", 5, 15), ATTRS, attrs)
+            == [True, False, False, False]).all()
+    assert not flt.host_matches(flt.Range("ts", 7, 7), ATTRS, attrs).any()
+    both = flt.And(flt.Eq("tenant", 1), flt.Range("ts", 10, 30))
+    assert (flt.host_matches(both, ATTRS, attrs)
+            == [False, False, True, False]).all()
+
+
+def test_eq_bindings_recurse_through_and():
+    pred = flt.And(flt.Eq("tenant", 4),
+                   flt.And(flt.Eq("ts", 9), flt.Range("ts", 0, 10)))
+    assert flt.eq_bindings(pred) == {"tenant": 4, "ts": 9}
+    assert flt.eq_bindings(flt.Range("ts", 0, 1)) == {}
+    assert flt.eq_bindings(None) == {}
+
+
+def test_normalize_attrs_contract():
+    got = flt.normalize_attrs(ATTRS, {"tenant": 3, "ts": [1, 2]}, 2)
+    assert got.dtype == np.int32 and (got == [[3, 1], [3, 2]]).all()
+    # [n, A] arrays pass through; wrong shapes are rejected
+    arr = np.array([[1, 2]], np.int64)
+    assert (flt.normalize_attrs(ATTRS, arr, 1) == arr).all()
+    with pytest.raises(ValueError, match="shape"):
+        flt.normalize_attrs(ATTRS, arr, 2)
+    # every configured attribute must be covered — no silent zero-default
+    with pytest.raises(ValueError, match="missing attributes \\['ts'\\]"):
+        flt.normalize_attrs(ATTRS, {"tenant": 1}, 2)
+    with pytest.raises(KeyError, match="unknown attributes \\['shard'\\]"):
+        flt.normalize_attrs(ATTRS, {"tenant": 1, "ts": 0, "shard": 2}, 2)
+    # overrides (ServeEngine stamping) win over client columns AND cover
+    # omitted ones — a spoofed tenant column cannot survive
+    got = flt.normalize_attrs(ATTRS, {"tenant": 99, "ts": 5}, 2,
+                              overrides={"tenant": 1})
+    assert (got[:, 0] == 1).all() and (got[:, 1] == 5).all()
+    got = flt.normalize_attrs(ATTRS, {"ts": 5}, 2, overrides={"tenant": 1})
+    assert (got == [[1, 5], [1, 5]]).all()
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: in-scan predicate mask, XLA vs Pallas (interpret)
+# ---------------------------------------------------------------------------
+
+pallas = pytest.mark.pallas
+
+
+def make(rng, n_slabs=24, capacity=32, max_chain=8, pq=None):
+    cfg = core.SIVFConfig(dim=D, n_lists=NL, n_slabs=n_slabs,
+                          capacity=capacity, n_max=2048, max_chain=max_chain,
+                          attributes=ATTRS, pq=pq)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    cb = None
+    if pq is not None:
+        from repro.core import pq as pq_mod
+        cb = pq_mod.train_pq(jax.random.key(0),
+                             jnp.asarray(rng.normal(size=(512, D)),
+                                         jnp.float32),
+                             pq.m, pq.nbits, iters=8)
+    return cfg, core.init_state(cfg, jnp.asarray(cents), cb)
+
+
+def load(cfg, state, rng, n, n_tenants=5):
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    attrs = np.stack([rng.integers(0, n_tenants, n),
+                      rng.integers(0, 100, n)], axis=1).astype(np.int32)
+    state = core.insert(cfg, state, jnp.asarray(vecs),
+                        jnp.asarray(np.arange(n), np.int32),
+                        attrs=jnp.asarray(attrs))
+    return state, vecs, attrs
+
+
+def assert_filtered_parity(cfg, state, rng, pred, k, nprobe, q=5,
+                           use_tables=True, exact_dist=False):
+    """impl="xla" vs "pallas_interpret" with the same compiled filter:
+    labels must match exactly; distances bit-exact on the PQ/ADC path,
+    allclose on the raw path (fp accumulation order differs)."""
+    cf = flt.compile_filter(pred, cfg.attributes)
+    fconsts = jnp.asarray(cf.consts, jnp.int32)
+    qs = jnp.asarray(rng.normal(size=(q, D)).astype(np.float32))
+    dx, lx = core.search(cfg, state, qs, k, nprobe, use_tables=use_tables,
+                         impl="xla", fstruct=cf.structure, fconsts=fconsts)
+    dp, lp = core.search(cfg, state, qs, k, nprobe, use_tables=use_tables,
+                         impl="pallas_interpret", fstruct=cf.structure,
+                         fconsts=fconsts)
+    if exact_dist:
+        assert (np.asarray(dp) == np.asarray(dx)).all()
+    else:
+        np.testing.assert_allclose(np.asarray(dp), np.asarray(dx),
+                                   rtol=1e-5, atol=1e-5)
+    assert (np.asarray(lp) == np.asarray(lx)).all()
+    return np.asarray(dx), np.asarray(lx)
+
+
+@pallas
+@pytest.mark.parametrize("pred", [
+    flt.Eq("tenant", 2),
+    flt.In("tenant", (0, 3)),
+    flt.Range("ts", 20, 70),
+    flt.And(flt.Eq("tenant", 1), flt.Range("ts", 0, 50)),
+], ids=["eq", "in", "range", "and"])
+def test_filtered_parity_all_node_types(rng, pred):
+    cfg, state = make(rng)
+    state, _, attrs = load(cfg, state, rng, 200)
+    _, lab = assert_filtered_parity(cfg, state, rng, pred, k=7, nprobe=NL)
+    live = lab[lab >= 0]
+    # every returned id satisfies the predicate (mask ran BEFORE top-k)
+    assert flt.host_matches(pred, ATTRS, attrs[live]).all()
+
+
+@pallas
+def test_filtered_parity_deleted_slots(rng):
+    """Bitmap mask and predicate mask compose: deleted ids never surface
+    even when they match the predicate."""
+    cfg, state = make(rng)
+    state, _, attrs = load(cfg, state, rng, 200)
+    dels = np.arange(0, 200, 3, dtype=np.int32)
+    state = core.delete(cfg, state, jnp.asarray(dels))
+    pred = flt.Range("ts", 0, 100)                 # matches everything live
+    _, lab = assert_filtered_parity(cfg, state, rng, pred, k=9, nprobe=NL)
+    live = lab[lab >= 0]
+    assert not np.isin(live, dels).any()
+
+
+@pallas
+def test_filtered_empty_after_filter(rng):
+    """A predicate nothing satisfies yields all +inf / -1, both impls."""
+    cfg, state = make(rng)
+    state, _, _ = load(cfg, state, rng, 150)
+    d, lab = assert_filtered_parity(cfg, state, rng, flt.Eq("tenant", 999),
+                                    k=5, nprobe=NL)
+    assert np.isinf(d).all() and (lab == -1).all()
+
+
+@pallas
+def test_filtered_k_exceeds_n_passing(rng):
+    """k > passing rows: the tail pads with +inf / -1, never with rows
+    that fail the predicate."""
+    cfg, state = make(rng)
+    state, _, attrs = load(cfg, state, rng, 120)
+    pred = flt.Eq("tenant", 2)
+    n_pass = int(flt.host_matches(pred, ATTRS, attrs).sum())
+    k = n_pass + 8
+    d, lab = assert_filtered_parity(cfg, state, rng, pred, k=k, nprobe=NL)
+    assert ((lab >= 0).sum(axis=1) == n_pass).all()
+    assert np.isinf(d[:, n_pass:]).all()
+    live = lab[lab >= 0]
+    assert flt.host_matches(pred, ATTRS, attrs[live]).all()
+
+
+@pallas
+def test_filtered_pointer_walk_table(rng):
+    """The paper-faithful walk_chains table feeds the same masked kernel."""
+    cfg, state = make(rng)
+    state, _, _ = load(cfg, state, rng, 150)
+    state = core.delete(cfg, state,
+                        jnp.asarray(np.arange(0, 150, 2), np.int32))
+    assert_filtered_parity(cfg, state, rng, flt.In("tenant", (1, 2)),
+                           k=6, nprobe=NL, use_tables=False)
+
+
+@pallas
+def test_filtered_pq_adc_parity_bit_exact(rng):
+    """Filtered ADC scan over compressed slabs: labels AND distances must
+    be bit-exact between XLA and the Pallas kernel (both read the same
+    f32 tables, so there is no accumulation-order slack)."""
+    cfg, state = make(rng, pq=core.PQConfig(m=4, nbits=4))
+    state, _, attrs = load(cfg, state, rng, 200)
+    state = core.delete(cfg, state,
+                        jnp.asarray(np.arange(0, 200, 5), np.int32))
+    pred = flt.And(flt.In("tenant", (0, 1, 2)), flt.Range("ts", 10, 90))
+    _, lab = assert_filtered_parity(cfg, state, rng, pred, k=8, nprobe=NL,
+                                    exact_dist=True)
+    live = lab[lab >= 0]
+    assert flt.host_matches(pred, ATTRS, attrs[live]).all()
+
+
+@pallas
+def test_filtered_ragged_query_blocking(rng):
+    """Q not divisible by block_q exercises the padded-row mask path."""
+    cfg, state = make(rng)
+    state, _, _ = load(cfg, state, rng, 150)
+    cf = flt.compile_filter(flt.Eq("tenant", 1), cfg.attributes)
+    fconsts = jnp.asarray(cf.consts, jnp.int32)
+    qs = jnp.asarray(rng.normal(size=(5, D)).astype(np.float32))
+    dx, lx = core.search(cfg, state, qs, 4, NL, impl="xla",
+                         fstruct=cf.structure, fconsts=fconsts)
+    dp, lp = core.search(cfg, state, qs, 4, NL, impl="pallas_interpret",
+                         block_q=4, fstruct=cf.structure, fconsts=fconsts)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dx),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(lp) == np.asarray(lx)).all()
+
+
+# ---------------------------------------------------------------------------
+# Index handle: oracle recall, API contract, compile bound
+# ---------------------------------------------------------------------------
+
+def _index(rng, n_slabs, attributes=ATTRS, **kw):
+    cfg = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=n_slabs, capacity=32,
+                          n_max=2048, attributes=attributes)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    return sivf.Index(cfg, jnp.asarray(cents), min_bucket=8, **kw)
+
+
+def test_index_filtered_recall_is_exact(rng):
+    """Acceptance: filtered recall@10 == 1.0 vs the brute-force-within-
+    predicate oracle at full probe (in-scan masking is exact, not a
+    heuristic)."""
+    idx = _index(rng, n_slabs=next(_SLAB_SALT))
+    n = 300
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    tenant = rng.integers(0, 10, n).astype(np.int32)
+    ts = rng.integers(0, 100, n).astype(np.int32)
+    idx.add(vecs, np.arange(n, dtype=np.int32),
+            attrs={"tenant": tenant, "ts": ts})
+    attrs = np.stack([tenant, ts], axis=1)
+    qs = rng.normal(size=(8, D)).astype(np.float32)
+    k = 10
+    for pred in (flt.Eq("tenant", 3),
+                 flt.In("tenant", (0, 1, 2)),
+                 flt.Range("ts", 25, 75),
+                 flt.And(flt.Eq("tenant", 4), flt.Range("ts", 0, 80))):
+        mask = flt.host_matches(pred, ATTRS, attrs)
+        dmat = ((qs[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
+        dmat = np.where(mask[None, :], dmat, np.inf)
+        want = np.argsort(dmat, axis=1, kind="stable")[:, :k]
+        _, lab = idx.search(qs, k, NL, filter=pred)
+        lab = np.asarray(lab)
+        for qi in range(len(qs)):
+            n_pass = min(int(mask.sum()), k)
+            got = set(lab[qi][lab[qi] >= 0].tolist())
+            exp = set(want[qi, :n_pass].tolist())
+            assert got == exp, f"pred {pred}: {got ^ exp}"
+
+
+def test_index_attrs_api_contract(rng):
+    idx = _index(rng, n_slabs=next(_SLAB_SALT))
+    vecs = rng.normal(size=(4, D)).astype(np.float32)
+    ids = np.arange(4, dtype=np.int32)
+    with pytest.raises(ValueError, match="requires attrs="):
+        idx.add(vecs, ids)
+    with pytest.raises(ValueError, match="missing attributes"):
+        idx.add(vecs, ids, attrs={"tenant": 1})
+    idx.add(vecs, ids, attrs={"tenant": 1, "ts": [0, 1, 2, 3]})
+    assert idx.n_live == 4
+    # filters on an attribute-less index are a config error
+    plain = _index(rng, n_slabs=next(_SLAB_SALT), attributes=())
+    plain.add(vecs, ids)
+    with pytest.raises(ValueError, match="attributes"):
+        plain.search(vecs[:1], 2, filter=flt.Eq("tenant", 1))
+    with pytest.raises(ValueError, match="attrs= given"):
+        plain.add(vecs, ids, attrs={"tenant": 1})
+
+
+def test_index_filter_structures_bound_compiles(rng):
+    """One executable per filter STRUCTURE x query bucket: new constants
+    must reuse the compiled kernel."""
+    idx = _index(rng, n_slabs=next(_SLAB_SALT))
+    n = 64
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    idx.add(vecs, np.arange(n, dtype=np.int32),
+            attrs={"tenant": np.arange(n, dtype=np.int32) % 8, "ts": 0})
+    qs = rng.normal(size=(3, D)).astype(np.float32)
+    idx.search(qs, 5)                                   # unfiltered
+    base = idx.compile_stats()["search"]
+    idx.search(qs, 5, filter=flt.Eq("tenant", 0))
+    assert idx.compile_stats()["search"] == base + 1
+    for v in range(1, 6):                               # constants only
+        idx.search(qs, 5, filter=flt.Eq("tenant", v))
+    assert idx.compile_stats()["search"] == base + 1
+    idx.search(qs, 5, filter=flt.Range("ts", 0, 10))    # new structure
+    idx.search(qs, 5, filter=flt.Range("ts", 5, 99))
+    assert idx.compile_stats()["search"] == base + 2
+    # a pre-compiled filter passes straight through (ServeEngine path)
+    cf = flt.compile_filter(flt.Eq("tenant", 7), idx.cfg.attributes)
+    idx.search(qs, 5, filter=cf)
+    assert idx.compile_stats()["search"] == base + 2
+
+
+def test_stats_report_attr_plane_bytes(rng):
+    idx = _index(rng, n_slabs=next(_SLAB_SALT))
+    from repro.core.state import memory_report
+    s = idx.stats()
+    want = idx.cfg.n_slabs * idx.cfg.capacity * len(ATTRS) * 4
+    assert s["attr_bytes"] == want
+    mr = memory_report(idx.cfg)
+    assert mr["attr_bytes"] == want
+    assert mr["total_bytes"] >= mr["payload_bytes"] + want
+    # the attrs plane sits on BOTH sides of the compression ratio, so
+    # enabling filtering never inflates the apparent compression
+    assert mr["compression_ratio"] == pytest.approx(1.0)
+    plain = _index(rng, n_slabs=next(_SLAB_SALT), attributes=())
+    assert plain.stats()["attr_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: format 3 roundtrip + format-2 migration + elastic reshard
+# ---------------------------------------------------------------------------
+
+def _filtered_results(idx, qs, pred):
+    d, lab = idx.search(qs, 6, NL, filter=pred)
+    return np.asarray(d), np.asarray(lab)
+
+
+def test_checkpoint_attrs_roundtrip(tmp_path, rng):
+    idx = _index(rng, n_slabs=next(_SLAB_SALT))
+    n = 120
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    attrs = np.stack([rng.integers(0, 4, n), rng.integers(0, 50, n)],
+                     axis=1).astype(np.int32)
+    idx.add(vecs, np.arange(n, dtype=np.int32), attrs=attrs)
+    qs = rng.normal(size=(4, D)).astype(np.float32)
+    pred = flt.And(flt.Eq("tenant", 1), flt.Range("ts", 0, 40))
+    want_d, want_l = _filtered_results(idx, qs, pred)
+    idx.save(tmp_path / "ckpt")
+
+    from repro.checkpoint.manager import CheckpointManager
+    assert CheckpointManager(tmp_path / "ckpt").load_metadata(
+        "index")["format"] == 3
+    back = sivf.Index.load(tmp_path / "ckpt")
+    assert (np.asarray(back.state.attrs) == np.asarray(idx.state.attrs)).all()
+    got_d, got_l = _filtered_results(back, qs, pred)
+    assert (got_l == want_l).all()
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-6)
+
+
+def test_checkpoint_format2_migration_zero_fills_attrs(tmp_path, rng):
+    """A format-2 checkpoint predates the attrs plane: its manifest stores
+    one fewer leaf. Loading must zero-fill the trailing plane, not crash.
+    The fixture forges a true format-2 save (truncated leaf list + patched
+    sidecar) from an attribute-less index, exactly what the old writer
+    produced."""
+    from repro.checkpoint.manager import CheckpointManager
+    idx = _index(rng, n_slabs=next(_SLAB_SALT), attributes=())
+    n = 60
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    idx.add(vecs, np.arange(n, dtype=np.int32))
+    qs = rng.normal(size=(3, D)).astype(np.float32)
+    want_d, want_l = idx.search(qs, 5, NL)
+    idx.save(tmp_path / "ckpt")
+
+    mgr = CheckpointManager(tmp_path / "ckpt", keep_last=1)
+    leaves = jax.tree.leaves(idx.state)
+    mgr.save(1, leaves[:-1])                    # attrs leaf absent on disk
+    meta = mgr.load_metadata("index")
+    meta["format"] = 2
+    del meta["cfg"]["attributes"]               # old cfg had no such field
+    mgr.save_metadata("index", meta)
+
+    back = sivf.Index.load(tmp_path / "ckpt")
+    assert back.cfg.attributes == ()
+    a = np.asarray(back.state.attrs)
+    assert a.shape == (idx.cfg.n_slabs, idx.cfg.capacity, 0)
+    got_d, got_l = back.search(qs, 5, NL)
+    assert (np.asarray(got_l) == np.asarray(want_l)).all()
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6)
+    assert back.n_live == n
+
+
+def test_reshard_preserves_attrs_and_filters(tmp_path, rng):
+    """Elastic load single -> mesh re-routes rows with their attribute
+    stamps: filtered searches return identical labels on the new
+    topology."""
+    idx = _index(rng, n_slabs=next(_SLAB_SALT))
+    n = 100
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    attrs = np.stack([rng.integers(0, 3, n), rng.integers(0, 30, n)],
+                     axis=1).astype(np.int32)
+    idx.add(vecs, np.arange(n, dtype=np.int32), attrs=attrs)
+    qs = rng.normal(size=(4, D)).astype(np.float32)
+    pred = flt.In("tenant", (0, 2))
+    want_d, want_l = _filtered_results(idx, qs, pred)
+    idx.save(tmp_path / "ckpt")
+
+    mesh = jax.make_mesh((1,), ("data",))
+    m = sivf.Index.load(tmp_path / "ckpt", backend=mesh)
+    assert m.n_shards == 1 and m._backend_kind == "mesh"
+    got_d, got_l = _filtered_results(m, qs, pred)
+    assert (got_l == want_l).all()
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-5)
+    # and the mesh backend keeps accepting stamped inserts
+    m.add(vecs[:4] + 10, np.arange(500, 504, dtype=np.int32),
+          attrs={"tenant": 2, "ts": 7})
+    assert m.n_live == n + 4
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: mandatory tenant filters (read- AND write-path isolation)
+# ---------------------------------------------------------------------------
+
+def _serve_pair(rng):
+    cfg = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=next(_SLAB_SALT),
+                          capacity=32, n_max=2048, attributes=ATTRS)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    idx = sivf.Index(cfg, jnp.asarray(cents), deferred=True, min_bucket=8)
+    eng = sivf.ServeEngine(
+        idx, default_nprobe=NL,
+        tenant_filters={"acme": flt.Eq("tenant", 1),
+                        "globex": flt.Eq("tenant", 2)})
+    return idx, eng
+
+
+def test_serve_engine_tenant_isolation(rng):
+    idx, eng = _serve_pair(rng)
+    with eng:
+        acme, globex = eng.session("acme"), eng.session("globex")
+        va = rng.normal(size=(40, D)).astype(np.float32)
+        vg = rng.normal(size=(40, D)).astype(np.float32)
+        # acme SPOOFS tenant=2; the engine force-stamps the Eq binding
+        acme.add(va, np.arange(40, dtype=np.int32),
+                 attrs={"tenant": 2, "ts": np.arange(40)}).result()
+        # Eq-pinned attributes may simply be omitted
+        globex.add(vg, np.arange(100, 140, dtype=np.int32),
+                   attrs={"ts": np.arange(40)}).result()
+        qs = rng.normal(size=(6, D)).astype(np.float32)
+        la = np.asarray(acme.search(qs, k=20).result().labels)
+        lg = np.asarray(globex.search(qs, k=20).result().labels)
+        assert ((la == -1) | (la < 100)).all()       # acme sees only acme
+        assert (lg[lg >= 0] >= 100).all()            # globex only globex
+        # a user filter narrows within the slice...
+        lr = np.asarray(acme.search(
+            qs, k=20, filter=flt.Range("ts", 0, 10)).result().labels)
+        assert ((lr == -1) | (lr < 10)).all()
+        # ...but cannot escape it: AND with a contradictory Eq is empty
+        esc = acme.search(qs, k=20, filter=flt.Eq("tenant", 2)).result()
+        assert (np.asarray(esc.labels) == -1).all()
+        compiles, bound = eng.assert_bounded_compiles()
+        assert compiles <= bound
+    # write path really stored the stamped values, not the spoofed ones
+    attrs = np.asarray(idx.state.attrs)
+    ids = np.asarray(idx.state.ids)
+    assert (attrs[..., 0][ids == 5] == 1).all()      # acme row: tenant=1
+    assert (attrs[..., 0][ids == 105] == 2).all()    # globex row: tenant=2
+
+
+def test_serve_engine_rejects_bad_tenant_filters(rng):
+    cfg = sivf.SIVFConfig(dim=D, n_lists=NL, n_slabs=next(_SLAB_SALT),
+                          capacity=32, n_max=512, attributes=ATTRS)
+    cents = rng.normal(size=(NL, D)).astype(np.float32)
+    idx = sivf.Index(cfg, jnp.asarray(cents), deferred=True, min_bucket=8)
+    with pytest.raises(KeyError, match="unknown attribute"):
+        sivf.ServeEngine(idx, tenant_filters={"t": flt.Eq("shard", 1)})
+    plain_cfg = dataclasses.replace(cfg, n_slabs=next(_SLAB_SALT),
+                                    attributes=())
+    plain = sivf.Index(plain_cfg, jnp.asarray(cents), deferred=True,
+                       min_bucket=8)
+    with pytest.raises(KeyError, match="SIVFConfig"):
+        sivf.ServeEngine(plain, tenant_filters={"t": flt.Eq("tenant", 1)})

@@ -12,7 +12,7 @@ import pytest
 from repro.configs import ARCHS
 from repro.models import model as M
 from repro.serve import kv_cache as kvc
-from repro.serve.engine import ServeEngine
+from repro.serve.paged_lm import PagedLMEngine
 from repro.sharding.axes import strip
 from repro.sharding.rules import unpadded_plan
 
@@ -41,7 +41,7 @@ def test_paged_engine_matches_dense_decode(arch, tol, rng):
             params, cfg, plan, jnp.asarray([[prompt[t]]], jnp.int32),
             caches, t)
 
-    eng = ServeEngine(cfg, plan, params, page_size=8, n_pages=32, max_seqs=2)
+    eng = PagedLMEngine(cfg, plan, params, page_size=8, n_pages=32, max_seqs=2)
     assert eng.admit(0, prompt)
     errs = []
     for i, tok in enumerate(feed):
@@ -109,7 +109,7 @@ def test_engine_sliding_window_decode(rng):
     plan = unpadded_plan(cfg)
     params = strip(M.init_params(cfg, plan, jax.random.key(2), max_seq=64))
     prompt = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
-    eng = ServeEngine(cfg, plan, params, page_size=4, n_pages=32, max_seqs=1)
+    eng = PagedLMEngine(cfg, plan, params, page_size=4, n_pages=32, max_seqs=1)
     assert eng.admit(0, prompt)
     for _ in range(4):
         eng.step()
