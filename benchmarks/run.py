@@ -16,7 +16,10 @@ widen baseline (plus the jit executable count across filter structures)
 to ``BENCH_filter.json``; ``serve_churn`` records the
 open-loop mixed-workload SLO sweep (p50/p99/p999 search latency idle vs
 under ingest at 3 arrival rates + sustained mutation throughput) to
-``BENCH_serve.json`` (the slow CI job's perf data points —
+``BENCH_serve.json``; ``tiered_sweep`` records the host-tier/device-
+cache sweep (hit rate + QPS at working sets of 0.25x-2x the device slab
+budget, bit-parity asserted against the all-resident pool) to
+``BENCH_tiered.json`` (the slow CI job's perf data points —
 ``scripts/check_bench.py`` gates them against committed baselines).
 
 Exceptions inside one benchmark print a ``<name>.ERROR`` row and the run
@@ -121,6 +124,11 @@ def main() -> None:
     if only is None or "serve_churn" in only:
         run_summary_artifact("serve_churn", serve_bench.serve_churn_summary,
                              "BENCH_serve.json", results)
+    if only is None or "tiered_sweep" in only:
+        from benchmarks import tiered_bench
+        run_summary_artifact("tiered_sweep",
+                             tiered_bench.tiered_sweep_summary,
+                             "BENCH_tiered.json", results)
     for name, fn in artifacts:
         if only and name not in only:
             continue

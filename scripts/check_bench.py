@@ -108,6 +108,21 @@ METRICS: dict[str, list[Band]] = {
         # one executable per filter STRUCTURE — constants must never mint
         Band("search_executables", "exact_max"),
     ],
+    "BENCH_tiered.json": [
+        # residency is a pure performance layer: any divergence from the
+        # all-resident pool is a correctness bug, so parity is gated at
+        # exactly 1.0 for every working-set ratio
+        Band("ratios.r025.parity", "abs_min", 0.0),
+        Band("ratios.r05.parity", "abs_min", 0.0),
+        Band("ratios.r10.parity", "abs_min", 0.0),
+        Band("ratios.r20.parity", "abs_min", 0.0),
+        # working sets that fit the budget must serve warm from the
+        # cache (uploads only on the fill, never in steady state)
+        Band("ratios.r025.hit_rate", "abs_min", 0.02),
+        Band("ratios.r10.hit_rate", "abs_min", 0.02),
+        Band("ratios.r025.qps", "ratio_min", 4.0),
+        Band("ratios.r20.qps", "ratio_min", 4.0),
+    ],
     "BENCH_serve.json": [
         Band("scale_points.0.idle.p99_ms", "ratio_max", 4.0),
         Band("scale_points.0.active.p99_ms", "ratio_max", 4.0),

@@ -370,14 +370,17 @@ def _single_ops(cfg: SIVFConfig, impl: str, block_q: int,
         valid, pb, aux = _pre(state, ids)
         lists = quantizer.assign(state.centroids, vecs.astype(cfg.dtype),
                                  cfg.metric)
-        st = ix._insert_impl(cfg, _clear_error(state), vecs, ids, lists,
-                             attrs=attrs)
+        out = ix._insert_impl(cfg, _clear_error(state), vecs, ids, lists,
+                              attrs=attrs, want_plan=cfg.tiered)
+        st, plan = out if cfg.tiered else (out, None)
         aux["errors"] = _or_bits(st.error)
         aux["n_live_after"] = st.n_live
         # overwritten == present-before AND the batch committed; on an
         # atomic abort the old payload survives, so nothing is overwritten
         failed = (st.error & _ABORT_BITS) != 0
         aux["n_overwritten"] = _count_unique(ids, pb & ~failed)
+        if cfg.tiered:     # commit plan rides along for the host-store replay
+            return _clear_error(st), aux, plan
         return _clear_error(st), aux
 
     @partial(jax.jit, donate_argnums=(0,))
@@ -412,7 +415,7 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
     """
     from repro.core import distributed as dist
     n = mesh.shape[axis]
-    raw_insert = dist.sharded_insert(cfg, mesh, axis)
+    raw_insert = dist.sharded_insert(cfg, mesh, axis, want_plan=cfg.tiered)
     raw_delete = dist.sharded_delete(cfg, mesh, axis)
     raw_search = dist.sharded_search(cfg, mesh, axis, impl, block_q,
                                      use_tables)
@@ -434,7 +437,8 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
     @partial(jax.jit, donate_argnums=(0,))
     def insert_fn(state, vecs, ids, attrs):
         valid, pb, aux = _pre(state, ids)
-        st = raw_insert(_clear_error(state), vecs, ids, attrs)
+        out = raw_insert(_clear_error(state), vecs, ids, attrs)
+        st, plan = out if cfg.tiered else (out, None)
         aux["errors"] = _or_bits(st.error)
         aux["shard_errors"] = st.error                       # [S] bits
         aux["n_live_after"] = jnp.sum(st.n_live)
@@ -443,6 +447,8 @@ def _mesh_ops(cfg: SIVFConfig, mesh: Mesh, axis: str, impl: str,
         shard_failed = (st.error & _ABORT_BITS) != 0         # [S]
         failed = shard_failed[jnp.where(valid, ids % n, 0)]
         aux["n_overwritten"] = _count_unique(ids, pb & ~failed)
+        if cfg.tiered:     # stacked [S, B] plan for the per-shard replay
+            return _clear_error(st), aux, plan
         return _clear_error(st), aux
 
     @partial(jax.jit, donate_argnums=(0,))
@@ -555,6 +561,23 @@ class Index:
                 _state = dist.init_sharded_state(
                     cfg, jnp.asarray(centroids), backend, axis,
                     pq_codebooks)
+        self._tiered = None
+        if cfg.tiered:
+            from repro.core import tiered as trt
+            stores = None
+            if trt.is_full_state(cfg, _state):
+                # incoming full-pool state (load / reshard): split into the
+                # host canonical store + a zero-width-payload device state
+                meta, stores = trt.split_full(cfg, _state)
+                if self._backend_kind == "mesh":
+                    from repro.core import distributed as dist
+                    _state = dist.place_sharded(meta, self._mesh, axis)
+                else:
+                    _state = jax.tree.map(jnp.asarray, meta)
+            self._tiered = trt.TieredRuntime(
+                cfg, self._backend_kind, mesh=self._mesh, axis=axis,
+                impl=impl, block_q=self._block_q, use_tables=use_tables,
+                n_shards=self._ops.n_shards, stores=stores)
         self._state = _state
         if _pq_trained is None:
             _pq_trained = cfg.pq is None or pq_codebooks is not None
@@ -606,6 +629,13 @@ class Index:
         s["backend"] = self._backend_kind
         s["n_shards"] = self.n_shards
         s["compiles"] = self.compile_stats()
+        if self._tiered is not None:
+            s.update(self._tiered.stats())
+        else:
+            # all-resident pool: every used slab is trivially "resident"
+            s["tiered"] = False
+            s["resident_slabs"] = s["slabs_used"]
+            s["hit_rate"] = 1.0
         return s
 
     def compile_stats(self) -> dict:
@@ -621,9 +651,14 @@ class Index:
                 return int(f._cache_size())
             except Exception:               # pragma: no cover - private API
                 return -1
-        return {"add": size(self._ops.insert),
-                "remove": size(self._ops.delete),
-                "search": size(self._ops.search)}
+        out = {"add": size(self._ops.insert),
+               "remove": size(self._ops.delete),
+               "search": size(self._ops.search)}
+        if self._tiered is not None:
+            # tiered searches run the plan + scan executables instead of
+            # self._ops.search (whose count stays 0 on a tiered handle)
+            out.update(self._tiered.compile_stats())
+        return out
 
     # -- batch bucketing ----------------------------------------------------
 
@@ -642,6 +677,8 @@ class Index:
 
     def _pad_ids(self, ids, bucket: int) -> jax.Array:
         if isinstance(ids, jax.Array):       # device fast path: jnp pad, no
+            if ids.shape[0] == bucket and ids.dtype == jnp.int32:
+                return ids                   # bucket-aligned: zero device ops
             return jnp.pad(ids.astype(jnp.int32),    # host round trip
                            (0, bucket - ids.shape[0]), constant_values=-1)
         out = np.full((bucket,), -1, np.int32)
@@ -650,6 +687,8 @@ class Index:
 
     def _pad_rows(self, rows, bucket: int) -> jax.Array:
         if isinstance(rows, jax.Array):
+            if rows.shape[0] == bucket and rows.dtype == jnp.float32:
+                return rows                  # bucket-aligned: zero device ops
             return jnp.pad(rows.astype(jnp.float32),
                            ((0, bucket - rows.shape[0]), (0, 0)))
         out = np.zeros((bucket, self.cfg.dim), np.float32)
@@ -748,10 +787,20 @@ class Index:
             raise ValueError(
                 "attrs= given but SIVFConfig(attributes=...) is empty")
         bucket = self._bucket(ids_a.shape[0])
-        self._state, aux = self._ops.insert(
-            self._state, self._pad_rows(vecs, bucket),
-            self._pad_ids(ids_a, bucket),
-            self._pad_attrs(attrs_np, bucket) if self.cfg.n_attrs else None)
+        pv = self._pad_rows(vecs, bucket)
+        pa = self._pad_attrs(attrs_np, bucket) if self.cfg.n_attrs else None
+        if self._tiered is not None:
+            self._state, aux, plan = self._ops.insert(
+                self._state, pv, self._pad_ids(ids_a, bucket), pa)
+            # queue the commit plan for the host-store replay; host inputs
+            # ride along as-is (no transfer at drain), device inputs as the
+            # padded device rows (fetched with the plan in one device_get)
+            self._tiered.queue_plan(
+                plan, vecs if isinstance(vecs, np.ndarray) else pv,
+                attrs_np if self.cfg.n_attrs else None)
+        else:
+            self._state, aux = self._ops.insert(
+                self._state, pv, self._pad_ids(ids_a, bucket), pa)
         return self._emit("add", aux, bucket, strict)
 
     def remove(self, ids, *, strict: bool | None = None
@@ -812,6 +861,8 @@ class Index:
         (``[]``) when nothing is pending.
         """
         pending, self._pending = self._pending, []
+        if self._tiered is not None:     # host store catches up at the same
+            self._tiered.drain_plans()   # sync point the reports resolve at
         reports: list[MutationReport] = []
         first_err: MutationRejected | None = None
         k = 0
@@ -847,7 +898,7 @@ class Index:
     # -- search -------------------------------------------------------------
 
     def search(self, queries, k: int, nprobe: int | None = None, *,
-               filter=None) -> SearchResult:
+               filter=None, _prefetched=None) -> SearchResult:
         """Top-k search; ``nprobe=None`` probes every list (exact recall).
 
         ``jax.Array`` queries are padded device-side (no host round trip).
@@ -881,10 +932,43 @@ class Index:
             else min(int(nprobe), self.cfg.n_lists)
         q = queries.shape[0]
         bucket = self._bucket(q)
-        d, lab = self._ops.search(self._state, self._pad_rows(queries, bucket),
-                                int(k), nprobe, fstruct, fconsts)
+        padded = self._pad_rows(queries, bucket)
+        if self._tiered is not None:
+            # three-stage tiered path: plan (probe->slab table), prefetch
+            # (make probed slabs cache-resident), frame-translated scan.
+            # A valid ``_prefetched`` ticket (Index.prefetch) skips the
+            # first two stages; a stale one falls back transparently.
+            d, lab = self._tiered.search(
+                self._state, padded, int(k), nprobe, fstruct, fconsts,
+                epoch=self._epoch, ticket=_prefetched)
+        else:
+            d, lab = self._ops.search(self._state, padded, int(k), nprobe,
+                                      fstruct, fconsts)
         return SearchResult(distances=d[:q], labels=lab[:q], k=int(k),
                             nprobe=nprobe, padded_to=bucket)
+
+    def prefetch(self, queries, nprobe: int | None = None):
+        """Stage the slabs a coming query batch will probe (tiered only).
+
+        Runs the plan + prefetch stages of the tiered search and returns
+        an opaque ticket for ``search(..., _prefetched=ticket)``, letting
+        a scheduler overlap the next tile's host->device uploads with the
+        current tile's kernel execution (the serve engine does exactly
+        this). The ticket is valid until the next prefetch or mutation;
+        passing a stale ticket — or calling with the same queries and no
+        ticket at all — is always safe, merely un-overlapped. Returns
+        ``None`` on an untiered handle.
+        """
+        if self._tiered is None:
+            return None
+        queries = self._as_batch(queries, np.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        nprobe = self.cfg.n_lists if nprobe is None \
+            else min(int(nprobe), self.cfg.n_lists)
+        padded = self._pad_rows(queries, self._bucket(queries.shape[0]))
+        table = self._tiered.plan(self._state, padded, nprobe)
+        return self._tiered.prefetch(table, nprobe, self._epoch)
 
     # -- persistence --------------------------------------------------------
 
@@ -915,7 +999,16 @@ class Index:
             "deferred": self.deferred,
             "cfg": cfg,
         })
-        mgr.save(0, self._state)
+        state = self._state
+        if self._tiered is not None:
+            # residency is runtime-only: checkpoints always store the
+            # assembled full-pool planes, so the on-disk format (3) is
+            # identical to an untiered save and loads onto either mode
+            from repro.core import tiered as trt
+            self._tiered.drain_plans()
+            state = trt.assemble_full(self.cfg, self._state,
+                                      self._tiered.stores)
+        mgr.save(0, state)
 
     @classmethod
     def load(cls, path, backend=None, **overrides) -> "Index":
@@ -945,6 +1038,12 @@ class Index:
         if cfg_d.get("pq") is not None:
             cfg_d["pq"] = PQConfig(**cfg_d["pq"])
         cfg = SIVFConfig(**cfg_d)
+        if "device_slabs" in overrides:
+            # retier on load: any checkpoint loads tiered (or back to
+            # all-resident with device_slabs=None) — the stored planes are
+            # the same full pool either way
+            cfg = dataclasses.replace(
+                cfg, device_slabs=overrides.pop("device_slabs"))
         kw = {"axis": meta["axis"], "impl": meta["impl"],
               "block_q": meta["block_q"], "use_tables": meta["use_tables"],
               "strict": meta["strict"], "min_bucket": meta["min_bucket"],
@@ -968,6 +1067,36 @@ class Index:
         step = mgr.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint steps under {path}")
+        if cfg.tiered:
+            # tiered target: the payload planes must never be device_put
+            # whole, so always take the host restore path (an untiered
+            # example tree — checkpoints store the full pool) and hand the
+            # full host state to __init__, which splits it into the host
+            # store + meta device state
+            cfg_full = dataclasses.replace(cfg, device_slabs=None)
+            example = jax.eval_shape(lambda: init_state(
+                cfg_full, jnp.zeros((cfg.n_lists, cfg.dim), cfg.dtype)))
+            if src_kind == "mesh":
+                example = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct((src_shards,) + x.shape,
+                                                   x.dtype), example)
+            leaves, treedef = jax.tree.flatten(example)
+            n_miss = {1: 3, 2: 1}.get(int(meta.get("format", 1)), 0)
+            out = mgr.restore_arrays(step)
+            if n_miss:
+                out = out + [np.zeros(x.shape, x.dtype)
+                             for x in leaves[-n_miss:]]
+            if len(out) != len(leaves):
+                raise ValueError(
+                    f"checkpoint stored {len(out)} leaves but the "
+                    f"{src_shards}-shard state needs {len(leaves)}")
+            host_state = jax.tree.unflatten(treedef, out)
+            if not (tgt_kind == src_kind and n_to == src_shards):
+                host_state = dist.reshard_state(cfg_full, host_state,
+                                                src_shards, n_to,
+                                                stack=tgt_kind == "mesh")
+            return cls(cfg, None, backend=backend, _state=host_state,
+                       _pq_trained=meta.get("pq_trained", True), **kw)
         # abstract example tree: restore needs only structure/shapes, so no
         # throwaway zero pool is ever allocated next to the restored one
         example = jax.eval_shape(lambda: init_state(
@@ -1036,9 +1165,24 @@ class Index:
         self.flush()
         axis = self._axis if axis is None else axis
         tgt_kind, n_to = _resolve_backend(backend, axis)
-        host = jax.tree.map(np.asarray, self._state)   # device -> host
-        state = dist.reshard_state(self.cfg, host, self.n_shards, n_to,
+        if self._tiered is not None:
+            # assemble the canonical full pool (host planes + device
+            # metadata) and reshard under the untiered twin config — the
+            # reshard machinery only ever sees full-width states
+            from repro.core import tiered as trt
+            cfg_r = dataclasses.replace(self.cfg, device_slabs=None)
+            host = trt.assemble_full(self.cfg, self._state,
+                                     self._tiered.stores)
+        else:
+            cfg_r = self.cfg
+            host = jax.tree.map(np.asarray, self._state)   # device -> host
+        state = dist.reshard_state(cfg_r, host, self.n_shards, n_to,
                                    stack=tgt_kind == "mesh")
+        stores = None
+        if self._tiered is not None:
+            meta, stores = trt.split_full(self.cfg, state)
+            state = meta if tgt_kind == "mesh" \
+                else jax.tree.map(jnp.asarray, meta)
         if tgt_kind == "mesh":
             state = dist.place_sharded(state, backend, axis)
             self._ops = _mesh_ops(self.cfg, backend, axis, self._impl,
@@ -1051,4 +1195,10 @@ class Index:
         self._backend_kind = tgt_kind
         self._axis = axis
         self._state = state
+        if self._tiered is not None:
+            from repro.core import tiered as trt
+            self._tiered = trt.TieredRuntime(
+                self.cfg, tgt_kind, mesh=self._mesh, axis=axis,
+                impl=self._impl, block_q=self._block_q,
+                use_tables=self._use_tables, n_shards=n_to, stores=stores)
         return self

@@ -86,7 +86,8 @@ def _spec_tree(state: SlabPoolState, axis: str):
 # Shard-mapped op builders (one code path for dist_* and sivf.Index)
 # ---------------------------------------------------------------------------
 
-def sharded_insert(cfg: SIVFConfig, mesh: Mesh, axis: str = "data"):
+def sharded_insert(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
+                   want_plan: bool = False):
     """Broadcast-ingest op: each shard ingests the ids it owns.
 
     Returns ``run(state, vecs, ext_ids) -> state``. Building the shard_map
@@ -94,27 +95,42 @@ def sharded_insert(cfg: SIVFConfig, mesh: Mesh, axis: str = "data"):
     per shape bucket. Failure is per-shard atomic: an exhausted shard's
     slice of the stacked output equals its input (plus error bits), so a
     partially-failing batch never drops payloads anywhere.
+
+    ``want_plan=True`` (the tiered slab pool, ``core/tiered.py``) makes
+    ``run`` return ``(state, plan)`` where ``plan`` is the stacked [S, B]
+    commit plan of ``ix._insert_impl(want_plan=True)`` — rows a shard did
+    not own (or an aborted shard's whole batch) are -1, so the host-store
+    replay applies exactly the device commits, per shard.
     """
     n = mesh.shape[axis]
 
     def run(state: SlabPoolState, vecs: jax.Array, ext_ids: jax.Array,
-            attrs: jax.Array | None = None) -> SlabPoolState:
+            attrs: jax.Array | None = None):
         def local(st, v, i, *a):
             st = jax.tree.map(lambda x: x[0], st)
             me = jax.lax.axis_index(axis)
             mine = shard_of(i, n) == me
             from repro.core.quantizer import assign
             lists = assign(st.centroids, v.astype(cfg.dtype), cfg.metric)
-            st = ix._insert_impl(cfg, st, v, jnp.where(mine, i, -1), lists,
-                                 attrs=a[0] if a else None)
-            return jax.tree.map(lambda x: x[None], st)
+            out = ix._insert_impl(cfg, st, v, jnp.where(mine, i, -1), lists,
+                                  attrs=a[0] if a else None,
+                                  want_plan=want_plan)
+            if want_plan:
+                st, plan = out
+                return (jax.tree.map(lambda x: x[None], st),
+                        jax.tree.map(lambda x: x[None], plan))
+            return jax.tree.map(lambda x: x[None], out)
 
         extra = () if attrs is None else (attrs,)
+        state_spec = _spec_tree(state, axis)
+        out_specs = state_spec if not want_plan else (
+            state_spec, {"slab": P(axis), "slot": P(axis),
+                         "codes": P(axis)})
         f = shard_map_compat(
             local, mesh=mesh, check_vma=False,
-            in_specs=(_spec_tree(state, axis), P(), P())
+            in_specs=(state_spec, P(), P())
             + tuple(P() for _ in extra),
-            out_specs=_spec_tree(state, axis))
+            out_specs=out_specs)
         return f(state, vecs, ext_ids, *extra)
 
     return run

@@ -86,8 +86,20 @@ def _dedupe_keep_last(ext_ids: jax.Array, valid: jax.Array) -> jax.Array:
 def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
                  ext_ids: jax.Array, lists: jax.Array,
                  codes: jax.Array | None = None,
-                 attrs: jax.Array | None = None) -> SlabPoolState:
+                 attrs: jax.Array | None = None,
+                 want_plan: bool = False):
     """All-or-nothing batched insert.
+
+    With ``want_plan=True`` (the tiered host store, ``core/tiered.py``)
+    the return value is ``(state, plan)`` where ``plan`` maps every *input*
+    row to the coordinates the commit gave it: ``plan["slab"]`` /
+    ``plan["slot"]`` ``[B]`` int32 (-1 for padding rows, out-of-range ids,
+    rows superseded by a later in-batch duplicate, and — because the batch
+    is atomic — *every* row of an aborted batch), plus ``plan["codes"]``
+    ``[B, code_m]`` uint8, the device-encoded PQ codewords in input order
+    (zero-width without PQ). The host store replays exactly the payload
+    writes the device committed, so the two tiers stay bit-identical
+    without ever transferring the payload planes themselves.
 
     With ``cfg.pq`` set, ``codes`` ``[B, m]`` may carry pre-encoded
     codewords (elastic resharding re-routes *stored* codes, so the code
@@ -276,7 +288,22 @@ def _insert_impl(cfg: SIVFConfig, state: SlabPoolState, vecs: jax.Array,
                if f.name != "error"},
             error=pristine.error | err)
 
-    return jax.lax.cond(ok, apply, fail, (staged, state))
+    out = jax.lax.cond(ok, apply, fail, (staged, state))
+    if not want_plan:
+        return out
+    # commit plan in *input* order: scatter the batch-sorted coordinates
+    # back through `order`; -1 marks rows the commit never wrote (padding /
+    # out-of-range / superseded duplicates / the whole batch on abort)
+    inv_slab = jnp.full((b,), -1, jnp.int32).at[order].set(
+        jnp.where(svalid, item_slab, -1))
+    inv_slot = jnp.zeros((b,), jnp.int32).at[order].set(item_slot)
+    plan_slab = jnp.where(ok, inv_slab, -1)
+    if cfg.pq is not None:
+        plan_codes = jnp.zeros((b, cfg.code_m), jnp.uint8
+                               ).at[order].set(new_codes)
+    else:
+        plan_codes = jnp.zeros((b, 0), jnp.uint8)
+    return out, {"slab": plan_slab, "slot": inv_slot, "codes": plan_codes}
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
@@ -661,7 +688,11 @@ def _memory_stats(cfg: SIVFConfig, n_shards: int = 1) -> dict:
     mr = memory_report(cfg)
     out = {"payload_bytes": mr["payload_bytes"] * n_shards,
            "code_bytes": mr["code_bytes"] * n_shards,
-           "attr_bytes": mr["attr_bytes"] * n_shards}
+           "attr_bytes": mr["attr_bytes"] * n_shards,
+           # tiered host/device split (one source of truth: memory_report)
+           "host_bytes": mr["host_bytes"] * n_shards,
+           "device_bytes": mr["device_bytes"] * n_shards,
+           "device_cache_bytes": mr["device_cache_bytes"] * n_shards}
     if cfg.pq is not None:
         out["compression_ratio"] = mr["compression_ratio"]
     return out

@@ -43,11 +43,20 @@ class SIVFConfig:
     pq: PQConfig | None = None     # product-quantized slab payloads (core/pq.py)
     attributes: tuple[str, ...] = ()  # named int32 filter attributes
     #                                   (core/filters.py; order = plane column)
+    device_slabs: int | None = None  # tiered mode: on-device hot-cache frame
+    #                                  budget; payload planes (data / codes /
+    #                                  attrs) then live host-side and searches
+    #                                  prefetch probed slabs (core/tiered.py)
 
     def __post_init__(self):
         bm.n_words(self.capacity)  # validates capacity
         if self.metric not in ("l2", "ip"):
             raise ValueError(f"unknown metric {self.metric}")
+        if self.device_slabs is not None and not (
+                1 <= self.device_slabs <= self.n_slabs):
+            raise ValueError(
+                f"device_slabs must be in [1, n_slabs={self.n_slabs}], got "
+                f"{self.device_slabs}")
         if self.pq is not None and self.dim % self.pq.m:
             raise ValueError(
                 f"dim {self.dim} not divisible by pq.m {self.pq.m}")
@@ -81,6 +90,18 @@ class SIVFConfig:
     def n_attrs(self) -> int:
         """Width of the int32 ``attrs`` plane (0 when filtering is off)."""
         return len(self.attributes)
+
+    @property
+    def tiered(self) -> bool:
+        """True when the payload planes are host-resident (device_slabs)."""
+        return self.device_slabs is not None
+
+    @property
+    def payload_slabs(self) -> int:
+        """Leading dim of the *device* payload planes: 0 in tiered mode (the
+        canonical planes live host-side; the on-device copies are the
+        ``device_slabs`` cache frames of ``core/tiered.py``)."""
+        return 0 if self.tiered else self.n_slabs
 
 
 @partial(
@@ -177,8 +198,11 @@ def init_state(cfg: SIVFConfig, centroids: jax.Array,
             raise ValueError(
                 f"pq_codebooks shape {pq_codebooks.shape} != {cb_shape}")
         cb = jnp.array(pq_codebooks, dtype=jnp.float32)   # copy (donation)
+    ps = cfg.payload_slabs          # 0 in tiered mode: payload planes are
+    #                                 host-resident (core/tiered.py) and the
+    #                                 device keeps only metadata + the cache
     return SlabPoolState(
-        data=jnp.zeros((ns, c, cfg.payload_dim), cfg.dtype),
+        data=jnp.zeros((ps, c, cfg.payload_dim), cfg.dtype),
         ids=jnp.full((ns, c), -1, jnp.int32),
         norms=jnp.zeros((ns, c), jnp.float32),
         bitmap=jnp.zeros((ns, w), jnp.uint32),
@@ -200,9 +224,9 @@ def init_state(cfg: SIVFConfig, centroids: jax.Array,
         tables=jnp.full((cfg.n_lists, cfg.max_chain), -1, jnp.int32),
         table_len=jnp.zeros((cfg.n_lists,), jnp.int32),
         table_pos=jnp.full((ns,), -1, jnp.int32),
-        codes=jnp.zeros((ns, c, cfg.code_m), jnp.uint8),
+        codes=jnp.zeros((ps, c, cfg.code_m), jnp.uint8),
         pq_codebooks=cb,
-        attrs=jnp.zeros((ns, c, cfg.n_attrs), jnp.int32),
+        attrs=jnp.zeros((ps, c, cfg.n_attrs), jnp.int32),
     )
 
 
@@ -231,6 +255,15 @@ def memory_report(cfg: SIVFConfig) -> dict:
     that ratio — they appear in the raw-equivalent row exactly as in the
     stored row, so enabling filtering never inflates the apparent
     compression.
+
+    This is also the single source of truth for the tiered host/device
+    split (``cfg.device_slabs``, core/tiered.py): ``host_bytes`` is the
+    canonical payload store (data + codes + attrs planes — zero when the
+    whole pool is device-resident), ``device_bytes`` is everything the
+    accelerator holds (metadata, codebooks, and in tiered mode the
+    ``device_slabs`` cache frames, reported separately as
+    ``device_cache_bytes``). ``total_bytes`` always equals
+    ``host_bytes + device_bytes``.
     """
     slots = cfg.n_slabs * cfg.capacity
     payload = slots * cfg.payload_dim * jnp.dtype(cfg.dtype).itemsize
@@ -249,15 +282,26 @@ def memory_report(cfg: SIVFConfig) -> dict:
     tables = (cfg.n_lists * cfg.max_chain + cfg.n_lists + cfg.n_slabs) * 4 \
         if cfg.track_tables else 0
     stored = payload + codes + attrs
-    total = stored + codebooks + ids + norms + headers + att + heads + stack \
-        + tables
+    metadata = codebooks + ids + norms + headers + att + heads + stack + tables
+    # tiered split: the canonical payload planes live host-side and the
+    # device adds `device_slabs` cache frames of the same per-slab width
+    per_slab_payload = cfg.capacity * (
+        cfg.payload_dim * jnp.dtype(cfg.dtype).itemsize
+        + cfg.code_m + cfg.n_attrs * 4)
+    cache = (cfg.device_slabs * per_slab_payload) if cfg.tiered else 0
+    host = stored if cfg.tiered else 0
+    device = metadata + cache + (0 if cfg.tiered else stored)
+    total = host + device
     return {
         "payload_bytes": int(payload),
         "code_bytes": int(codes),
         "attr_bytes": int(attrs),
         "codebook_bytes": int(codebooks),
         "compression_ratio": float(raw_equiv / stored) if stored else 1.0,
-        "metadata_bytes": int(total - stored),
+        "metadata_bytes": int(metadata),
+        "host_bytes": int(host),
+        "device_bytes": int(device),
+        "device_cache_bytes": int(cache),
         "total_bytes": int(total),
         "overhead_frac_vs_payload": float((total - stored) / max(stored, 1)),
     }

@@ -54,6 +54,26 @@ def sivf_fused_search(queries, table, data, ids, norms, bitmap, k: int,
                                     interpret=interpret)
 
 
+def translate_table(table, frame_of):
+    """Rewrite a pool-slab-id table into cache-frame coordinates.
+
+    ``table`` [Q, T] int32 pool slab ids (-1 pad), ``frame_of`` [n_slabs]
+    int32 residency map (slab id -> cache frame, core/tiered.py). Returns
+    the same-shape table with every live entry replaced by its cache
+    frame, -1 pads preserved. This is the *only* adaptation the tiered
+    slab cache needs at the kernel boundary: the fused / PQ / filtered
+    scan kernels consume whatever slab table the scalar-prefetch operand
+    carries, so feeding them a frame-translated table plus the cache
+    planes leaves their math untouched — searches stay bit-exact against
+    the all-resident pool. Every entry the caller passes must be resident
+    (``frame_of[entry] >= 0``); prefetch guarantees that, and stale
+    entries for *evicted* slabs are never read because a slab re-enters a
+    table only through a prefetch that re-uploads it first.
+    """
+    import jax.numpy as jnp
+    return jnp.where(table >= 0, frame_of[jnp.clip(table, 0)], -1)
+
+
 # The PQ ADC kernel has no queries+codebooks wrapper here on purpose: the
 # ADC table must be built ONCE per query batch and shared with whatever it
 # is compared against (compiler fusion makes independent builds differ at

@@ -317,34 +317,61 @@ class ServeEngine:
         async, at the *current* committed epoch — before this cycle's
         mutations. Equal filters (same structure AND constants) share a
         tile; the jit cache additionally collapses same-structure tiles
-        onto one executable."""
+        onto one executable.
+
+        On a tiered index (``SIVFConfig(device_slabs=...)``) the tiles are
+        software-pipelined: after dispatching tile ``i``'s scan (async),
+        the scheduler immediately prefetches tile ``i+1``'s probed slabs —
+        the host->device uploads overlap the in-flight kernel, and tile
+        ``i+1``'s search then skips its plan/prefetch stages via the
+        returned ticket. Dispatch-order device execution makes this safe:
+        tile ``i``'s scan is ordered before tile ``i+1``'s cache scatter,
+        so eviction can never clobber a frame a running scan still reads.
+        """
         groups: dict = {}
         for r in searches:
             groups.setdefault((r.k, r.nprobe, r.cfilter), []).append(r)
-        dispatched = []
-        epoch = self._index.epoch
+        tiles: list = []
         for (k, nprobe, cfilter), reqs in sorted(groups.items(), key=repr):
             chunk: list = []
             rows = 0
             for r in reqs + [None]:                # None terminates
                 nq = 0 if r is None else r.queries.shape[0]
                 if chunk and (r is None or rows + nq > self._max_coalesce):
-                    self._dispatch_tile(chunk, k, nprobe, cfilter, epoch,
-                                        dispatched)
+                    qmat = chunk[0].queries if len(chunk) == 1 else \
+                        np.concatenate([c.queries for c in chunk])
+                    tiles.append((chunk, qmat, k, nprobe, cfilter))
                     chunk, rows = [], 0
                 if r is not None:
                     chunk.append(r)
                     rows += nq
+        dispatched: list = []
+        epoch = self._index.epoch
+        ticket = self._prefetch_tile(tiles[0]) if tiles else None
+        for i, tile in enumerate(tiles):
+            self._dispatch_tile(tile, epoch, dispatched, ticket)
+            ticket = self._prefetch_tile(tiles[i + 1]) \
+                if i + 1 < len(tiles) else None
         return dispatched
 
-    def _dispatch_tile(self, chunk: list, k: int, nprobe: int, cfilter,
-                       epoch: int, dispatched: list) -> None:
-        qmat = chunk[0].queries if len(chunk) == 1 else \
-            np.concatenate([r.queries for r in chunk])
+    def _prefetch_tile(self, tile):
+        """Stage a tile's probed slabs ahead of its dispatch (tiered only;
+        ``Index.prefetch`` is a no-op ``None`` on an all-resident index).
+        Prefetch errors are swallowed — the tile's own search will hit the
+        same condition and report it on the right futures."""
+        _, qmat, _, nprobe, _ = tile
+        try:
+            return self._index.prefetch(qmat, nprobe)
+        except Exception:
+            return None
+
+    def _dispatch_tile(self, tile, epoch: int, dispatched: list,
+                       ticket=None) -> None:
+        chunk, qmat, k, nprobe, cfilter = tile
         t0 = self._clock()
         try:
-            res = self._index.search(qmat, k, nprobe,
-                                     filter=cfilter)    # async dispatch
+            res = self._index.search(qmat, k, nprobe, filter=cfilter,
+                                     _prefetched=ticket)  # async dispatch
         except Exception as e:
             for r in chunk:
                 r.future.set_exception(e)
