@@ -17,6 +17,7 @@ from benchmarks.common import (Row, build_sivf, dataset, exact_topk,
                                recall_at_k, timeit)
 from repro import core
 from repro.baselines import ContiguousIVF, FlatIndex, HNSWLite, LSHIndex
+from repro.obs import percentiles
 
 D, NL, N = 64, 32, 20_000
 BATCH = 1_000
@@ -607,8 +608,9 @@ def tab1_tail_latency():
             lats.append(time.perf_counter() - t0)
             next_id += b
         lats = np.array(lats[5:])
+        p99 = percentiles(lats, (99.0,))[99.0]  # shared obs quantile math
         rows.append(Row(f"tab1.{name}.delete_avg", float(lats.mean()),
-                        f"p99={np.percentile(lats, 99) * 1e3:.2f}ms "
+                        f"p99={p99 * 1e3:.2f}ms "
                         f"max={lats.max() * 1e3:.2f}ms"))
     return rows
 
@@ -633,8 +635,9 @@ def tab2_mixed_workload():
             jnp.int32))
         next_id += 200
     lats = np.array(lats[3:])
+    p99 = percentiles(lats, (99.0,))[99.0]      # shared obs quantile math
     rows.append(Row("tab2.search_avg_under_churn", float(lats.mean()),
-                    f"p99={np.percentile(lats, 99) * 1e3:.2f}ms"))
+                    f"p99={p99 * 1e3:.2f}ms"))
     return rows
 
 
@@ -772,7 +775,8 @@ def _streaming_churn_impl(deferred: bool, flush_every: int = 8):
     ops = ("add", "remove", "search") + (("flush",) if deferred else ())
     for op in ops:
         a = np.asarray(lat[op])
-        p50, p99 = float(np.percentile(a, 50)), float(np.percentile(a, 99))
+        p = percentiles(a, (50.0, 99.0))        # shared obs quantile math
+        p50, p99 = p[50.0], p[99.0]
         summary["p50_us"][op] = round(p50 * 1e6, 1)
         summary["p99_us"][op] = round(p99 * 1e6, 1)
         rows.append(Row(f"{tag}.{op}.p50", p50, f"p99={p99 * 1e6:.0f}us"))

@@ -16,10 +16,14 @@ widen baseline (plus the jit executable count across filter structures)
 to ``BENCH_filter.json``; ``serve_churn`` records the
 open-loop mixed-workload SLO sweep (p50/p99/p999 search latency idle vs
 under ingest at 3 arrival rates + sustained mutation throughput) to
-``BENCH_serve.json``; ``tiered_sweep`` records the host-tier/device-
+``BENCH_serve.json`` (plus ``TELEMETRY_serve.json``, the engine's
+end-of-run telemetry snapshot, uploaded as a CI artifact);
+``tiered_sweep`` records the host-tier/device-
 cache sweep (hit rate + QPS at working sets of 0.25x-2x the device slab
 budget, bit-parity asserted against the all-resident pool) to
-``BENCH_tiered.json`` (the slow CI job's perf data points —
+``BENCH_tiered.json``; ``obs_overhead`` records the telemetry-on vs
+telemetry-off serve p99 comparison (median paired ratio gated at 1.05x
+in-bench) to ``BENCH_obs.json`` (the slow CI job's perf data points —
 ``scripts/check_bench.py`` gates them against committed baselines).
 
 Exceptions inside one benchmark print a ``<name>.ERROR`` row and the run
@@ -129,6 +133,11 @@ def main() -> None:
         run_summary_artifact("tiered_sweep",
                              tiered_bench.tiered_sweep_summary,
                              "BENCH_tiered.json", results)
+    if only is None or "obs_overhead" in only:
+        from benchmarks import obs_bench
+        run_summary_artifact("obs_overhead",
+                             obs_bench.obs_overhead_summary,
+                             "BENCH_obs.json", results)
     for name, fn in artifacts:
         if only and name not in only:
             continue

@@ -30,6 +30,7 @@ import numpy as np
 
 import sivf
 from benchmarks.common import Row
+from repro.obs import latency_summary_ms
 
 DIM = 32
 N_LISTS = 8
@@ -72,18 +73,22 @@ def _run_point(rng, ratio_key: str, ratio: float):
     it, if_, cents = _build_pair(rng, n)
     batches = _query_schedule(rng, cents)
 
-    def sweep(idx):
+    def sweep(idx, lats=None):
         out = []
         for qs in batches:
+            t = time.perf_counter()
             res = idx.search(qs, k=K, nprobe=NPROBE)
             out.append((np.asarray(res.labels), np.asarray(res.distances)))
+            if lats is not None:        # np.asarray above forced the sync
+                lats.append(time.perf_counter() - t)
         return out
 
     sweep(it), sweep(if_)                       # warmup: jit + cache fill
     s0 = it.stats()
+    batch_lats: list[float] = []
     t0 = time.perf_counter()
     for _ in range(TIMED_ROTATIONS):
-        got = sweep(it)
+        got = sweep(it, batch_lats)
     t_tiered = time.perf_counter() - t0
     s1 = it.stats()
     t0 = time.perf_counter()
@@ -108,10 +113,12 @@ def _run_point(rng, ratio_key: str, ratio: float):
         "all_resident_qps": round(nq / t_full, 1),
         "parity": 1.0 if parity else 0.0,
     }
+    point.update(latency_summary_ms(batch_lats))    # per-batch, shared math
     row = Row(
         f"tiered_sweep.{ratio_key}", t_tiered / nq,
         f"ws={ratio:g}x hit_rate={point['hit_rate']:.3f} "
         f"qps={point['qps']:.0f} full={point['all_resident_qps']:.0f}qps "
+        f"batch_p99={point['p99_ms']}ms "
         f"parity={'OK' if parity else 'FAIL'}")
     return row, point
 

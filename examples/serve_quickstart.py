@@ -4,8 +4,9 @@ Three client threads — two searchers and one ingest stream — hit a
 single `sivf.Index` through `sivf.ServeEngine`: searches are coalesced
 into shared kernel tiles, mutations ride the deferred pipeline with
 atomic per-batch commits, and a tight tenant quota shows typed
-backpressure instead of unbounded queueing. See docs/serving.md for the
-full contract.
+backpressure instead of unbounded queueing. Telemetry is switched on
+for the whole run and a snapshot digest prints at exit — see
+docs/serving.md and docs/observability.md for the full contracts.
 
 Run: PYTHONPATH=src python examples/serve_quickstart.py
 """
@@ -18,6 +19,7 @@ import sivf
 
 D, N_LISTS = 32, 16
 rng = np.random.default_rng(7)
+sivf.telemetry.enable()         # process-default Telemetry: record this run
 
 # 1. deferred-mode handle + engine (one engine per handle)
 train = rng.normal(size=(2048, D)).astype(np.float32)
@@ -80,4 +82,17 @@ print(f"epochs committed: {index.epoch}, n_live: {index.stats()['n_live']}")
 print(f"coalesce mean {s['coalesce_mean']}, search executables "
       f"{observed} (bound {bound})")
 assert index.stats()["n_live"] == 4096          # window slid cleanly
+
+# 4. telemetry snapshot at exit: what the engine saw, per tenant + stage
+snap = engine.telemetry()
+print("-- telemetry snapshot --")
+for series in snap["metrics"]["sivf_serve_requests_total"]["series"]:
+    lab = series["labels"]
+    print(f"requests tenant={lab['tenant']} op={lab['op']}: "
+          f"{int(series['total'])}")
+for series in snap["metrics"]["sivf_stage_seconds"]["series"]:
+    print(f"stage {series['labels']['stage']}: n={series['count']} "
+          f"p99~{series['p99_est'] * 1e3:.2f}ms")
+print(f"jit compile events: {index.compile_events()}, "
+      f"slow queries logged: {len(snap['slow_queries'])}")
 print("serve quickstart OK")

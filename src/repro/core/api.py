@@ -526,10 +526,15 @@ class Index:
                  axis: str = "data", impl: str = "xla", block_q: int = 8,
                  use_tables: bool | None = None, strict: bool = False,
                  min_bucket: int = 64, deferred: bool = False,
-                 pq_codebooks=None, _state: SlabPoolState | None = None,
+                 pq_codebooks=None, telemetry=None,
+                 _state: SlabPoolState | None = None,
                  _pq_trained: bool | None = None):
         if min_bucket < 1:
             raise ValueError("min_bucket must be >= 1")
+        if telemetry is None:
+            from repro import obs
+            telemetry = obs.default()
+        self._telemetry = telemetry
         if pq_codebooks is not None and cfg.pq is None:
             raise ValueError("pq_codebooks given but cfg.pq is None")
         self.cfg = cfg
@@ -577,11 +582,27 @@ class Index:
             self._tiered = trt.TieredRuntime(
                 cfg, self._backend_kind, mesh=self._mesh, axis=axis,
                 impl=impl, block_q=self._block_q, use_tables=use_tables,
-                n_shards=self._ops.n_shards, stores=stores)
+                n_shards=self._ops.n_shards, stores=stores,
+                telemetry=self._telemetry)
         self._state = _state
         if _pq_trained is None:
             _pq_trained = cfg.pq is None or pq_codebooks is not None
         self._pq_trained = bool(_pq_trained)
+        # jit-compile observability: executables existing at construction
+        # (lru_cached op sets are shared between same-keyed handles) are
+        # the baseline; _note_compiles() turns later growth into counter
+        # events so a compile storm is visible in a scrape, not just tests
+        self._m_compiles = self._telemetry.counter(
+            "sivf_jit_compile_events_total",
+            "new jit executables observed since handle construction")
+        self._m_executables = self._telemetry.gauge(
+            "sivf_jit_executables",
+            "current executable count across this handle's op set")
+        self._m_mutations = self._telemetry.counter(
+            "sivf_index_mutation_rows_total",
+            "mutation rows dispatched through this handle", ("op",))
+        self._compiles_seen = self._total_compiles()
+        self._compile_base = self._compiles_seen
 
     # -- introspection ------------------------------------------------------
 
@@ -636,6 +657,7 @@ class Index:
             s["tiered"] = False
             s["resident_slabs"] = s["slabs_used"]
             s["hit_rate"] = 1.0
+            s["hit_rate_kind"] = "cumulative"
         return s
 
     def compile_stats(self) -> dict:
@@ -659,6 +681,34 @@ class Index:
             # self._ops.search (whose count stays 0 on a tiered handle)
             out.update(self._tiered.compile_stats())
         return out
+
+    def _total_compiles(self) -> int:
+        return sum(v for v in self.compile_stats().values() if v > 0)
+
+    def _note_compiles(self) -> None:
+        """Fold executable-count growth into the telemetry registry
+        (``sivf_jit_compile_events_total`` counts *new* executables since
+        construction — the compile-storm alert signal)."""
+        if not self._telemetry.enabled:
+            return
+        now = self._total_compiles()
+        if now > self._compiles_seen:
+            self._m_compiles.inc(now - self._compiles_seen)
+        self._compiles_seen = max(self._compiles_seen, now)
+        self._m_executables.set(now)
+
+    def compile_events(self) -> int:
+        """New jit executables observed since this handle was built (the
+        value ``sivf_jit_compile_events_total`` accumulates)."""
+        return max(self._total_compiles(), self._compiles_seen) \
+            - self._compile_base
+
+    def telemetry(self) -> dict:
+        """JSON-able snapshot of this handle's telemetry (metrics +
+        slow-query log). The handle records into the process default
+        unless constructed with an explicit ``telemetry=``."""
+        self._note_compiles()
+        return self._telemetry.snapshot()
 
     # -- batch bucketing ----------------------------------------------------
 
@@ -787,20 +837,26 @@ class Index:
             raise ValueError(
                 "attrs= given but SIVFConfig(attributes=...) is empty")
         bucket = self._bucket(ids_a.shape[0])
-        pv = self._pad_rows(vecs, bucket)
-        pa = self._pad_attrs(attrs_np, bucket) if self.cfg.n_attrs else None
-        if self._tiered is not None:
-            self._state, aux, plan = self._ops.insert(
-                self._state, pv, self._pad_ids(ids_a, bucket), pa)
-            # queue the commit plan for the host-store replay; host inputs
-            # ride along as-is (no transfer at drain), device inputs as the
-            # padded device rows (fetched with the plan in one device_get)
-            self._tiered.queue_plan(
-                plan, vecs if isinstance(vecs, np.ndarray) else pv,
-                attrs_np if self.cfg.n_attrs else None)
-        else:
-            self._state, aux = self._ops.insert(
-                self._state, pv, self._pad_ids(ids_a, bucket), pa)
+        with self._telemetry.span("mutation.dispatch", root="auto",
+                                  op="add", epoch=self._epoch + 1):
+            pv = self._pad_rows(vecs, bucket)
+            pa = self._pad_attrs(attrs_np, bucket) if self.cfg.n_attrs \
+                else None
+            if self._tiered is not None:
+                self._state, aux, plan = self._ops.insert(
+                    self._state, pv, self._pad_ids(ids_a, bucket), pa)
+                # queue the commit plan for the host-store replay; host
+                # inputs ride along as-is (no transfer at drain), device
+                # inputs as the padded device rows (fetched with the plan
+                # in one device_get)
+                self._tiered.queue_plan(
+                    plan, vecs if isinstance(vecs, np.ndarray) else pv,
+                    attrs_np if self.cfg.n_attrs else None)
+            else:
+                self._state, aux = self._ops.insert(
+                    self._state, pv, self._pad_ids(ids_a, bucket), pa)
+        if self._telemetry.enabled:
+            self._m_mutations.inc(int(ids_a.shape[0]), op="add")
         return self._emit("add", aux, bucket, strict)
 
     def remove(self, ids, *, strict: bool | None = None
@@ -808,8 +864,12 @@ class Index:
         """Evict a batch of ids in O(1); absent ids count as ``rejected``."""
         ids_a = self._as_batch(ids, np.int32, flat=True)
         bucket = self._bucket(ids_a.shape[0])
-        self._state, aux = self._ops.delete(self._state,
-                                            self._pad_ids(ids_a, bucket))
+        with self._telemetry.span("mutation.dispatch", root="auto",
+                                  op="remove", epoch=self._epoch + 1):
+            self._state, aux = self._ops.delete(
+                self._state, self._pad_ids(ids_a, bucket))
+        if self._telemetry.enabled:
+            self._m_mutations.inc(int(ids_a.shape[0]), op="remove")
         return self._emit("remove", aux, bucket, strict)
 
     def _emit(self, op: str, aux: dict, bucket: int, strict: bool | None):
@@ -861,28 +921,32 @@ class Index:
         (``[]``) when nothing is pending.
         """
         pending, self._pending = self._pending, []
-        if self._tiered is not None:     # host store catches up at the same
-            self._tiered.drain_plans()   # sync point the reports resolve at
-        reports: list[MutationReport] = []
-        first_err: MutationRejected | None = None
-        k = 0
-        try:
-            host_auxes = _resolve_aux([a for _, _, a, _, _ in pending])
-            for k, (fut, op, _, bucket, strict) in enumerate(pending):
-                strict = self.strict if strict is None else strict
-                try:
-                    rep = self._finalize(op, host_auxes[k], bucket, strict)
-                except MutationRejected as e:
-                    rep = e.report
-                    if first_err is None:
-                        first_err = e
-                fut._resolved = rep
-                reports.append(rep)
-        except BaseException:
-            # an unexpected error (device failure, interrupt) mid-queue:
-            # re-queue the unresolved tail so no future is orphaned
-            self._pending = pending[k:] + self._pending
-            raise
+        with self._telemetry.span("mutation.flush", root="auto",
+                                  batches=len(pending), epoch=self._epoch):
+            if self._tiered is not None:  # host store catches up at the
+                self._tiered.drain_plans()  # sync point reports resolve at
+            reports: list[MutationReport] = []
+            first_err: MutationRejected | None = None
+            k = 0
+            try:
+                host_auxes = _resolve_aux([a for _, _, a, _, _ in pending])
+                for k, (fut, op, _, bucket, strict) in enumerate(pending):
+                    strict = self.strict if strict is None else strict
+                    try:
+                        rep = self._finalize(op, host_auxes[k], bucket,
+                                             strict)
+                    except MutationRejected as e:
+                        rep = e.report
+                        if first_err is None:
+                            first_err = e
+                    fut._resolved = rep
+                    reports.append(rep)
+            except BaseException:
+                # an unexpected error (device failure, interrupt) mid-queue:
+                # re-queue the unresolved tail so no future is orphaned
+                self._pending = pending[k:] + self._pending
+                raise
+        self._note_compiles()
         if first_err is not None:
             raise first_err
         return reports
@@ -933,17 +997,23 @@ class Index:
         q = queries.shape[0]
         bucket = self._bucket(q)
         padded = self._pad_rows(queries, bucket)
-        if self._tiered is not None:
-            # three-stage tiered path: plan (probe->slab table), prefetch
-            # (make probed slabs cache-resident), frame-translated scan.
-            # A valid ``_prefetched`` ticket (Index.prefetch) skips the
-            # first two stages; a stale one falls back transparently.
-            d, lab = self._tiered.search(
-                self._state, padded, int(k), nprobe, fstruct, fconsts,
-                epoch=self._epoch, ticket=_prefetched)
-        else:
-            d, lab = self._ops.search(self._state, padded, int(k), nprobe,
-                                      fstruct, fconsts)
+        with self._telemetry.span("index.search", root="auto",
+                                  epoch=self._epoch,
+                                  filter=None if fstruct is None
+                                  else str(fstruct)):
+            if self._tiered is not None:
+                # three-stage tiered path: plan (probe->slab table),
+                # prefetch (make probed slabs cache-resident), frame-
+                # translated scan. A valid ``_prefetched`` ticket
+                # (Index.prefetch) skips the first two stages; a stale one
+                # falls back transparently.
+                d, lab = self._tiered.search(
+                    self._state, padded, int(k), nprobe, fstruct, fconsts,
+                    epoch=self._epoch, ticket=_prefetched)
+            else:
+                d, lab = self._ops.search(self._state, padded, int(k),
+                                          nprobe, fstruct, fconsts)
+        self._note_compiles()
         return SearchResult(distances=d[:q], labels=lab[:q], k=int(k),
                             nprobe=nprobe, padded_to=bucket)
 
@@ -1161,6 +1231,11 @@ class Index:
         search results are identical before and after and subsequent
         mutations land on the owning shard. Returns ``self``.
         """
+        with self._telemetry.span("reshard", root="auto",
+                                  n_from=self.n_shards):
+            return self._reshard_impl(backend, axis)
+
+    def _reshard_impl(self, backend, axis):
         from repro.core import distributed as dist
         self.flush()
         axis = self._axis if axis is None else axis
@@ -1197,8 +1272,12 @@ class Index:
         self._state = state
         if self._tiered is not None:
             from repro.core import tiered as trt
+            # rebuild the runtime for the new topology but CARRY the
+            # cumulative cache counters (and their window marks): before
+            # ISSUE 9 a reshard silently zeroed hit_rate's history
             self._tiered = trt.TieredRuntime(
                 self.cfg, tgt_kind, mesh=self._mesh, axis=axis,
                 impl=self._impl, block_q=self._block_q,
-                use_tables=self._use_tables, n_shards=n_to, stores=stores)
+                use_tables=self._use_tables, n_shards=n_to, stores=stores,
+                telemetry=self._telemetry).carry_from(self._tiered)
         return self

@@ -367,11 +367,14 @@ def reshard_state(cfg: SIVFConfig, state: SlabPoolState, n_from: int,
     """
     if n_to < 1:
         raise ValueError(f"n_to must be >= 1, got {n_to}")
+    from repro import obs
+    tel = obs.default()
     actual = _leading_shards(state)
     if n_from != actual:
         raise ValueError(
             f"state has {actual} shard(s) but n_from={n_from}")
-    rows = flatten_live_rows(cfg, state)
+    with tel.span("reshard.flatten"):
+        rows = flatten_live_rows(cfg, state)
     ids, lists = rows["ids"], rows["lists"]
     _check_reshard_fit(cfg, ids, lists, n_to)
     codes = rows["codes"] if cfg.pq is not None else None
@@ -384,16 +387,29 @@ def reshard_state(cfg: SIVFConfig, state: SlabPoolState, n_from: int,
                                        jnp.asarray(rows["codes"])))
     else:
         vecs = np.asarray(rows["data"], np.float32)
+    if tel.enabled:
+        # the bytes that cross the host on this flatten-and-rebuild path
+        # (ROADMAP's device-side all-to-all would make this counter ~0)
+        moved = sum(rows[k].nbytes for k in ("ids", "lists", "data",
+                                             "codes", "attrs"))
+        tel.counter("sivf_transfer_bytes_total",
+                    "explicit host<->device transfer bytes by direction "
+                    "and stage", ("direction", "stage")
+                    ).inc(moved, direction="d2h", stage="reshard")
+        tel.counter("sivf_reshard_rows_total",
+                    "live rows re-routed by reshard_state"
+                    ).inc(int(ids.shape[0]))
     shard = ids % n_to
     shards = []
     for t in range(n_to):
         sel = shard == t
-        shards.append(_build_shard(cfg, rows["centroids"],
-                                   rows["pq_codebooks"], vecs[sel],
-                                   ids[sel], lists[sel],
-                                   None if codes is None else codes[sel],
-                                   rows["attrs"][sel] if cfg.n_attrs
-                                   else None))
+        with tel.span("reshard.build_shard", shard=t):
+            shards.append(_build_shard(cfg, rows["centroids"],
+                                       rows["pq_codebooks"], vecs[sel],
+                                       ids[sel], lists[sel],
+                                       None if codes is None else codes[sel],
+                                       rows["attrs"][sel] if cfg.n_attrs
+                                       else None))
     if n_to == 1 and not stack:
         return shards[0]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)

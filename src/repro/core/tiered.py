@@ -71,6 +71,7 @@ from repro.core import index as ix
 from repro.core import quantizer
 from repro.core.state import SIVFConfig, SlabPoolState
 from repro.kernels.sivf_scan.ops import translate_table
+from repro.obs.metrics import WindowedCounter
 
 
 # ---------------------------------------------------------------------------
@@ -338,10 +339,13 @@ class TieredRuntime:
     cache planes sharded with the state.
     """
 
+    _COUNTERS = ("hits", "misses", "refs", "unique_refs", "uploads",
+                 "evictions")
+
     def __init__(self, cfg: SIVFConfig, backend_kind: str, mesh=None,
                  axis: str = "data", impl: str = "xla", block_q: int = 8,
                  use_tables: bool | None = None, n_shards: int = 1,
-                 stores: list[HostStore] | None = None):
+                 stores: list[HostStore] | None = None, telemetry=None):
         if not cfg.tiered:
             raise ValueError("TieredRuntime needs SIVFConfig(device_slabs=)")
         self.cfg = cfg
@@ -361,14 +365,29 @@ class TieredRuntime:
         self.cache = self._init_cache_dev()
         self._plans: list[dict] = []     # queued insert plans (device refs)
         self.seq = 0                     # prefetch sequence number
-        # counters (aggregated over shards; Index.stats surfaces them)
-        self.hits = 0                    # resident probed slabs
-        self.misses = 0                  # uploaded-on-demand probed slabs
-        self.refs = 0                    # raw table references (pre-dedupe)
-        self.unique_refs = 0             # post-dedupe references
-        self.uploads = 0                 # slabs uploaded (miss + dirty)
-        self.evictions = 0               # occupied frames recycled
+        # counters (aggregated over shards; Index.stats surfaces them) —
+        # WindowedCounters: cumulative totals + a delta window so stats()
+        # can report both; roll_window()/carry_from() manage the lifecycle
+        self.hits = WindowedCounter()        # resident probed slabs
+        self.misses = WindowedCounter()      # uploaded-on-demand probed slabs
+        self.refs = WindowedCounter()        # raw table refs (pre-dedupe)
+        self.unique_refs = WindowedCounter() # post-dedupe references
+        self.uploads = WindowedCounter()     # slabs uploaded (miss + dirty)
+        self.evictions = WindowedCounter()   # occupied frames recycled
         self.last_prefetch: dict = {}
+        if telemetry is None:
+            from repro import obs
+            telemetry = obs.default()
+        self.tel = telemetry
+        t = telemetry
+        self._m_cache = t.counter(
+            "sivf_tiered_cache_events_total",
+            "tiered-cache events: hit/miss/eviction/upload/dirty_refresh/"
+            "dedup_saved (probed-slab granularity)", ("event",))
+        self._m_bytes = t.counter(
+            "sivf_transfer_bytes_total",
+            "explicit host<->device transfer bytes by direction and stage",
+            ("direction", "stage"))
 
     # -- construction helpers ----------------------------------------------
 
@@ -449,7 +468,8 @@ class TieredRuntime:
                                 self.use_tables)
         else:
             fn = _plan_ops(self.cfg, self.use_tables)
-        return fn(state, queries, nprobe=nprobe)
+        with self.tel.span("plan"):      # dispatch time; sync lands in
+            return fn(state, queries, nprobe=nprobe)   # prefetch's get
 
     def prefetch(self, table: jax.Array, nprobe: int, epoch: int
                  ) -> PrefetchTicket:
@@ -460,25 +480,36 @@ class TieredRuntime:
         ``device_put`` plus one donated scatter call. A fully warm cache
         performs **zero** transfers and zero device work here.
         """
-        self.drain_plans()
-        tbl = np.asarray(jax.device_get(table))
-        per_shard = tbl if tbl.ndim == 3 else tbl[None]
-        up_frames, up_slabs, total_up = [], [], 0
-        stats = {"refs": 0, "unique": 0, "hits": 0, "misses": 0,
-                 "dirty_refresh": 0, "uploaded": 0}
-        for s in range(self.n_shards):
-            f_s, s_s = self._prefetch_shard(s, per_shard[s], stats)
-            up_frames.append(f_s)
-            up_slabs.append(s_s)
-            total_up += len(f_s)
-        stats["dedup_saved"] = stats["refs"] - stats["unique"]
-        self.last_prefetch = stats
-        self.seq += 1
-        if total_up:
-            self._upload(up_frames, up_slabs)
-        return PrefetchTicket(table=table, nprobe=nprobe,
-                              padded_q=int(per_shard.shape[-2]),
-                              seq=self.seq, epoch=epoch)
+        with self.tel.span("prefetch"):
+            self.drain_plans()
+            tbl = np.asarray(jax.device_get(table))
+            per_shard = tbl if tbl.ndim == 3 else tbl[None]
+            up_frames, up_slabs, total_up = [], [], 0
+            stats = {"refs": 0, "unique": 0, "hits": 0, "misses": 0,
+                     "dirty_refresh": 0, "uploaded": 0, "evicted": 0}
+            for s in range(self.n_shards):
+                f_s, s_s = self._prefetch_shard(s, per_shard[s], stats)
+                up_frames.append(f_s)
+                up_slabs.append(s_s)
+                total_up += len(f_s)
+            stats["dedup_saved"] = stats["refs"] - stats["unique"]
+            self.last_prefetch = stats
+            self.seq += 1
+            if total_up:
+                self._upload(up_frames, up_slabs)
+            if self.tel.enabled:
+                m = self._m_cache
+                m.inc(stats["hits"], event="hit")
+                m.inc(stats["misses"], event="miss")
+                m.inc(stats["evicted"], event="eviction")
+                m.inc(stats["uploaded"], event="upload")
+                m.inc(stats["dirty_refresh"], event="dirty_refresh")
+                m.inc(stats["dedup_saved"], event="dedup_saved")
+                self._m_bytes.inc(tbl.nbytes, direction="d2h",
+                                  stage="prefetch")
+            return PrefetchTicket(table=table, nprobe=nprobe,
+                                  padded_q=int(per_shard.shape[-2]),
+                                  seq=self.seq, epoch=epoch)
 
     def _prefetch_shard(self, s: int, tbl: np.ndarray, stats: dict
                         ) -> tuple[list[int], list[int]]:
@@ -488,8 +519,8 @@ class TieredRuntime:
         uniq = np.unique(flat)
         stats["refs"] += int(flat.size)
         stats["unique"] += int(uniq.size)
-        self.refs += int(flat.size)
-        self.unique_refs += int(uniq.size)
+        self.refs.add(int(flat.size))
+        self.unique_refs.add(int(uniq.size))
         f_cap = self.cfg.device_slabs
         if uniq.size > f_cap:
             raise ValueError(
@@ -505,8 +536,8 @@ class TieredRuntime:
         stats["hits"] += int(hit_slabs.size)
         stats["misses"] += int(miss_slabs.size)
         stats["dirty_refresh"] += int(dirty_hits.size)
-        self.hits += int(hit_slabs.size)
-        self.misses += int(miss_slabs.size)
+        self.hits.add(int(hit_slabs.size))
+        self.misses.add(int(miss_slabs.size))
         res.clock += 1
         res.tick[res.frame_of[hit_slabs]] = res.clock
         up_frames: list[int] = []
@@ -525,7 +556,8 @@ class TieredRuntime:
                 if old >= 0:
                     res.frame_of[old] = -1
                     res.dirty.discard(old)
-                    self.evictions += 1
+                    self.evictions.add(1)
+                    stats["evicted"] += 1
                 res.slab_of_frame[fr] = sl
                 res.frame_of[sl] = fr
                 res.tick[fr] = res.clock
@@ -536,7 +568,7 @@ class TieredRuntime:
             res.dirty.discard(int(sl))
             up_frames.append(int(res.frame_of[sl]))
             up_slabs.append(int(sl))
-        self.uploads += len(up_frames)
+        self.uploads.add(len(up_frames))
         stats["uploaded"] += len(up_frames)
         return up_frames, up_slabs
 
@@ -562,12 +594,17 @@ class TieredRuntime:
         if self.backend_kind == "mesh":
             args = jax.device_put((frames, slabs, drows, crows, arows))
             self.cache = _upload_ops_mesh(self.cfg, n)(self.cache, *args)
+            up_bytes = sum(a.nbytes for a in
+                           (frames, slabs, drows, crows, arows))
         else:
             # ONE explicit host->device transfer per prefetch-with-misses:
             # the packed tuple is the only transfer site in steady state
             args = jax.device_put((frames[0], slabs[0], drows[0], crows[0],
                                    arows[0]))
             self.cache = _upload_ops(self.cfg)(self.cache, *args)
+            up_bytes = sum(a.nbytes for a in args)
+        if self.tel.enabled:
+            self._m_bytes.inc(up_bytes, direction="h2d", stage="prefetch")
 
     def scan(self, state: SlabPoolState, queries: jax.Array,
              table: jax.Array, k: int, fstruct, fconsts
@@ -578,8 +615,9 @@ class TieredRuntime:
                                 self.block_q)
         else:
             fn = _scan_ops(self.cfg, self.impl, self.block_q)
-        return fn(state, self.cache, queries, table, k=k, fstruct=fstruct,
-                  fconsts=fconsts)
+        with self.tel.span("scan"):      # dispatch time; the caller's
+            return fn(state, self.cache, queries, table, k=k,   # sync point
+                      fstruct=fstruct, fconsts=fconsts)  # absorbs exec time
 
     def search(self, state: SlabPoolState, queries: jax.Array, k: int,
                nprobe: int, fstruct=None, fconsts=None, epoch: int = 0,
@@ -616,21 +654,44 @@ class TieredRuntime:
             scan = _scan_ops(self.cfg, self.impl, self.block_q)
         return {"tiered_plan": size(plan), "tiered_scan": size(scan)}
 
+    def roll_window(self) -> None:
+        """Start a new stats window: the ``*_window`` reads in
+        :meth:`stats` reset to 0 (cumulative totals are untouched)."""
+        for name in self._COUNTERS:
+            getattr(self, name).mark()
+
+    def carry_from(self, other: "TieredRuntime") -> "TieredRuntime":
+        """Adopt another runtime's cumulative counters (and their window
+        marks). ``Index.reshard`` rebuilds the runtime and calls this so a
+        reshard no longer silently zeroes the cache statistics."""
+        for name in self._COUNTERS:
+            getattr(self, name).carry(getattr(other, name))
+        return self
+
     def stats(self) -> dict:
-        probed = self.hits + self.misses
+        probed = self.hits.total + self.misses.total
+        probed_w = self.hits.window + self.misses.window
         return {
             "tiered": True,
             "device_slabs": self.cfg.device_slabs,
             "resident_slabs": sum(r.resident_slabs for r in self.res),
             "per_shard_resident": [r.resident_slabs for r in self.res],
-            "hit_rate": (self.hits / probed) if probed else 1.0,
-            "cache_hits": self.hits,
-            "cache_misses": self.misses,
-            "cache_uploads": self.uploads,
-            "cache_evictions": self.evictions,
-            "dedup_refs": self.refs,
-            "dedup_unique_refs": self.unique_refs,
-            "dedup_saved_fetches": self.refs - self.unique_refs,
+            # labeled explicitly: hit_rate is CUMULATIVE (handle lifetime,
+            # carried across reshard); hit_rate_window covers only the
+            # probes since the last roll_window()
+            "hit_rate": (self.hits.total / probed) if probed else 1.0,
+            "hit_rate_kind": "cumulative",
+            "hit_rate_window": (self.hits.window / probed_w)
+            if probed_w else 1.0,
+            "cache_hits": self.hits.total,
+            "cache_misses": self.misses.total,
+            "cache_uploads": self.uploads.total,
+            "cache_evictions": self.evictions.total,
+            "cache_hits_window": self.hits.window,
+            "cache_misses_window": self.misses.window,
+            "dedup_refs": self.refs.total,
+            "dedup_unique_refs": self.unique_refs.total,
+            "dedup_saved_fetches": self.refs.total - self.unique_refs.total,
             "dirty_slabs": sum(len(r.dirty) for r in self.res),
             "pending_plans": len(self._plans),
         }

@@ -54,6 +54,25 @@ def sivf_fused_search(queries, table, data, ids, norms, bitmap, k: int,
                                     interpret=interpret)
 
 
+def executable_counts() -> dict[str, int]:
+    """Observed jit-cache sizes of the ops-level kernel entry points.
+
+    The telemetry layer's kernel-granularity twin of
+    ``Index.compile_stats()``: these module-level jits are shared by every
+    caller in the process, so a growing count here during steady-state
+    serving is a compile storm at the kernel boundary (a shape or static
+    argument is churning). -1 when the private cache-size API is
+    unavailable.
+    """
+    def size(f):
+        try:
+            return int(f._cache_size())
+        except Exception:               # pragma: no cover - private API
+            return -1
+    return {"sivf_scan": size(sivf_scan),
+            "sivf_fused_search": size(sivf_fused_search)}
+
+
 def translate_table(table, frame_of):
     """Rewrite a pool-slab-id table into cache-frame coordinates.
 

@@ -106,6 +106,10 @@ class ServeEngine:
                   slice. (``remove`` stays id-addressed; partition the id
                   space per tenant if eviction isolation matters too.)
                   Requires ``SIVFConfig(attributes=...)``.
+    telemetry:    a ``repro.obs.Telemetry`` to record into. Defaults to
+                  the served index's instance so engine tile spans and
+                  the index's plan/prefetch/scan stage spans land in one
+                  registry (see docs/observability.md).
     clock:        injectable monotonic clock (tests drive quota refill
                   deterministically).
     """
@@ -117,7 +121,7 @@ class ServeEngine:
                  max_queue: int = 1024, max_coalesce: int = 256,
                  flush_every: int = 8,
                  tenant_filters: "dict | None" = None,
-                 clock=time.monotonic):
+                 telemetry=None, clock=time.monotonic):
         if not isinstance(index, Index):
             raise TypeError(f"index must be a sivf.Index, got {index!r}")
         if not index.deferred:
@@ -166,6 +170,30 @@ class ServeEngine:
         self._n_tiles = 0
         self._n_mutations = 0
         self._coalesce_sizes: list[int] = []
+        # telemetry: default to the index's instance so one registry holds
+        # the whole request path (tile roots + plan/prefetch/scan stages)
+        self._tel = telemetry if telemetry is not None \
+            else index._telemetry
+        t = self._tel
+        self._m_requests = t.counter(
+            "sivf_serve_requests_total",
+            "admitted serve requests by tenant and op", ("tenant", "op"))
+        self._m_rows = t.counter(
+            "sivf_serve_rows_total",
+            "query/mutation rows admitted by tenant and op",
+            ("tenant", "op"))
+        self._m_backpressure = t.counter(
+            "sivf_serve_backpressure_total",
+            "submits rejected by tenant and backpressure kind",
+            ("tenant", "kind"))
+        self._m_queue_depth = t.gauge(
+            "sivf_serve_queue_depth", "requests waiting in the engine queue")
+        self._m_epoch = t.gauge(
+            "sivf_serve_epoch", "committed mutation-batch prefix length")
+        self._m_coalesce = t.histogram(
+            "sivf_serve_coalesce_rows",
+            "query rows coalesced into one kernel tile",
+            buckets=tuple(float(2 ** i) for i in range(13)))
         if index.pending_count:               # engine owns the queue from here
             index.flush()
         self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -231,15 +259,24 @@ class ServeEngine:
         n_lists = self._index.cfg.n_lists
         nprobe = n_lists if nprobe is None else min(int(nprobe), n_lists)
         cfilter = self._effective_filter(tenant, filter)
-        with self._cv:
-            st = self._tenant_state(tenant)
-            self._check_open_and_capacity(st, tenant)
-            st.admit_search(tenant)
-            fut = ServeFuture(on_done=lambda _f, s=st: self._release(s))
-            self._queue.append(SearchRequest(
-                tenant=tenant, queries=q, k=k, nprobe=nprobe, future=fut,
-                t_submit=self._clock(), cfilter=cfilter))
-            self._cv.notify()
+        try:
+            with self._cv:
+                st = self._tenant_state(tenant)
+                self._check_open_and_capacity(st, tenant)
+                st.admit_search(tenant)
+                fut = ServeFuture(on_done=lambda _f, s=st: self._release(s))
+                self._queue.append(SearchRequest(
+                    tenant=tenant, queries=q, k=k, nprobe=nprobe,
+                    future=fut, t_submit=self._clock(), cfilter=cfilter))
+                depth = len(self._queue)
+                self._cv.notify()
+        except Backpressure as e:
+            self._note_backpressure(tenant, e)
+            raise
+        if self._tel.enabled:
+            self._m_requests.inc(tenant=tenant, op="search")
+            self._m_rows.inc(int(q.shape[0]), tenant=tenant, op="search")
+            self._m_queue_depth.set(depth)
         return fut
 
     def _release(self, st: TenantState) -> None:
@@ -270,16 +307,29 @@ class ServeEngine:
                 raise ValueError(
                     "attrs= given but the served index has no "
                     "SIVFConfig(attributes=...)")
-        with self._cv:
-            st = self._tenant_state(tenant)
-            self._check_open_and_capacity(st, tenant)
-            st.admit_mutation(tenant, int(ids_a.shape[0]))
-            fut = ServeFuture()
-            self._queue.append(MutationRequest(
-                tenant=tenant, op=op, vecs=vecs_a, ids=ids_a, future=fut,
-                t_submit=self._clock(), attrs=attrs_a))
-            self._cv.notify()
+        try:
+            with self._cv:
+                st = self._tenant_state(tenant)
+                self._check_open_and_capacity(st, tenant)
+                st.admit_mutation(tenant, int(ids_a.shape[0]))
+                fut = ServeFuture()
+                self._queue.append(MutationRequest(
+                    tenant=tenant, op=op, vecs=vecs_a, ids=ids_a,
+                    future=fut, t_submit=self._clock(), attrs=attrs_a))
+                depth = len(self._queue)
+                self._cv.notify()
+        except Backpressure as e:
+            self._note_backpressure(tenant, e)
+            raise
+        if self._tel.enabled:
+            self._m_requests.inc(tenant=tenant, op=op)
+            self._m_rows.inc(int(ids_a.shape[0]), tenant=tenant, op=op)
+            self._m_queue_depth.set(depth)
         return fut
+
+    def _note_backpressure(self, tenant: str, e: Backpressure) -> None:
+        if self._tel.enabled:
+            self._m_backpressure.inc(tenant=tenant, kind=e.kind.value)
 
     def submit_add(self, tenant: str, vecs, ids, attrs=None) -> ServeFuture:
         """Enqueue an ingest batch through the deferred pipeline."""
@@ -368,22 +418,35 @@ class ServeEngine:
     def _dispatch_tile(self, tile, epoch: int, dispatched: list,
                        ticket=None) -> None:
         chunk, qmat, k, nprobe, cfilter = tile
+        # the tile root span lives from dispatch to result readiness (set
+        # at _resolve_searches); its scope exits right after dispatch so
+        # the NEXT tile's pipelined prefetch doesn't nest into it
+        span = self._tel.open_span(
+            "serve.tile", root=True, epoch=epoch,
+            tenant=",".join(sorted({r.tenant for r in chunk})),
+            filter=None if cfilter is None else str(cfilter.structure),
+            rows=int(qmat.shape[0]))
         t0 = self._clock()
         try:
             res = self._index.search(qmat, k, nprobe, filter=cfilter,
                                      _prefetched=ticket)  # async dispatch
         except Exception as e:
+            self._tel.exit_scope(span)
+            self._tel.finish_span(span)
             for r in chunk:
                 r.future.set_exception(e)
             return
+        self._tel.exit_scope(span)
         self._n_tiles += 1
         self._n_searches += len(chunk)
         self._coalesce_sizes.append(int(qmat.shape[0]))
         self._max_tile = max(self._max_tile, res.padded_to)
+        if self._tel.enabled:
+            self._m_coalesce.observe(int(qmat.shape[0]))
         # executables are per filter STRUCTURE, not per constant set
         self._kn_groups.add((k, res.nprobe,
                              None if cfilter is None else cfilter.structure))
-        dispatched.append((chunk, res, epoch, t0))
+        dispatched.append((chunk, res, epoch, t0, span))
 
     def _dispatch_mutations(self, muts: list) -> None:
         for r in muts:
@@ -418,27 +481,38 @@ class ServeEngine:
                 req.future.set_exception(e)
             return
         now = self._clock()
+        if self._tel.enabled:
+            self._m_epoch.set(self._index.epoch)
         while self._mut_inflight:
             req, pending, epoch = self._mut_inflight.popleft()
+            if self._tel.enabled:
+                self._tel.record_duration(
+                    "serve.mutation_queue", now - req.t_submit,
+                    attach=False)
             req.future.set_result(ServeMutationResult(
                 report=pending.result(), epoch=epoch,
                 queue_s=now - req.t_submit))
 
     def _resolve_searches(self, dispatched: list) -> None:
-        for chunk, res, epoch, t0 in dispatched:
+        for chunk, res, epoch, t0, span in dispatched:
             try:
                 jax.block_until_ready(res.distances)
                 d = np.asarray(res.distances)
                 labels = np.asarray(res.labels)
             except Exception as e:
+                self._tel.finish_span(span)
                 for r in chunk:
                     r.future.set_exception(e)
                 continue
             t1 = self._clock()
+            self._tel.finish_span(span)  # tile wall time ~= service_s
             total = sum(r.queries.shape[0] for r in chunk)
             off = 0
             for r in chunk:
                 nq = r.queries.shape[0]
+                if self._tel.enabled:
+                    self._tel.record_duration(
+                        "serve.queue", t0 - r.t_submit, attach=False)
                 r.future.set_result(ServeSearchResult(
                     distances=d[off:off + nq], labels=labels[off:off + nq],
                     k=res.k, nprobe=res.nprobe, epoch=epoch,
@@ -518,6 +592,19 @@ class ServeEngine:
                 f"{bound} ({len(self._kn_groups)} (k, nprobe, filter) groups, max "
                 f"tile {self._max_tile})")
         return observed, bound
+
+    def telemetry(self) -> dict:
+        """JSON-able telemetry snapshot (metrics + slow-query log) of the
+        registry this engine records into — by default the served index's,
+        so one snapshot covers tile roots, plan/prefetch/scan stages,
+        cache/transfer counters and compile events."""
+        self._index._note_compiles()
+        return self._tel.snapshot()
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition of the same registry."""
+        self._index._note_compiles()
+        return self._tel.render_prometheus()
 
     def stats(self) -> dict:
         """Serve-side counters + the index's own compile stats."""

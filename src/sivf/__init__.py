@@ -51,6 +51,8 @@ from repro.serve.session import (  # noqa: F401
 )
 from repro.serve.sivf_engine import ServeEngine  # noqa: F401
 
+from sivf import telemetry  # noqa: F401  (import after repro: avoids cycles)
+
 __all__ = [
     "And", "Backpressure", "BackpressureKind", "ClientSession",
     "CompiledFilter", "Eq", "ErrorCode", "In", "Index", "IndexProtocol",
@@ -58,5 +60,5 @@ __all__ = [
     "Range", "SearchResult", "ServeEngine", "ServeMutationResult",
     "ServeSearchResult", "SIVFConfig", "TenantQuota", "compile_filter",
     "flatten_live_rows", "init_state", "memory_report", "reshard_state",
-    "search_stacked", "train_kmeans", "train_pq",
+    "search_stacked", "telemetry", "train_kmeans", "train_pq",
 ]

@@ -29,14 +29,16 @@ DIM = 16
 _SLAB_SALT = iter(range(100))
 
 
-def _engine(rng, *, n_lists=8, n_max=8192, min_bucket=16, **eng_kw):
+def _engine(rng, *, n_lists=8, n_max=8192, min_bucket=16, telemetry=None,
+            **eng_kw):
     cfg = sivf.SIVFConfig(dim=DIM, n_lists=n_lists,
                           n_slabs=256 + next(_SLAB_SALT), capacity=32,
                           n_max=n_max)
     cents = sivf.train_kmeans(
         jax.random.key(0),
         rng.normal(size=(512, DIM)).astype(np.float32), n_lists)
-    idx = sivf.Index(cfg, cents, deferred=True, min_bucket=min_bucket)
+    idx = sivf.Index(cfg, cents, deferred=True, min_bucket=min_bucket,
+                     telemetry=telemetry)
     return idx, ServeEngine(idx, **eng_kw)
 
 
@@ -352,3 +354,83 @@ def test_threaded_churn_bounded_executables(rng):
         mut_bound = len(idx.bucket_shapes(32))
         assert comp["add"] <= mut_bound and comp["remove"] <= mut_bound
     assert idx.pending_count == 0
+
+
+# ---------------------------------------------------------------------------
+# provenance under coalescing (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def test_tile_provenance_consistent_under_coalescing(rng):
+    """Every member of one coalesced tile reports the same tile-level
+    provenance: coalesced count, padded shape, epoch, and the SAME
+    service window (timing is stamped once per tile, not per request)."""
+    idx, eng = _engine(rng, default_k=5, max_coalesce=128)
+    with eng:
+        writer, reader = eng.session("ingest"), eng.session("app")
+        ids = np.arange(64, dtype=np.int32)
+        writer.add(_vecs_for(ids), ids).result(30)
+        eng.pause()                      # queue all six into one tile
+        futs = [reader.search(_vec_for(j)[None]) for j in range(6)]
+        eng.resume()
+        res = [f.result(30) for f in futs]
+    assert {r.coalesced for r in res} == {6}
+    assert len({r.padded_to for r in res}) == 1
+    pad = res[0].padded_to
+    assert pad >= 6 and pad & (pad - 1) == 0          # pow2 tile shape
+    assert len({r.epoch for r in res}) == 1
+    # shared service window: identical floats, not merely close
+    assert len({r.service_s for r in res}) == 1
+    for r in res:
+        assert r.service_s > 0.0 and r.queue_s >= 0.0
+
+
+def test_queue_wait_monotone_under_pause(rng):
+    """queue_s is the request's real wait: submissions staggered while
+    the engine is paused dispatch in one tile, so the earliest submit
+    must report the longest wait, strictly ordered."""
+    idx, eng = _engine(rng, default_k=5, max_coalesce=128)
+    with eng:
+        writer, reader = eng.session("ingest"), eng.session("app")
+        ids = np.arange(32, dtype=np.int32)
+        writer.add(_vecs_for(ids), ids).result(30)
+        reader.search(_vec_for(0)[None]).result(30)   # warm the tile shape
+        eng.pause()
+        futs = []
+        for j in range(4):
+            futs.append(reader.search(_vec_for(j)[None]))
+            time.sleep(0.02)
+        eng.resume()
+        res = [f.result(30) for f in futs]
+    qs = [r.queue_s for r in res]
+    assert all(a > b for a, b in zip(qs, qs[1:]))     # earlier waited longer
+    assert qs[0] >= 3 * 0.02                          # held across the gaps
+
+
+def test_tile_spans_agree_with_provenance(rng):
+    """The serve.tile root span and the result provenance describe the
+    same service window (different clocks: compared with tolerance), and
+    per-request queue waits land in the serve.queue stage histogram."""
+    from repro.obs import Telemetry
+    tel = Telemetry(enabled=True, slow_threshold_s=0.0)
+    idx, eng = _engine(rng, default_k=5, max_coalesce=128, telemetry=tel)
+    with eng:
+        writer, reader = eng.session("ingest"), eng.session("app")
+        ids = np.arange(32, dtype=np.int32)
+        writer.add(_vecs_for(ids), ids).result(30)
+        eng.pause()
+        futs = [reader.search(_vec_for(j)[None]) for j in range(4)]
+        eng.resume()
+        res = [f.result(30) for f in futs]
+    tile = [e for e in tel.slow_queries()
+            if e["span"] == "serve.tile" and e.get("rows") == 4][0]
+    svc_ms = res[0].service_s * 1e3
+    # span opens just before the tile's t0 stamp and finishes just after
+    # its t1 stamp: never meaningfully shorter, close from above
+    assert tile["duration_ms"] >= svc_ms - 1.0
+    assert tile["duration_ms"] <= svc_ms + 250.0      # CI-noise tolerance
+    assert tile["tenant"] == "app" and tile["epoch"] == res[0].epoch
+    assert "index.search" in tile["stages_ms"]
+    q = tel.histogram("sivf_stage_seconds", labels=("stage",))
+    assert q.get(stage="serve.queue")["count"] == 4
+    coal = tel.histogram("sivf_serve_coalesce_rows")
+    assert coal.get()["count"] >= 1                   # the 4-row tile

@@ -408,3 +408,44 @@ def test_tiered_four_shard_parity():
     assert out["ok"]
     assert len(out["per_shard"]) == 4
     assert out["resident"] == sum(out["per_shard"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# hit-rate accounting: windowed vs cumulative, counters survive reshard
+# (ISSUE 9 regression: stats() used to report only the cumulative rate
+# unlabeled, and reshard rebuilt the runtime with zeroed counters)
+# ---------------------------------------------------------------------------
+
+def test_hit_rate_windowed_and_cumulative(rng):
+    it, _, vecs, ids = _pair(rng, 32)
+    it.add(vecs, ids)
+    qs = rng.normal(size=(5, D)).astype(np.float32)
+    it.search(qs, k=10, nprobe=NL)            # cold: misses + uploads
+    st = it.stats()
+    assert st["hit_rate_kind"] == "cumulative"
+    assert 0.0 <= st["hit_rate"] < 1.0        # cold fill missed
+    assert st["hit_rate_window"] == st["hit_rate"]   # no roll yet
+    assert st["cache_hits_window"] == st["cache_hits"]
+    it._tiered.roll_window()                  # new observation window
+    st = it.stats()
+    assert st["cache_misses_window"] == 0     # window reset...
+    assert st["cache_misses"] > 0             # ...cumulative untouched
+    it.search(qs, k=10, nprobe=NL)            # warm: same probe set
+    st = it.stats()
+    assert st["hit_rate_window"] == 1.0       # all-hit window
+    assert st["hit_rate"] < 1.0               # lifetime still shows the fill
+
+
+def test_hit_rate_counters_carry_across_reshard(rng):
+    it, _, vecs, ids = _pair(rng, 32)
+    it.add(vecs, ids)
+    qs = rng.normal(size=(5, D)).astype(np.float32)
+    it.search(qs, k=10, nprobe=NL)
+    before = {k: it.stats()[k]
+              for k in ("cache_hits", "cache_misses", "cache_uploads")}
+    assert before["cache_uploads"] > 0
+    it.reshard(jax.make_mesh((1,), ("data",)))
+    after = it.stats()
+    for k, v in before.items():               # cumulative story unbroken
+        assert after[k] >= v, (k, v, after[k])
+    assert after["hit_rate_kind"] == "cumulative"
