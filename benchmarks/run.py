@@ -23,7 +23,11 @@ cache sweep (hit rate + QPS at working sets of 0.25x-2x the device slab
 budget, bit-parity asserted against the all-resident pool) to
 ``BENCH_tiered.json``; ``obs_overhead`` records the telemetry-on vs
 telemetry-off serve p99 comparison (median paired ratio gated at 1.05x
-in-bench) to ``BENCH_obs.json`` (the slow CI job's perf data points —
+in-bench) to ``BENCH_obs.json``; ``drift_sweep`` records recall@10 under
+a 12-step cluster-drift schedule for a maintained index (online
+split/merge/recluster each step) vs a frozen-centroid twin on the
+identical stream (maintained >= 0.95 and frozen decay both asserted
+in-bench) to ``BENCH_drift.json`` (the slow CI job's perf data points —
 ``scripts/check_bench.py`` gates them against committed baselines).
 
 Exceptions inside one benchmark print a ``<name>.ERROR`` row and the run
@@ -138,6 +142,11 @@ def main() -> None:
         run_summary_artifact("obs_overhead",
                              obs_bench.obs_overhead_summary,
                              "BENCH_obs.json", results)
+    if only is None or "drift_sweep" in only:
+        from benchmarks import drift_bench
+        run_summary_artifact("drift_sweep",
+                             drift_bench.drift_sweep_summary,
+                             "BENCH_drift.json", results)
     for name, fn in artifacts:
         if only and name not in only:
             continue

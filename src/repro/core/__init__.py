@@ -27,10 +27,20 @@ from repro.core.pq import (  # noqa: F401
 )
 from repro.core.quantizer import assign, probe, train_kmeans  # noqa: F401
 from repro.core.reference import ReferenceIndex  # noqa: F401
+from repro.core.maintenance import (  # noqa: F401
+    MaintenanceReport,
+    MaintOp,
+    maintain,
+    merge,
+    plan_ops,
+    recluster,
+    split,
+)
 from repro.core.api import (  # noqa: F401
     ErrorCode,
     Index,
     IndexProtocol,
+    MaintenanceAborted,
     MutationRejected,
     MutationReport,
     PendingReport,

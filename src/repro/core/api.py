@@ -179,6 +179,23 @@ class MutationRejected(RuntimeError):
         self.report = report
 
 
+class MaintenanceAborted(RuntimeError):
+    """Raised in strict mode when a maintenance op aborts atomically.
+
+    The abort is clean by construction — every previously-live id stays
+    searchable under the old list layout (old centroids included) — so
+    catching this and retrying after evictions is always safe. Raised
+    after every requested op has resolved, like :meth:`Index.flush`.
+    """
+
+    def __init__(self, report):
+        super().__init__(
+            f"maintenance {report.kind} on lists {report.lists} aborted: "
+            f"error bits {report.errors:#x} ({report.rows} rows kept "
+            f"under the old layout)")
+        self.report = report
+
+
 class PendingReport:
     """Future for a deferred :class:`MutationReport`.
 
@@ -601,6 +618,13 @@ class Index:
         self._m_mutations = self._telemetry.counter(
             "sivf_index_mutation_rows_total",
             "mutation rows dispatched through this handle", ("op",))
+        self._m_maint = self._telemetry.counter(
+            "sivf_maintenance_ops_total",
+            "maintenance ops dispatched", ("kind", "outcome"))
+        self._m_maint_rows = self._telemetry.counter(
+            "sivf_maintenance_rows_total",
+            "live rows moved by committed maintenance ops")
+        self._maint_cursor = 0      # round-robin recluster position
         self._compiles_seen = self._total_compiles()
         self._compile_base = self._compiles_seen
 
@@ -949,6 +973,105 @@ class Index:
         self._note_compiles()
         if first_err is not None:
             raise first_err
+        return reports
+
+    def maintain(self, ops=None, *, max_ops: int = 2,
+                 strict: bool | None = None) -> list:
+        """Run background maintenance ops (``core/maintenance.py``).
+
+        ``ops`` is a list of :class:`~repro.core.maintenance.MaintOp`
+        (``split`` / ``merge`` / ``recluster``); omitted, the drift
+        policy plans up to ``max_ops`` ops from the per-list occupancy
+        counters in :meth:`stats`, round-robining re-clustering across
+        sweeps. Each op commits atomically through the staged-insert
+        path — on the mesh backend all shards revert together if any
+        aborts — so a failed op leaves every live id searchable under
+        the old layout and bumps no epoch. Committed ops bump
+        :attr:`epoch` exactly like a mutation batch: a search dispatched
+        afterwards observes the whole new layout, never a hybrid.
+
+        Returns the per-op :class:`MaintenanceReport` list. In strict
+        mode (``strict=True`` or the handle default) an aborted op
+        raises :class:`MaintenanceAborted` after every op has resolved.
+        """
+        from repro.core import maintenance as mt
+        self._require_trained()
+        if self._tiered is not None:
+            self._tiered.drain_plans()      # host store current pre-gather
+        if ops is None:
+            occ = self.stats()["list_occupancy"]
+            ops, self._maint_cursor = mt.plan_ops(
+                occ, self._maint_cursor, max_ops=max_ops)
+        strict = self.strict if strict is None else strict
+        stores = None if self._tiered is None else self._tiered.stores
+        want_plan = self._tiered is not None
+        reports: list[mt.MaintenanceReport] = []
+        first_abort: mt.MaintenanceReport | None = None
+        for op in ops:
+            with self._telemetry.span("maintenance.op", root="auto",
+                                      kind=op.kind, lists=list(op.lists),
+                                      epoch=self._epoch + 1):
+                views = mt.shard_views(self.cfg, self._state, stores)
+                gathered = mt.gather_live(self.cfg, self._state, views,
+                                          op.lists)
+                cents = np.asarray(self._state.centroids, np.float32)
+                if cents.ndim == 3:         # stacked per-shard replicas
+                    cents = cents[0]
+                plan = mt.plan_op(self.cfg, op, gathered, cents)
+                if plan is None:            # nothing to move: host no-op
+                    reports.append(mt.MaintenanceReport(
+                        op.kind, op.lists, len(gathered["ids"]), True, 0,
+                        self.n_live))
+                    continue
+                new_cents, lists = plan
+                batch = mt.pad_batch(
+                    self.cfg, gathered, lists,
+                    mt.maint_batch_size(self.cfg, self.n_shards))
+                if self._backend_kind == "mesh":
+                    run = mt._commit_op_mesh(self.cfg, self._mesh,
+                                             self._axis, want_plan)
+                else:
+                    run = mt._commit_op(self.cfg, want_plan)
+                args = (self._state, jnp.asarray(new_cents),
+                        jnp.asarray(batch["vecs"]),
+                        jnp.asarray(batch["ids"]),
+                        jnp.asarray(batch["lists"]),
+                        None if batch["codes"] is None
+                        else jnp.asarray(batch["codes"]),
+                        None if batch["attrs"] is None
+                        else jnp.asarray(batch["attrs"]))
+                if want_plan:
+                    self._state, aux, dev_plan = run(*args)
+                else:
+                    self._state, aux = run(*args)
+                aux = {k: v for k, v in aux.items() if k != "shard_errors"}
+                aux = jax.device_get(aux)
+                committed = bool(int(aux["committed"]))
+                if want_plan:
+                    if committed:
+                        self._tiered.queue_plan(
+                            dev_plan, batch["vecs"],
+                            batch["attrs"] if self.cfg.n_attrs else None)
+                        self._tiered.drain_plans()
+                    # centroid updates replicate into future prefetch
+                    # plans automatically (they read self._state)
+                rep = mt.MaintenanceReport(
+                    op.kind, op.lists, batch["rows"], committed,
+                    int(aux["errors"]), int(aux["n_live"]))
+            if committed:
+                self._epoch += 1            # a new committed prefix entry
+                if self._telemetry.enabled:
+                    self._m_maint_rows.inc(rep.rows)
+            elif first_abort is None:
+                first_abort = rep
+            if self._telemetry.enabled:
+                self._m_maint.inc(1, kind=op.kind,
+                                  outcome="committed" if committed
+                                  else "aborted")
+            reports.append(rep)
+        self._note_compiles()
+        if strict and first_abort is not None:
+            raise MaintenanceAborted(first_abort)
         return reports
 
     def __enter__(self) -> "Index":

@@ -157,6 +157,77 @@ def sharded_delete(cfg: SIVFConfig, mesh: Mesh, axis: str = "data"):
     return run
 
 
+def sharded_maintain(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
+                     want_plan: bool = False):
+    """Atomic maintenance commit across shards (``core/maintenance.py``).
+
+    The host-planned batch (new centroid plane + the affected lists' live
+    rows, id-sorted and -1-padded) is broadcast exactly like
+    ``sharded_insert``: each shard stages the new centroids, re-inserts
+    only the rows it owns, and the shards then *agree* on the outcome —
+    if any shard aborts (pool exhausted / chain overflow), every shard
+    reverts to its pre-op state via a ``pmax`` vote, so a search never
+    observes shard A under the new layout and shard B under the old one.
+
+    Returns ``run(state, new_cents, vecs, ext_ids, lists, codes?, attrs?)
+    -> (state, errors [S])`` (plus the stacked ``[S, B]`` commit plan with
+    ``want_plan=True`` — voided to -1 everywhere on an aborted vote, so
+    the tiered host-store replay applies exactly what the devices kept).
+    """
+    import dataclasses as dc
+
+    from repro.core.maintenance import ABORT_BITS
+    from repro.core.state import clear_error
+    n = mesh.shape[axis]
+
+    def run(state: SlabPoolState, new_cents: jax.Array, vecs: jax.Array,
+            ext_ids: jax.Array, lists: jax.Array,
+            codes: jax.Array | None = None, attrs: jax.Array | None = None):
+        def local(st, nc, v, i, li, *rest):
+            st = jax.tree.map(lambda x: x[0], st)
+            me = jax.lax.axis_index(axis)
+            mine = shard_of(i, n) == me
+            st0 = clear_error(st)
+            staged = dc.replace(st0, centroids=nc)
+            k = 0
+            kw = {}
+            if cfg.pq is not None:
+                kw["codes"] = rest[k]
+                k += 1
+            if cfg.n_attrs:
+                kw["attrs"] = rest[k]
+            out = ix._insert_impl(cfg, staged, v, jnp.where(mine, i, -1),
+                                  li, want_plan=want_plan, **kw)
+            st1, plan = out if want_plan else (out, None)
+            errs = st1.error
+            any_ab = jax.lax.pmax(
+                ((errs & ABORT_BITS) != 0).astype(jnp.int32), axis) > 0
+            st1 = jax.tree.map(
+                lambda old, new: jnp.where(any_ab, old, new), st0, st1)
+            st1 = clear_error(st1)
+            outs = (jax.tree.map(lambda x: x[None], st1), errs[None])
+            if want_plan:
+                plan = {"slab": jnp.where(any_ab, -1, plan["slab"]),
+                        "slot": plan["slot"], "codes": plan["codes"]}
+                outs += (jax.tree.map(lambda x: x[None], plan),)
+            return outs
+
+        extra = tuple(x for x in (codes, attrs) if x is not None)
+        state_spec = _spec_tree(state, axis)
+        out_specs = (state_spec, P(axis))
+        if want_plan:
+            out_specs += ({"slab": P(axis), "slot": P(axis),
+                           "codes": P(axis)},)
+        f = shard_map_compat(
+            local, mesh=mesh, check_vma=False,
+            in_specs=(state_spec, P(), P(), P(), P())
+            + tuple(P() for _ in extra),
+            out_specs=out_specs)
+        return f(state, new_cents, vecs, ext_ids, lists, *extra)
+
+    return run
+
+
 def sharded_search(cfg: SIVFConfig, mesh: Mesh, axis: str = "data",
                    impl: str = "xla", block_q: int = 8,
                    use_tables: bool | None = None):

@@ -710,6 +710,9 @@ def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
     """
     import numpy as np
     free_top = np.asarray(state.free_top)
+    occ = _list_occupancy(cfg, state)
+    skew = {"list_occupancy": occ.tolist(),
+            "list_skew": float(occ.max() / occ.mean()) if occ.any() else 0.0}
     if free_top.ndim:                      # stacked per-shard state
         from repro.core.distributed import total_live
         used_per = (cfg.n_slabs - free_top).astype(int)
@@ -730,6 +733,7 @@ def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
             "n_shards": int(free_top.shape[0]),
             "per_shard_live": np.asarray(state.n_live).astype(int).tolist(),
             "per_shard_slabs_used": used_per.tolist(),
+            **skew,
             **_memory_stats(cfg, int(free_top.shape[0])),
         }
     used = int(cfg.n_slabs - state.free_top)
@@ -744,5 +748,26 @@ def stats(cfg: SIVFConfig, state: SlabPoolState) -> dict:
         "error": int(state.error),
         "max_chain_len": int(jnp.max(state.table_len)),
         "mean_chain_len": float(jnp.mean(state.table_len)),
+        **skew,
         **_memory_stats(cfg),
     }
+
+
+def _list_occupancy(cfg: SIVFConfig, state: SlabPoolState) -> "np.ndarray":
+    """Exact per-list live-row counts (drift-policy input).
+
+    Recounted from the validity bitmaps and slab ownership rather than
+    the incremental ``live`` counters: the bitmap is the plane searches
+    mask by, so this tally is correct by construction under any
+    overwrite/delete interleaving, single or stacked state.
+    """
+    import numpy as np
+
+    from repro.core.state import host_live_mask
+    owner = np.asarray(state.owner)
+    per_slab = host_live_mask(cfg, np.asarray(state.bitmap)).sum(-1)
+    owner, per_slab = owner.reshape(-1), per_slab.reshape(-1)
+    occ = np.zeros((cfg.n_lists,), np.int64)
+    sel = owner >= 0
+    np.add.at(occ, owner[sel], per_slab[sel])
+    return occ

@@ -1,0 +1,470 @@
+"""Online index maintenance under drift: split / merge / re-cluster.
+
+Streaming ingest drifts away from the trained coarse quantizer: chains
+skew, recall decays (PAPERS.md, "Incremental IVF Index Maintenance for
+Streaming Vector Search"). This module is the in-place twin of the
+reshard machinery — instead of flattening the whole pool through the
+host, each maintenance op touches only the affected lists:
+
+  * **split**  — a skewed list's live rows are re-partitioned by a local
+    deterministic 2-means *trained on the skewed list's rows alone* (a
+    far-off victim cluster must not capture one of the two sides); the
+    refined centroids land on the skewed list and a near-empty victim
+    list, and the union of both lists' rows re-routes to the nearer of
+    the pair (``n_lists`` is a static shape, so a split recycles an
+    existing slot instead of growing the plane);
+  * **merge**  — two under-full lists collapse onto ``min(a, b)``; both
+    centroid rows become the occupancy-weighted mean, so the coarse
+    quantizer's stable argmin routes all future traffic to the target
+    while the source drains to empty;
+  * **recluster** — a drifted list's centroid is recentered on the mean
+    of its live rows and the rows are re-inserted (which also compacts
+    the chain).
+
+Every op is the same three-phase pipeline: a host-side gather of the
+affected lists' live rows (payloads from the device planes, or from the
+tiered host store), host-side centroid refinement in numpy, then ONE
+atomic device batch through ``index._insert_impl`` — staged state with
+the *new* centroids plus a single ``lax.cond`` commit. A failed op
+(pool exhausted / chain overflow) therefore leaves every live id
+searchable under the *old* centroids: searches observe the old or the
+new list layout, never a hybrid. Stored PQ codes ride the re-insert
+verbatim (byte-for-byte, exactly like elastic resharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as ix
+from repro.core.state import (
+    ERR_CHAIN_OVERFLOW,
+    ERR_POOL_EXHAUSTED,
+    SIVFConfig,
+    SlabPoolState,
+    clear_error,
+    host_live_mask,
+)
+
+ABORT_BITS = ERR_POOL_EXHAUSTED | ERR_CHAIN_OVERFLOW
+
+KINDS = ("split", "merge", "recluster")
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintOp:
+    """One maintenance operation over one or two lists."""
+
+    kind: str                    # split | merge | recluster
+    lists: tuple[int, ...]       # split/merge: (a, b); recluster: (a,)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown maintenance kind {self.kind!r}")
+        want = 1 if self.kind == "recluster" else 2
+        if len(self.lists) != want:
+            raise ValueError(
+                f"{self.kind} takes {want} list(s), got {self.lists}")
+        if len(set(self.lists)) != len(self.lists):
+            raise ValueError(f"{self.kind} lists must be distinct")
+
+
+def split(a: int, victim: int) -> MaintOp:
+    return MaintOp("split", (int(a), int(victim)))
+
+
+def merge(a: int, b: int) -> MaintOp:
+    return MaintOp("merge", (int(a), int(b)))
+
+
+def recluster(a: int) -> MaintOp:
+    return MaintOp("recluster", (int(a),))
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceReport:
+    """Outcome of one committed-or-aborted maintenance op."""
+
+    kind: str
+    lists: tuple[int, ...]
+    rows: int                    # live rows gathered / re-inserted
+    committed: bool              # False: state unchanged (atomic abort)
+    errors: int                  # raw error bits from the commit attempt
+    n_live: int                  # pool live count after the op
+
+
+# ---------------------------------------------------------------------------
+# Host-side gather
+# ---------------------------------------------------------------------------
+
+def shard_views(cfg: SIVFConfig, state: SlabPoolState, stores=None) -> list:
+    """Per-shard host views of the planes the gather needs.
+
+    ``state`` may be a single-device pool or the stacked per-shard state;
+    ``stores`` (tiered) supplies the payload planes when the device ones
+    are zero-width. Returns one dict per shard of numpy arrays.
+    """
+    owner = np.asarray(state.owner)
+    stacked = owner.ndim == 2
+    n_shards = owner.shape[0] if stacked else 1
+    if cfg.tiered and stores is None:
+        raise ValueError("tiered config: maintenance gather needs the "
+                         "host stores (pass stores=runtime.stores)")
+    views = []
+    for s in range(n_shards):
+        pick = (lambda x: np.asarray(x)[s]) if stacked else \
+            (lambda x: np.asarray(x))
+        v = {"owner": pick(state.owner), "bitmap": pick(state.bitmap),
+             "ids": pick(state.ids)}
+        if cfg.tiered:
+            st = stores[s]
+            v["data"], v["codes"], v["attrs"] = st.data, st.codes, st.attrs
+        else:
+            v["data"] = pick(state.data)
+            v["codes"] = pick(state.codes)
+            v["attrs"] = pick(state.attrs)
+        views.append(v)
+    return views
+
+
+# ---------------------------------------------------------------------------
+# Centroid refinement (host numpy; deterministic)
+# ---------------------------------------------------------------------------
+
+def _kmeans2(x: np.ndarray, iters: int = 8) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic local 2-means: farthest-point init + Lloyd."""
+    mean = x.mean(axis=0)
+    c0 = x[int(np.argmax(((x - mean) ** 2).sum(-1)))]
+    c1 = x[int(np.argmax(((x - c0) ** 2).sum(-1)))]
+    cents = np.stack([c0, c1])
+    for _ in range(iters):
+        d = ((x[:, None] - cents[None]) ** 2).sum(-1)    # [N, 2]
+        assign = d.argmin(axis=1)
+        for j in (0, 1):
+            sel = x[assign == j]
+            if len(sel):
+                cents[j] = sel.mean(axis=0)
+    return cents.astype(np.float32), assign
+
+
+def _route2(vecs: np.ndarray, cents2: np.ndarray, metric: str) -> np.ndarray:
+    """Index (0/1) of the nearer of two centroids under the index metric."""
+    if metric == "ip":
+        scores = vecs @ cents2.T                         # higher = nearer
+        return scores.argmax(axis=1)
+    d = ((vecs[:, None] - cents2[None]) ** 2).sum(-1)
+    return d.argmin(axis=1)
+
+
+def plan_op(cfg: SIVFConfig, op: MaintOp, gathered: dict,
+            centroids: np.ndarray) -> tuple[np.ndarray, np.ndarray] | None:
+    """Host planning: -> (new centroids [n_lists, D], per-row routing [N]).
+
+    ``None`` means the op is a no-op on the current state (nothing to
+    move, no centroid change) and no device commit should run.
+    """
+    vecs, n = gathered["vecs"], len(gathered["ids"])
+    new_cents = np.array(centroids, np.float32, copy=True)
+    if op.kind == "recluster":
+        (a,) = op.lists
+        if n == 0:
+            return None
+        new_cents[a] = vecs.mean(axis=0)
+        return new_cents, np.full((n,), a, np.int32)
+    a, b = op.lists
+    if op.kind == "merge":
+        tgt = min(a, b)
+        if n == 0:
+            return None
+        # both rows become the merged mean: the quantizer's stable argmin
+        # ties toward min(a, b), so future inserts route to the target
+        # while the source stays empty
+        new_cents[a] = new_cents[b] = vecs.mean(axis=0)
+        return new_cents, np.full((n,), tgt, np.int32)
+    # split: the 2-means is trained on the skewed list's own rows (if the
+    # victim holds rows of some distant cluster, a union fit would park
+    # one centroid on the victim and leave the glued pair glued); the
+    # union of both lists' rows then re-routes to the nearer of the pair
+    if n < 2:
+        return None
+    hot = vecs[gathered["lists"] == a]
+    cents2, _ = _kmeans2(hot if len(hot) >= 2 else vecs)
+    new_cents[a], new_cents[b] = cents2[0], cents2[1]
+    route = _route2(vecs, cents2, cfg.metric)
+    return new_cents, np.where(route == 0, a, b).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Batch padding: one executable per config
+# ---------------------------------------------------------------------------
+
+def maint_batch_size(cfg: SIVFConfig, n_shards: int = 1) -> int:
+    """Fixed pad width for maintenance batches (one jit executable).
+
+    An op touches at most two lists; each list owns at most ``max_chain``
+    slabs of ``capacity`` rows per shard — that product is the hard upper
+    bound on gathered rows, clamped to the id space.
+    """
+    hard = 2 * cfg.max_chain * cfg.capacity * n_shards
+    b = min(hard, cfg.n_max)
+    p = 1
+    while p < b:
+        p <<= 1
+    return p
+
+
+def pad_batch(cfg: SIVFConfig, gathered: dict, lists: np.ndarray,
+              width: int) -> dict:
+    """-1-padded fixed-width arrays (padding rows set no error bits)."""
+    n = len(gathered["ids"])
+    if n > width:
+        raise AssertionError(
+            f"maintenance gather ({n} rows) exceeds the chain-bound batch "
+            f"width ({width}) — max_chain accounting is broken")
+    ids = np.full((width,), -1, np.int32)
+    ids[:n] = gathered["ids"]
+    vecs = np.zeros((width, cfg.dim), np.float32)
+    vecs[:n] = gathered["vecs"]
+    lst = np.zeros((width,), np.int32)
+    lst[:n] = lists
+    out = {"ids": ids, "vecs": vecs, "lists": lst, "codes": None,
+           "attrs": None, "rows": n}
+    if cfg.code_m:
+        codes = np.zeros((width, cfg.code_m), np.uint8)
+        codes[:n] = gathered["codes"]
+        out["codes"] = codes
+    if cfg.n_attrs:
+        attrs = np.zeros((width, cfg.n_attrs), np.int32)
+        attrs[:n] = gathered["attrs"]
+        out["attrs"] = attrs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Atomic device commit (single-device; the mesh twin lives in distributed)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _commit_op(cfg: SIVFConfig, want_plan: bool):
+    """jit'd: staged re-insert under the NEW centroids, single commit point.
+
+    ``_insert_impl``'s fail branch returns its *input* — here the staged
+    state that already carries the new centroids — so the outer ``where``
+    restores the old centroid plane on abort: an aborted op changes
+    nothing observable.
+    """
+    use_codes = cfg.pq is not None
+    use_attrs = cfg.n_attrs > 0
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def run(state, new_cents, vecs, ids, lists, codes, attrs):
+        st0 = clear_error(state)
+        staged = dataclasses.replace(st0, centroids=new_cents)
+        out = ix._insert_impl(cfg, staged, vecs, ids, lists,
+                              codes=codes if use_codes else None,
+                              attrs=attrs if use_attrs else None,
+                              want_plan=want_plan)
+        st, plan = out if want_plan else (out, None)
+        aborted = (st.error & ABORT_BITS) != 0
+        st = dataclasses.replace(
+            st, centroids=jnp.where(aborted, st0.centroids, new_cents))
+        aux = {"errors": st.error,
+               "committed": (~aborted).astype(jnp.int32),
+               "n_live": st.n_live}
+        st = clear_error(st)
+        return (st, aux, plan) if want_plan else (st, aux)
+
+    return run
+
+
+@lru_cache(maxsize=None)
+def _commit_op_mesh(cfg: SIVFConfig, mesh, axis: str, want_plan: bool):
+    """jit'd mesh twin of ``_commit_op`` (``distributed.sharded_maintain``).
+
+    The shards vote on the outcome inside the mapped body (any abort
+    reverts every shard), so the stacked result is already consistent;
+    this wrapper just folds the per-shard error vector into the same aux
+    shape the single-device path emits.
+    """
+    from repro.core import distributed as dist
+    inner = dist.sharded_maintain(cfg, mesh, axis, want_plan)
+    use_codes = cfg.pq is not None
+    use_attrs = cfg.n_attrs > 0
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def run(state, new_cents, vecs, ids, lists, codes, attrs):
+        out = inner(state, new_cents, vecs, ids, lists,
+                    codes if use_codes else None,
+                    attrs if use_attrs else None)
+        if want_plan:
+            st, errs, plan = out
+        else:
+            (st, errs), plan = out, None
+        aborted = jnp.any((errs & ABORT_BITS) != 0)
+        bits = jnp.zeros((), errs.dtype)
+        for s in range(errs.shape[0]):
+            bits = bits | errs[s]
+        aux = {"errors": bits,
+               "committed": (~aborted).astype(jnp.int32),
+               "n_live": jnp.sum(st.n_live),
+               "shard_errors": errs}
+        return (st, aux, plan) if want_plan else (st, aux)
+
+    return run
+
+
+def maintain(cfg: SIVFConfig, state: SlabPoolState, op: MaintOp,
+             stores=None) -> tuple[SlabPoolState, MaintenanceReport]:
+    """Functional single-device maintenance: run one op atomically.
+
+    The session layer (``Index.maintain``) wraps this with sharding,
+    tiered-store replay and telemetry; this entry point is the property-
+    testable core. Returns the (possibly unchanged) state + a report.
+    """
+    views = shard_views(cfg, state, stores)
+    gathered = gather_live(cfg, state, views, op.lists)
+    plan = plan_op(cfg, op, gathered, np.asarray(state.centroids))
+    if plan is None:
+        return state, MaintenanceReport(op.kind, op.lists,
+                                        len(gathered["ids"]), True, 0,
+                                        int(state.n_live))
+    new_cents, lists = plan
+    batch = pad_batch(cfg, gathered, lists, maint_batch_size(cfg))
+    run = _commit_op(cfg, want_plan=bool(cfg.tiered))
+    args = (state, jnp.asarray(new_cents), jnp.asarray(batch["vecs"]),
+            jnp.asarray(batch["ids"]), jnp.asarray(batch["lists"]),
+            None if batch["codes"] is None else jnp.asarray(batch["codes"]),
+            None if batch["attrs"] is None else jnp.asarray(batch["attrs"]))
+    if cfg.tiered:
+        st, aux, dev_plan = run(*args)
+        replay_plan_to_store(cfg, stores[0], dev_plan, batch["vecs"],
+                             batch["attrs"])
+    else:
+        st, aux = run(*args)
+    rep = MaintenanceReport(op.kind, op.lists, batch["rows"],
+                            bool(int(aux["committed"])), int(aux["errors"]),
+                            int(aux["n_live"]))
+    return st, rep
+
+
+def replay_plan_to_store(cfg: SIVFConfig, store, plan, vecs, attrs) -> None:
+    """Mirror a commit plan into one shard's host store (tiered pools).
+
+    The device plan names exactly the payload writes the commit applied
+    (-1 rows — padding, unowned, or a whole aborted batch — write
+    nothing), so the two tiers stay bit-identical without transferring
+    the payload planes. The session layer routes through
+    ``TieredRuntime.queue_plan`` instead (same replay + dirty tracking).
+    """
+    slab = np.asarray(plan["slab"])
+    rows = np.flatnonzero(slab >= 0)
+    if not len(rows):
+        return
+    slot = np.asarray(plan["slot"])
+    if cfg.payload_dim:
+        store.data[slab[rows], slot[rows]] = \
+            np.asarray(vecs)[rows, :cfg.payload_dim]
+    if cfg.code_m:
+        store.codes[slab[rows], slot[rows]] = np.asarray(plan["codes"])[rows]
+    if cfg.n_attrs:
+        store.attrs[slab[rows], slot[rows]] = np.asarray(attrs)[rows]
+
+
+def gather_live(cfg: SIVFConfig, state: SlabPoolState, views: list,
+                target_lists) -> dict:
+    """``gather_rows`` + PQ-decode fallback for raw-payload-free configs."""
+    tl = np.asarray(sorted(target_lists), np.int32)
+    ids_parts, vec_parts, code_parts, attr_parts = [], [], [], []
+    list_parts = []
+    for v in views:
+        mask_slab = np.isin(v["owner"], tl)
+        live = host_live_mask(cfg, v["bitmap"])
+        si, so = np.nonzero(live & mask_slab[:, None])
+        ids_parts.append(v["ids"][si, so].astype(np.int32))
+        list_parts.append(v["owner"][si].astype(np.int32))
+        if cfg.payload_dim:
+            vec_parts.append(np.asarray(v["data"][si, so]))
+        if cfg.code_m:
+            code_parts.append(np.asarray(v["codes"][si, so]))
+        if cfg.n_attrs:
+            attr_parts.append(np.asarray(v["attrs"][si, so]))
+    ids = (np.concatenate(ids_parts) if ids_parts
+           else np.zeros((0,), np.int32)).astype(np.int32)
+    order = np.argsort(ids, kind="stable")
+    ids = ids[order]
+    src_lists = (np.concatenate(list_parts)[order].astype(np.int32)
+                 if list_parts else np.zeros((0,), np.int32))
+    codes = (np.concatenate(code_parts)[order].astype(np.uint8)
+             if cfg.code_m and code_parts else
+             (np.zeros((0, cfg.code_m), np.uint8) if cfg.code_m else None))
+    attrs = (np.concatenate(attr_parts)[order].astype(np.int32)
+             if cfg.n_attrs and attr_parts else
+             (np.zeros((0, cfg.n_attrs), np.int32) if cfg.n_attrs else None))
+    if cfg.payload_dim:
+        vecs = (np.concatenate(vec_parts)[order]
+                if vec_parts else np.zeros((0, cfg.dim), np.float32))
+        vecs = np.asarray(vecs, np.float32)[:, :cfg.dim]
+    else:
+        # PQ without store_raw: reconstruct stand-in vectors from the
+        # stored codes. Search is pure-ADC over the codes (which ride the
+        # re-insert verbatim); the stand-ins only feed the unused norm
+        # plane and the centroid means.
+        cb = np.asarray(state.pq_codebooks, np.float32)  # [m, K, dsub]
+        if cb.ndim == 4:                # stacked per-shard replicas
+            cb = cb[0]
+        m = cb.shape[0]
+        if len(ids):
+            c = codes.astype(np.int64)                   # [N, m]
+            vecs = cb[np.arange(m)[None, :], c].reshape(len(ids), cfg.dim)
+            vecs = vecs.astype(np.float32)
+        else:
+            vecs = np.zeros((0, cfg.dim), np.float32)
+    return {"ids": ids, "vecs": vecs, "codes": codes, "attrs": attrs,
+            "lists": src_lists}
+
+
+# ---------------------------------------------------------------------------
+# Drift-triggered policy
+# ---------------------------------------------------------------------------
+
+def plan_ops(list_occupancy, cursor: int = 0, max_ops: int = 2,
+             skew_hi: float = 2.0, skew_lo: float = 0.25
+             ) -> tuple[list[MaintOp], int]:
+    """Occupancy-driven maintenance schedule (reads ``stats()`` counters).
+
+    Priority: (1) split the most-skewed list into a near-empty victim,
+    (2) merge the two most under-full lists, then (3) round-robin
+    recluster from ``cursor`` — so sustained drift recenters every list
+    over successive sweeps. Returns (ops, advanced cursor).
+    """
+    occ = np.asarray(list_occupancy, np.int64)
+    nl = len(occ)
+    ops: list[MaintOp] = []
+    mean = float(occ.mean()) if nl else 0.0
+    used = set()
+    if nl >= 2 and mean > 0:
+        hot = int(occ.argmax())
+        cold = int(occ.argmin())
+        if (occ[hot] > skew_hi * mean and occ[cold] < skew_lo * mean
+                and hot != cold and len(ops) < max_ops):
+            ops.append(split(hot, cold))
+            used.update((hot, cold))
+        small = [i for i in np.argsort(occ, kind="stable")
+                 if i not in used and occ[i] > 0]
+        if (len(small) >= 2 and occ[small[0]] < skew_lo * mean
+                and occ[small[1]] < skew_lo * mean and len(ops) < max_ops):
+            ops.append(merge(int(small[0]), int(small[1])))
+            used.update((int(small[0]), int(small[1])))
+    for _ in range(nl):
+        if len(ops) >= max_ops:
+            break
+        cand = cursor % max(nl, 1)
+        cursor += 1
+        if cand not in used and occ[cand] > 0:
+            ops.append(recluster(cand))
+            used.add(cand)
+    return ops, cursor % max(nl, 1)

@@ -93,6 +93,23 @@ class MutationRequest:
     attrs: np.ndarray | None = None
 
 
+@dataclasses.dataclass
+class MaintenanceRequest:
+    """Operator-plane request: run index maintenance between batches.
+
+    ``ops=None`` lets the index's drift policy plan from its occupancy
+    counters at dispatch time (the stats snapshot is taken by the
+    scheduler thread, so the plan always reflects the committed prefix
+    the ops will run against).
+    """
+
+    tenant: str
+    ops: "list | None"         # explicit core.maintenance.MaintOp list
+    max_ops: int
+    future: ServeFuture
+    t_submit: float
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeSearchResult:
     """Per-request slice of a coalesced search tile."""
@@ -122,6 +139,23 @@ class ServeMutationResult:
     @property
     def ok(self) -> bool:
         return self.report.ok
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMaintenanceResult:
+    """Resolved maintenance request: one report per op, in run order.
+
+    An aborted op is atomic (old layout stays fully searchable), so
+    ``ok=False`` here is advisory — retry after evictions, or ignore.
+    """
+
+    reports: tuple             # core.maintenance.MaintenanceReport per op
+    epoch: int                 # prefix length after the committed ops
+    queue_s: float             # submit -> completion
+
+    @property
+    def ok(self) -> bool:
+        return all(r.committed for r in self.reports)
 
 
 class ClientSession:
@@ -160,6 +194,16 @@ class ClientSession:
         """Submit an eviction batch; resolves to
         :class:`ServeMutationResult`."""
         return self._engine.submit_remove(self.tenant, ids)
+
+    def maintain(self, ops=None, max_ops: int = 2) -> ServeFuture:
+        """Submit a maintenance pass (split/merge/recluster); resolves to
+        :class:`ServeMaintenanceResult`. With ``ops=None`` the index's
+        drift policy plans from its occupancy counters at dispatch time.
+        The scheduler runs it between batches, so searches in the same
+        cycle observe the pre-maintenance prefix and later searches the
+        whole new layout — never a hybrid."""
+        return self._engine.submit_maintenance(self.tenant, ops=ops,
+                                               max_ops=max_ops)
 
     def __repr__(self) -> str:
         return f"ClientSession(tenant={self.tenant!r})"

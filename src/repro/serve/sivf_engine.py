@@ -67,9 +67,11 @@ from repro.serve.quota import (
 )
 from repro.serve.session import (
     ClientSession,
+    MaintenanceRequest,
     MutationRequest,
     SearchRequest,
     ServeFuture,
+    ServeMaintenanceResult,
     ServeMutationResult,
     ServeSearchResult,
 )
@@ -169,6 +171,7 @@ class ServeEngine:
         self._n_searches = 0
         self._n_tiles = 0
         self._n_mutations = 0
+        self._n_maintenance = 0
         self._coalesce_sizes: list[int] = []
         # telemetry: default to the index's instance so one registry holds
         # the whole request path (tile roots + plan/prefetch/scan stages)
@@ -339,6 +342,41 @@ class ServeEngine:
         """Enqueue an eviction batch through the deferred pipeline."""
         return self._submit_mutation(tenant, "remove", None, ids)
 
+    def submit_maintenance(self, tenant: str, ops=None,
+                           max_ops: int = 2) -> ServeFuture:
+        """Enqueue a maintenance pass (``core/maintenance.py``).
+
+        Operator-plane: exempt from per-tenant mutation quotas (it moves
+        no client rows) but still bounded by the global queue. The
+        scheduler interleaves it epoch-consistently — searches drained in
+        the same cycle dispatch first, against the pre-maintenance
+        prefix; each committed op then bumps the epoch like any other
+        atomic batch, so later searches observe the whole new layout.
+        """
+        if ops is not None:
+            from repro.core.maintenance import MaintOp
+            ops = list(ops)
+            for op in ops:
+                if not isinstance(op, MaintOp):
+                    raise TypeError(f"ops must be MaintOp, got {op!r}")
+        try:
+            with self._cv:
+                st = self._tenant_state(tenant)
+                self._check_open_and_capacity(st, tenant)
+                fut = ServeFuture()
+                self._queue.append(MaintenanceRequest(
+                    tenant=tenant, ops=ops, max_ops=int(max_ops),
+                    future=fut, t_submit=self._clock()))
+                depth = len(self._queue)
+                self._cv.notify()
+        except Backpressure as e:
+            self._note_backpressure(tenant, e)
+            raise
+        if self._tel.enabled:
+            self._m_requests.inc(tenant=tenant, op="maintain")
+            self._m_queue_depth.set(depth)
+        return fut
+
     # -- scheduler -----------------------------------------------------------
 
     def _loop(self) -> None:
@@ -357,8 +395,10 @@ class ServeEngine:
                 self._queue.clear()
             searches = [r for r in batch if isinstance(r, SearchRequest)]
             muts = [r for r in batch if isinstance(r, MutationRequest)]
+            maint = [r for r in batch if isinstance(r, MaintenanceRequest)]
             dispatched = self._dispatch_searches(searches)
             self._dispatch_mutations(muts)
+            self._dispatch_maintenance(maint)
             self._maybe_flush()
             self._resolve_searches(dispatched)
 
@@ -462,6 +502,27 @@ class ServeEngine:
             self._max_mut_rows = max(self._max_mut_rows,
                                      int(r.ids.shape[0]))
             self._mut_inflight.append((r, pending, self._index.epoch))
+
+    def _dispatch_maintenance(self, maint: list) -> None:
+        """Run queued maintenance passes, after this cycle's searches
+        dispatched (they observe the pre-maintenance prefix) and after
+        its mutations (the pass sees their committed device state).
+        ``Index.maintain`` syncs per op — acceptable for a background
+        operator action; client searches already left the queue."""
+        for r in maint:
+            try:
+                reports = self._index.maintain(ops=r.ops,
+                                               max_ops=r.max_ops,
+                                               strict=False)
+            except Exception as e:
+                r.future.set_exception(e)
+                continue
+            self._n_maintenance += 1
+            if self._tel.enabled:
+                self._m_epoch.set(self._index.epoch)
+            r.future.set_result(ServeMaintenanceResult(
+                reports=tuple(reports), epoch=self._index.epoch,
+                queue_s=self._clock() - r.t_submit))
 
     def _maybe_flush(self) -> None:
         """Flush when the deferred queue is deep, the engine is idle, or
@@ -625,6 +686,7 @@ class ServeEngine:
             "coalesce_mean": round(float(np.mean(sizes)), 2) if sizes else 0,
             "coalesce_max": max(sizes, default=0),
             "mutations": self._n_mutations,
+            "maintenance_passes": self._n_maintenance,
             "pending_mutations": self._index.pending_count,
             "inflight_searches": inflight,
             "rejections": rejections,

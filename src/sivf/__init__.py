@@ -18,6 +18,7 @@ from repro.core.api import (  # noqa: F401
     ErrorCode,
     Index,
     IndexProtocol,
+    MaintenanceAborted,
     MutationRejected,
     MutationReport,
     PendingReport,
@@ -36,6 +37,13 @@ from repro.core.filters import (  # noqa: F401
     Range,
     compile_filter,
 )
+from repro.core.maintenance import (  # noqa: F401
+    MaintenanceReport,
+    MaintOp,
+    merge,
+    recluster,
+    split,
+)
 from repro.core.pq import PQConfig, train_pq  # noqa: F401
 from repro.core.quantizer import train_kmeans  # noqa: F401
 from repro.core.state import SIVFConfig, init_state, memory_report  # noqa: F401
@@ -46,6 +54,7 @@ from repro.serve.quota import (  # noqa: F401
 )
 from repro.serve.session import (  # noqa: F401
     ClientSession,
+    ServeMaintenanceResult,
     ServeMutationResult,
     ServeSearchResult,
 )
@@ -56,9 +65,11 @@ from sivf import telemetry  # noqa: F401  (import after repro: avoids cycles)
 __all__ = [
     "And", "Backpressure", "BackpressureKind", "ClientSession",
     "CompiledFilter", "Eq", "ErrorCode", "In", "Index", "IndexProtocol",
+    "MaintOp", "MaintenanceAborted", "MaintenanceReport",
     "MutationRejected", "MutationReport", "PendingReport", "PQConfig",
-    "Range", "SearchResult", "ServeEngine", "ServeMutationResult",
-    "ServeSearchResult", "SIVFConfig", "TenantQuota", "compile_filter",
-    "flatten_live_rows", "init_state", "memory_report", "reshard_state",
-    "search_stacked", "telemetry", "train_kmeans", "train_pq",
+    "Range", "SearchResult", "ServeEngine", "ServeMaintenanceResult",
+    "ServeMutationResult", "ServeSearchResult", "SIVFConfig", "TenantQuota",
+    "compile_filter", "flatten_live_rows", "init_state", "memory_report",
+    "merge", "recluster", "reshard_state", "search_stacked", "split",
+    "telemetry", "train_kmeans", "train_pq",
 ]

@@ -1,10 +1,16 @@
 import os
+import sys
+from pathlib import Path
 
 # This suite is CPU-targeted (Pallas kernels run in interpret mode). On
 # hosts that have libtpu installed but no TPU attached, jax's default
 # platform probe can stall for minutes per process before falling back to
 # CPU — pin the platform unless the caller overrides it explicitly.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Shared test-local modules (tests/parity.py, tests/_hypothesis_fallback.py)
+# import as plain top-level names regardless of rootdir/invocation dir.
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 import numpy as np
 import pytest

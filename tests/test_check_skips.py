@@ -1,0 +1,79 @@
+"""Unit tests for the skip-budget gate (scripts/check_skips.py).
+
+The gate exists because hypothesis-gated property suites silently
+no-op'd in CI for several PRs; these tests pin its three behaviors:
+allowlisted skips pass, unallowlisted skips fail, and stale allowlist
+patterns fail (the budget can only shrink).
+"""
+import importlib.util
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_skips", REPO / "scripts" / "check_skips.py")
+check_skips = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_skips)
+
+
+_REPORT = """<?xml version="1.0" encoding="utf-8"?>
+<testsuites>
+  <testsuite name="pytest" tests="3" skipped="{n_skip}">
+    <testcase classname="tests.test_a" name="test_runs"/>
+    {cases}
+  </testsuite>
+</testsuites>
+"""
+
+_SKIP_CASE = ('<testcase classname="tests.test_{m}" name="test_{t}">'
+              '<skipped message="why"/></testcase>')
+
+
+def _write(tmp_path, skips, patterns):
+    cases = "\n    ".join(_SKIP_CASE.format(m=m, t=t) for m, t in skips)
+    report = tmp_path / "report.xml"
+    report.write_text(_REPORT.format(n_skip=len(skips), cases=cases))
+    allow = tmp_path / "allow.txt"
+    allow.write_text("# comment line\n\n" + "\n".join(patterns) + "\n")
+    return report, allow
+
+
+def test_skipped_tests_parses_junitxml(tmp_path):
+    report, _ = _write(tmp_path, [("b", "x"), ("c", "y")], [])
+    assert check_skips.skipped_tests(report) == [
+        "tests.test_b::test_x", "tests.test_c::test_y"]
+
+
+def test_allowlisted_skip_passes(tmp_path):
+    report, allow = _write(tmp_path, [("gpu", "needs_tpu")],
+                           ["tests.test_gpu::*"])
+    assert check_skips.check(report, allow) == 0
+
+
+def test_unallowlisted_skip_fails(tmp_path):
+    report, allow = _write(tmp_path, [("gpu", "needs_tpu"),
+                                      ("rogue", "surprise")],
+                           ["tests.test_gpu::*"])
+    assert check_skips.check(report, allow) == 1
+
+
+def test_stale_allowlist_pattern_fails(tmp_path):
+    """A pattern matching nothing fails too: the budget stays tight."""
+    report, allow = _write(tmp_path, [], ["tests.test_gone::*"])
+    assert check_skips.check(report, allow) == 1
+
+
+def test_no_skips_empty_allowlist_passes(tmp_path):
+    report, allow = _write(tmp_path, [], [])
+    assert check_skips.check(report, allow) == 0
+
+
+def test_main_missing_report_fails(tmp_path):
+    assert check_skips.main([str(tmp_path / "nope.xml")]) == 1
+
+
+def test_repo_allowlist_is_loadable():
+    """The committed allowlist parses (comments/blanks only today —
+    every property suite must actually execute)."""
+    pats = check_skips.load_allowlist(check_skips.ALLOWLIST)
+    assert pats == []

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import parity
 import sivf
 from repro import core
 from repro.core import filters as flt
@@ -122,50 +123,25 @@ pallas = pytest.mark.pallas
 
 
 def make(rng, n_slabs=24, capacity=32, max_chain=8, pq=None):
-    cfg = core.SIVFConfig(dim=D, n_lists=NL, n_slabs=n_slabs,
-                          capacity=capacity, n_max=2048, max_chain=max_chain,
-                          attributes=ATTRS, pq=pq)
-    cents = rng.normal(size=(NL, D)).astype(np.float32)
-    cb = None
-    if pq is not None:
-        from repro.core import pq as pq_mod
-        cb = pq_mod.train_pq(jax.random.key(0),
-                             jnp.asarray(rng.normal(size=(512, D)),
-                                         jnp.float32),
-                             pq.m, pq.nbits, iters=8)
-    return cfg, core.init_state(cfg, jnp.asarray(cents), cb)
+    """Build/load scaffolding lives in tests/parity.py."""
+    return parity.make_state(rng, dim=D, n_lists=NL, n_slabs=n_slabs,
+                             capacity=capacity, max_chain=max_chain,
+                             attributes=ATTRS, pq=pq)
 
 
 def load(cfg, state, rng, n, n_tenants=5):
-    vecs = rng.normal(size=(n, D)).astype(np.float32)
-    attrs = np.stack([rng.integers(0, n_tenants, n),
-                      rng.integers(0, 100, n)], axis=1).astype(np.int32)
-    state = core.insert(cfg, state, jnp.asarray(vecs),
-                        jnp.asarray(np.arange(n), np.int32),
-                        attrs=jnp.asarray(attrs))
-    return state, vecs, attrs
+    return parity.load_rows(cfg, state, rng, n, n_tenants=n_tenants)
 
 
 def assert_filtered_parity(cfg, state, rng, pred, k, nprobe, q=5,
                            use_tables=True, exact_dist=False):
     """impl="xla" vs "pallas_interpret" with the same compiled filter:
     labels must match exactly; distances bit-exact on the PQ/ADC path,
-    allclose on the raw path (fp accumulation order differs)."""
-    cf = flt.compile_filter(pred, cfg.attributes)
-    fconsts = jnp.asarray(cf.consts, jnp.int32)
-    qs = jnp.asarray(rng.normal(size=(q, D)).astype(np.float32))
-    dx, lx = core.search(cfg, state, qs, k, nprobe, use_tables=use_tables,
-                         impl="xla", fstruct=cf.structure, fconsts=fconsts)
-    dp, lp = core.search(cfg, state, qs, k, nprobe, use_tables=use_tables,
-                         impl="pallas_interpret", fstruct=cf.structure,
-                         fconsts=fconsts)
-    if exact_dist:
-        assert (np.asarray(dp) == np.asarray(dx)).all()
-    else:
-        np.testing.assert_allclose(np.asarray(dp), np.asarray(dx),
-                                   rtol=1e-5, atol=1e-5)
-    assert (np.asarray(lp) == np.asarray(lx)).all()
-    return np.asarray(dx), np.asarray(lx)
+    allclose on the raw path (fp accumulation order differs). Thin alias
+    over the shared helper, keeping this suite's raw-path default."""
+    return parity.assert_search_parity(cfg, state, rng, k, nprobe, q=q,
+                                       use_tables=use_tables, pred=pred,
+                                       exact_dist=exact_dist)
 
 
 @pallas

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import parity
 from repro import core
 from repro.kernels.sivf_scan import ops as scan_ops
 
@@ -18,17 +19,16 @@ D, NL = 16, 4
 
 
 def make(rng, capacity=32, metric="l2", n_slabs=24, max_chain=8):
-    cfg = core.SIVFConfig(dim=D, n_lists=NL, n_slabs=n_slabs,
-                          capacity=capacity, n_max=2048, metric=metric,
-                          max_chain=max_chain)
-    cents = rng.normal(size=(NL, D)).astype(np.float32)
-    return cfg, core.init_state(cfg, jnp.asarray(cents))
+    """Build/churn scaffolding lives in tests/parity.py (shared by the
+    pq / filters / tiered suites)."""
+    return parity.make_state(rng, dim=D, n_lists=NL, n_slabs=n_slabs,
+                             capacity=capacity, metric=metric,
+                             max_chain=max_chain)
 
 
-def load(cfg, state, rng, n):
-    vecs = rng.normal(size=(n, D)).astype(np.float32)
-    return core.insert(cfg, state, jnp.asarray(vecs),
-                       jnp.asarray(np.arange(n), np.int32))
+def load(cfg, state, rng, n, lists=None):
+    state, _, _ = parity.load_rows(cfg, state, rng, n, lists=lists)
+    return state
 
 
 def assert_fused_matches_ref(cfg, state, rng, k, nprobe, q=5, block_q=8,
@@ -71,10 +71,7 @@ def test_fused_empty_chains(rng):
     """Probing empty lists yields -1 slab rows -> +inf / -1 results."""
     cfg, state = make(rng)
     # route everything into a single list so the other probed chains are empty
-    vecs = rng.normal(size=(40, D)).astype(np.float32)
-    state = core.insert(cfg, state, jnp.asarray(vecs),
-                        jnp.asarray(np.arange(40), np.int32),
-                        jnp.zeros((40,), jnp.int32))
+    state = load(cfg, state, rng, 40, lists=np.zeros((40,), np.int32))
     assert_fused_matches_ref(cfg, state, rng, k=5, nprobe=NL)
 
 
@@ -115,20 +112,9 @@ def test_fused_pointer_walk_table(rng):
 def test_fused_randomized_churn_workload(rng):
     """Acceptance: randomized insert/delete workloads, fused == reference."""
     cfg, state = make(rng, n_slabs=48, max_chain=12)
-    nxt = 0
-    present: set[int] = set()
+    rows: dict = {}
     for step in range(6):
-        n_ins = int(rng.integers(10, 60))
-        ids = (np.arange(nxt, nxt + n_ins) % 512).astype(np.int32)
-        nxt += n_ins
-        vecs = rng.normal(size=(n_ins, D)).astype(np.float32)
-        state = core.insert(cfg, state, jnp.asarray(vecs), jnp.asarray(ids))
-        present.update(ids.tolist())
-        if len(present) > 20:
-            dels = rng.choice(sorted(present), size=10, replace=False)
-            state = core.delete(cfg, state, jnp.asarray(dels, np.int32))
-            present.difference_update(dels.tolist())
-        assert int(state.error) == 0
+        state, rows = parity.churn(cfg, state, rng, steps=1, rows=rows)
         assert_fused_matches_ref(cfg, state, rng, k=8,
                                  nprobe=int(rng.integers(1, NL + 1)),
                                  q=int(rng.integers(1, 7)))
@@ -140,12 +126,7 @@ def test_search_impl_dispatch_parity(rng):
     state = load(cfg, state, rng, 180)
     state = core.delete(cfg, state,
                         jnp.asarray(np.arange(0, 180, 4), np.int32))
-    qs = jnp.asarray(rng.normal(size=(6, D)).astype(np.float32))
-    dx, lx = core.search(cfg, state, qs, 5, 3, impl="xla")
-    dp, lp = core.search(cfg, state, qs, 5, 3, impl="pallas_interpret")
-    np.testing.assert_allclose(np.asarray(dp), np.asarray(dx), rtol=1e-5,
-                               atol=1e-5)
-    assert (np.asarray(lp) == np.asarray(lx)).all()
+    parity.assert_search_parity(cfg, state, rng, k=5, nprobe=3, q=6)
 
 
 def test_search_impl_rejects_unknown(rng):

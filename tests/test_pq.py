@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import parity
 import sivf
 from repro import core
 from repro.core import pq
@@ -36,21 +37,19 @@ def clustered(rng, n, dim=D, n_clusters=8, spread=0.25):
 
 def make(rng, m=4, nbits=4, capacity=32, metric="l2", n_slabs=24,
          max_chain=8, store_raw=False, n_train=512):
-    cfg = core.SIVFConfig(
-        dim=D, n_lists=NL, n_slabs=n_slabs, capacity=capacity, n_max=2048,
+    """Build scaffolding lives in tests/parity.py; only the clustered
+    training distribution is suite-specific."""
+    return parity.make_state(
+        rng, dim=D, n_lists=NL, n_slabs=n_slabs, capacity=capacity,
         metric=metric, max_chain=max_chain,
-        pq=core.PQConfig(m=m, nbits=nbits, store_raw=store_raw))
-    cents = rng.normal(size=(NL, D)).astype(np.float32)
-    cb = pq.train_pq(jax.random.key(0),
-                     jnp.asarray(clustered(rng, n_train)), m, nbits, iters=8)
-    return cfg, core.init_state(cfg, jnp.asarray(cents), cb)
+        pq=core.PQConfig(m=m, nbits=nbits, store_raw=store_raw),
+        train=clustered(rng, n_train))
 
 
 def load(cfg, state, rng, n, start=0):
-    vecs = clustered(rng, n)
-    return core.insert(cfg, state, jnp.asarray(vecs),
-                       jnp.asarray(np.arange(start, start + n), np.int32)), \
-        vecs
+    state, vecs, _ = parity.load_rows(cfg, state, rng, n, start=start,
+                                      vecs=clustered(rng, n))
+    return state, vecs
 
 
 # ---------------------------------------------------------------------------
@@ -249,20 +248,9 @@ def test_pq_fused_pointer_walk_table(rng):
 @pq_kernel
 def test_pq_fused_randomized_churn(rng):
     cfg, state = make(rng, n_slabs=48, max_chain=12)
-    nxt = 0
-    present: set[int] = set()
+    rows: dict = {}
     for step in range(5):
-        n_ins = int(rng.integers(10, 60))
-        ids = (np.arange(nxt, nxt + n_ins) % 512).astype(np.int32)
-        nxt += n_ins
-        state = core.insert(cfg, state, jnp.asarray(clustered(rng, n_ins)),
-                            jnp.asarray(ids))
-        present.update(ids.tolist())
-        if len(present) > 20:
-            dels = rng.choice(sorted(present), size=10, replace=False)
-            state = core.delete(cfg, state, jnp.asarray(dels, np.int32))
-            present.difference_update(dels.tolist())
-        assert int(state.error) == 0
+        state, rows = parity.churn(cfg, state, rng, steps=1, rows=rows)
         assert_pq_fused_matches_ref(cfg, state, rng, k=8,
                                     nprobe=int(rng.integers(1, NL + 1)),
                                     q=int(rng.integers(1, 7)))
@@ -270,16 +258,14 @@ def test_pq_fused_randomized_churn(rng):
 
 @pq_kernel
 def test_pq_search_dispatch_parity(rng):
-    """core.search impl="pallas_interpret" == impl="xla", bit-for-bit."""
+    """core.search impl="pallas_interpret" == impl="xla", bit-for-bit
+    (exact_dist comes from cfg.pq in the shared helper)."""
     cfg, state = make(rng)
     state, _ = load(cfg, state, rng, 180)
     state = core.delete(cfg, state,
                         jnp.asarray(np.arange(0, 180, 4), np.int32))
-    qs = jnp.asarray(clustered(rng, 6))
-    dx, lx = core.search(cfg, state, qs, 5, 3, impl="xla")
-    dp, lp = core.search(cfg, state, qs, 5, 3, impl="pallas_interpret")
-    assert (np.asarray(dp) == np.asarray(dx)).all()
-    assert (np.asarray(lp) == np.asarray(lx)).all()
+    parity.assert_search_parity(cfg, state, rng, k=5, nprobe=3,
+                                queries=clustered(rng, 6))
 
 
 # ---------------------------------------------------------------------------

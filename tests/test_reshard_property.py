@@ -11,8 +11,10 @@ import jax
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # dev extra; tier-1 stays green without it
-from hypothesis import given, settings, strategies as st
+try:                                   # dev extra, pinned in CI; the local
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # fallback keeps tier-1 executing
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import sivf
 from repro import core

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import parity
 from repro.core import filters as flt
 from repro.core.api import Index
 from repro.core.pq import PQConfig
@@ -33,10 +34,7 @@ def make_cfg(device_slabs=None, **kw):
     return SIVFConfig(device_slabs=device_slabs, **base)
 
 
-def _assert_same(res_t, res_f):
-    assert np.array_equal(np.asarray(res_t.labels), np.asarray(res_f.labels))
-    assert np.array_equal(np.asarray(res_t.distances),
-                          np.asarray(res_f.distances))
+_assert_same = parity.assert_results_same
 
 
 def _pair(rng, device_slabs, n=600, backend="single", **kw):
@@ -50,21 +48,13 @@ def _pair(rng, device_slabs, n=600, backend="single", **kw):
 
 
 def _churn(rng, it, if_, vecs, ids, attrs=None):
-    """The shared mutation schedule: bulk add, overwrite, delete, refill
-    (the refill recycles reclaimed slabs -> dirty-frame coherence)."""
-    for idx in (it, if_):
-        idx.add(vecs, ids, attrs=attrs)
-    over = rng.normal(size=(100, D)).astype(np.float32)
-    oa = None if attrs is None else {"tenant": np.arange(100) % 3}
-    for idx in (it, if_):
-        idx.add(over, ids[:100], attrs=oa)
-        idx.remove(ids[150:300])
-    refill = rng.normal(size=(120, D)).astype(np.float32)
-    rid = np.arange(2000, 2120, dtype=np.int32)
-    ra = None if attrs is None else {"tenant": np.arange(120) % 3}
-    for idx in (it, if_):
-        idx.add(refill, rid, attrs=ra)
-    return it, if_
+    """The shared twin mutation schedule (tests/parity.py): bulk add,
+    overwrite, delete, refill — the refill recycles reclaimed slabs, so
+    dirty-frame coherence on tiered pools is exercised."""
+    fn = None if attrs is None else \
+        (lambda n: {"tenant": np.arange(n) % 3})
+    return parity.twin_churn(rng, (it, if_), vecs, ids, attrs=attrs,
+                             attrs_fn=fn)
 
 
 @pytest.mark.parametrize("device_slabs", [28, 40, 64])
